@@ -1,0 +1,28 @@
+"""Roofline report rows (Fig. 10 analogue): per (arch x shape) cell, the
+three roofline terms from the dry-run artifacts. Rows appear only for cells
+whose dry-run artifact exists (run ``python -m repro.launch.dryrun --all``
+first; benchmarks/run.py tolerates absence)."""
+
+from __future__ import annotations
+
+from repro.roofline import analysis
+
+
+def run():
+    rows = []
+    for r in analysis.full_table():
+        if not r["ok"]:
+            rows.append((f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                         f"FAILED:{str(r.get('error'))[:80]}"))
+            continue
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}",
+            r["step_s_lower_bound"] * 1e6,
+            f"bound={r['bound']};compute_s={r['compute_s']:.3e};"
+            f"memory_s={r['memory_s']:.3e};"
+            f"collective_s={r['collective_s']:.3e};"
+            f"useful_flops={r['useful_flops_ratio']:.2f};"
+            f"roofline_frac={r['roofline_fraction']:.3f};"
+            f"hbm_gib={r['mem_gib_per_device']:.1f};"
+            f"fits={r['fits_hbm']}"))
+    return rows

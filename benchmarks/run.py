@@ -1,0 +1,47 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark runner.
+
+  Table II matmul + Fig. 7 size sweep  -> bench_matmul
+  Fig. 7 sparse accelerator            -> bench_sparsity
+  Fig. 7 best-offset prefetcher        -> bench_prefetch
+  Table II end-to-end 1.7M ReLU-Llama  -> bench_e2e
+  Fig. 10 / roofline terms             -> roofline_report (needs dry-run
+                                          artifacts; rows skipped if absent)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only <name>]
+"""
+
+import argparse
+import sys
+import traceback
+
+SUITES = ["bench_matmul", "bench_sparsity", "bench_prefetch", "bench_e2e",
+          "roofline_report"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in SUITES:
+        if args.only and args.only != mod_name:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}",
+                             fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception:  # noqa: BLE001 — report and continue
+            failed.append(mod_name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

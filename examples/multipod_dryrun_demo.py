@@ -1,0 +1,39 @@
+"""Drive the multi-pod dry-run for one cell and print its roofline terms.
+
+(The full sweep is ``python -m repro.launch.dryrun --all --mesh both``.)
+
+    PYTHONPATH=src python examples/multipod_dryrun_demo.py \
+        [--arch llama3.2-1b] [--shape decode_32k]
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--shape", default="decode_32k")
+    args = ap.parse_args()
+
+    # the dry-run must own XLA_FLAGS before jax initializes -> subprocess
+    for mesh in ("pod", "multipod"):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape, "--mesh", mesh]
+        print("$", " ".join(cmd))
+        r = subprocess.run(cmd, capture_output=True, text=True)
+        print(r.stdout[-800:])
+        if r.returncode != 0:
+            print(r.stderr[-800:])
+            raise SystemExit(1)
+
+    from repro.roofline import analysis
+    row = analysis.cell_roofline(args.arch, args.shape)
+    print(json.dumps(row, indent=1))
+    print("hint:", analysis.improvement_hint(row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Serving-system demo: continuous batching with slot reuse, per-step
+traffic stats, heterogeneous dispatch report, int8 KV quantization.
+
+    PYTHONPATH=src python examples/sparse_serving.py
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ServeConfig
+from repro.core import heterogeneous
+from repro.models import Model
+from repro.serve import kv_cache
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    cfg = get_config("nectar-relu-llama-1.7m")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    print("heterogeneous placement of decode matmul sites (paper C4):")
+    rep = heterogeneous.decode_regime_report(cfg.d_model, cfg.d_ff,
+                                             cfg.vocab, batch=4)
+    for site, regime in rep.items():
+        print(f"    {site:18s} -> {regime}")
+
+    eng = Engine(cfg, params, ServeConfig(max_batch=2, max_seq=64))
+    rng = np.random.default_rng(1)
+    # 6 requests with varied lengths through 2 slots: slots recycle
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=int(rng.integers(3, 10)),
+                                        dtype=np.int32),
+                    max_new=int(rng.integers(4, 12)))
+            for i in range(6)]
+    done = eng.run(reqs, max_steps=200)
+    print(f"served {len(done)} requests over "
+          f"{eng.alloc.n_slots} slots in {len(eng.stats)} steps")
+    for rid, r in sorted(done.items()):
+        print(f"    req {rid}: prompt {len(r.prompt)} toks -> "
+              f"{len(r.tokens_out)} new toks")
+
+    s = eng.stats[-1]
+    print(f"last-step traffic: weight={s.weight_bytes:,.0f}B "
+          f"kv={s.kv_bytes:,.0f}B sparse_saved={s.sparse_savings_bytes:,.0f}B")
+
+    # int8 KV quantization (kv_quant option)
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 4, 32))
+    v = jax.random.normal(jax.random.PRNGKey(3), (2, 64, 4, 32))
+    (kq, ks), _ = kv_cache.quantize_kv(k, v)
+    kd = kv_cache.dequantize_kv(kq, ks)
+    rel = float(jnp.linalg.norm(kd - k) / jnp.linalg.norm(k))
+    print(f"int8 KV cache: 2x smaller, roundtrip rel err {rel:.4f}")
+
+
+if __name__ == "__main__":
+    main()

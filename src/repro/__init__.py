@@ -1,0 +1,19 @@
+"""NeCTAr-JAX: heterogeneous sparse/dense LM inference framework.
+
+JAX reproduction + TPU-native adaptation of "NeCTAr: A Heterogeneous RISC-V
+SoC for Language Model Inference in Intel 16" (Schmulbach et al., 2025).
+
+Layers (see DESIGN.md):
+  core/     the paper's contribution: int8 NMCE semantics, activation
+            sparsity, best-offset prefetch scheduling, heterogeneous dispatch
+  models/   composable decoder generator covering the 10 assigned archs
+  kernels/  Pallas TPU kernels (validated with interpret=True on CPU)
+  dist/     sharding rules, collectives, gradient compression, elasticity
+  train/    optimizer, loop, checkpointing, data, fault tolerance
+  serve/    KV cache + inference engine with the sparse decode path
+  configs/  assigned architecture configs + the paper's 1.7M ReLU-Llama
+  launch/   mesh / dryrun / train / serve entry points
+  roofline/ v5e hardware model + HLO cost & collective analysis
+"""
+
+__version__ = "1.0.0"

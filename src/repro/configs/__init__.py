@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, TrainConfig, ServeConfig  # noqa: F401
+from repro.configs.registry import get_config, list_configs, REGISTRY  # noqa: F401

@@ -1,0 +1,196 @@
+"""Config system — the 'Chipyard parameter system' of this framework.
+
+One frozen dataclass describes any member of the supported model family
+(dense / GQA / MQA transformers, MoE, VLM backbone, hybrid SSM, audio
+decoder, xLSTM). Architectures are generated from configs exactly the way
+NeCTAr generates SoC variants from Chipyard parameters (paper §III).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | vlm | hybrid | audio | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    d_head: int = 0                 # 0 -> d_model // n_heads
+    act: str = "silu"
+    glu: bool = True
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    rope_theta: float = 500000.0
+    mrope: bool = False             # qwen2-vl M-RoPE (3 position channels)
+    pos_emb: str = "rope"           # rope | sin | none
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+
+    # --- hybrid / ssm ---
+    ssm_state: int = 0
+    ssm_heads: int = 0              # 0 -> d_model*expand // 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("mamba2",)*5 + ("shared_attn",)
+    slstm_every: int = 0            # xlstm: every k-th block is sLSTM
+
+    # --- audio / vlm frontends (stubs per assignment) ---
+    n_codebooks: int = 0            # musicgen: EnCodec streams
+    frontend: str = "none"          # none | vision_stub | audio_stub
+
+    # --- the paper's technique ---
+    relu_sparse: bool = False       # ReLU-fied FFN + sparse decode path
+    sparse_k_frac: float = 0.125    # active fraction for top-k gather
+    int8_weights: bool = False      # NMCE int8 weight path at decode
+    predictor_rank: int = 0         # 0 = oracle top-k; >0 = Deja-Vu predictor
+
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # lower-triangle-only attention schedule (~2x fewer causal FLOPs);
+    # the perf-loop variant — off by default for the paper-faithful baseline
+    block_causal: bool = False
+    # unroll every lax.scan (layers, KV blocks, SSD chunks, loss chunks).
+    # Used by the dry-run cost probes: XLA's HloCostAnalysis counts a while
+    # body ONCE regardless of trip count, so exact FLOPs/collective-bytes
+    # need loop-free HLO (launch.dryrun lowers small unrolled probes).
+    unroll: bool = False
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0, \
+            f"{self.name}: n_heads must be a multiple of n_kv_heads"
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def is_recurrent(self) -> bool:
+        """True if decode state is O(1) in context length (SSM/xLSTM)."""
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode: SSM and hybrid archs run long_500k."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + norms)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        n_q = self.n_heads * self.d_head
+        n_kv = self.n_kv_heads * self.d_head
+        emb = v * d * (1 + self.n_codebooks if self.n_codebooks else 1)
+        head = 0 if self.tie_embeddings else v * d * (self.n_codebooks or 1)
+        total = emb + head + d  # final norm
+        for blk in self.layer_kinds():
+            if blk in ("attn", "shared_attn"):
+                total += n_q * d + 2 * n_kv * d + n_q * d + d  # qkvo + norm
+                if blk == "attn":
+                    total += self._ffn_params() + d
+            elif blk == "mamba2":
+                di = self.ssm_expand * d
+                heads = self.ssm_heads or di // 64
+                total += d * (2 * di + 2 * self.ssm_state + heads)  # in_proj
+                total += di * self.ssm_conv + di * d + 2 * heads + di + d
+            elif blk in ("mlstm", "slstm"):
+                di = 2 * d
+                total += d * 2 * di + di * d + 4 * di * 2 + d  # projs + gates
+            elif blk == "moe":
+                total += n_q * d + 2 * n_kv * d + n_q * d + d
+                total += d * self.n_experts  # router
+                e_f = (2 if self.glu else 1) * d * f + f * d
+                total += self.n_experts * e_f + self.n_shared_experts * e_f + d
+        # shared_attn params are counted once (they are shared)
+        n_shared = sum(1 for b in self.layer_kinds() if b == "shared_attn")
+        if n_shared > 1:
+            total -= (n_shared - 1) * (n_q * d + 2 * n_kv * d + n_q * d + d)
+        return int(total)
+
+    def _ffn_params(self) -> int:
+        return (2 if self.glu else 1) * self.d_model * self.d_ff \
+            + self.d_ff * self.d_model
+
+    def pattern_unit(self) -> Tuple[str, ...]:
+        """The repeating block pattern; the stack scans over
+        n_layers/len(unit) copies of this unit."""
+        if self.block_pattern:
+            return self.block_pattern
+        if self.family == "moe":
+            return ("moe",)
+        if self.family == "ssm":
+            if self.slstm_every:
+                return ("mlstm",) * (self.slstm_every - 1) + ("slstm",)
+            return ("mlstm",)
+        return ("attn",)
+
+    @property
+    def n_units(self) -> int:
+        unit = self.pattern_unit()
+        assert self.n_layers % len(unit) == 0, \
+            f"{self.name}: n_layers {self.n_layers} % unit {len(unit)} != 0"
+        return self.n_layers // len(unit)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kind, resolved from the pattern/family."""
+        pat = self.pattern_unit()
+        return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    microbatch: int = 0             # 0 = no accumulation
+    adam_8bit: bool = False         # int8 moments (blockwise scales)
+    grad_compression: str = "none"  # none | int8_ef (cross-pod)
+    checkpoint_every: int = 200
+    keep_checkpoints: int = 3
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 2048
+    sparse_decode: bool = True      # use the NeCTAr sparse FFN path
+    int8_decode: bool = True        # NMCE int8 weight streaming
+    kv_quant: bool = False          # int8 KV cache
+
+
+# --- assigned input shapes (seq_len, global_batch, kind) -------------------
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> Tuple[str, ...]:
+    """long_500k only for sub-quadratic archs (assignment rule)."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        names.append("long_500k")
+    return tuple(names)

@@ -1,0 +1,39 @@
+"""Config registry: --arch <id> resolves here."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+_ARCH_MODULES = [
+    "llama3_2_1b",
+    "granite_34b",
+    "qwen3_4b",
+    "qwen2_5_3b",
+    "llama4_maverick_400b_a17b",
+    "moonshot_v1_16b_a3b",
+    "qwen2_vl_72b",
+    "zamba2_2_7b",
+    "musicgen_medium",
+    "xlstm_125m",
+    "nectar_relu_llama_1p7m",
+]
+
+REGISTRY: Dict[str, ModelConfig] = {}
+for _m in _ARCH_MODULES:
+    _mod = importlib.import_module(f"repro.configs.{_m}")
+    REGISTRY[_mod.CONFIG.name] = _mod.CONFIG
+    if hasattr(_mod, "SMOKE"):
+        REGISTRY[_mod.SMOKE.name] = _mod.SMOKE
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def list_configs():
+    return sorted(REGISTRY)

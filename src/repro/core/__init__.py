@@ -1,0 +1,4 @@
+# The paper's primary contribution: NMCE int8 semantics, activation
+# sparsity (ReLU-Llama), best-offset prefetch scheduling, heterogeneous
+# kernel dispatch. See DESIGN.md §2-3.
+from repro.core import heterogeneous, nmce, prefetch, quant, sparsity  # noqa: F401

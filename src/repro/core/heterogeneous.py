@@ -1,0 +1,78 @@
+"""Heterogeneous kernel dispatch (paper C4).
+
+NeCTAr places dense engines near memory and sparse engines near cores, and
+routes each kernel class to the engine whose placement matches its
+bottleneck. The TPU-native analogue: classify every matmul site by arithmetic
+intensity and route it to the matching implementation:
+
+  * ``gemv_stream``  — memory-bound weight-streaming (decode): the NMCE
+                       Pallas kernel (int8 weights, activation-stationary);
+  * ``gemm_mxu``     — compute-bound (train/prefill): plain XLA dot on the
+                       MXU (bf16), nothing beats it there;
+  * ``sparse_gather``— ReLU-sparse FFN contraction: the gather kernel.
+
+The classifier uses the v5e ridge point (peak_flops / hbm_bw ≈ 240
+flops/byte for bf16) — sites below the ridge are memory-bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+from repro.roofline import hw
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulSite:
+    """One matmul in the model: (batch*seq rows) x (K) @ (K, N)."""
+    rows: int
+    k: int
+    n: int
+    weight_bits: int = 16
+    act_bits: int = 16
+    sparsity: float = 0.0     # fraction of K (or N) rows skippable
+
+
+def arithmetic_intensity(site: MatmulSite) -> float:
+    """FLOPs per HBM byte, counting streamed weights + acts + outputs."""
+    flops = 2.0 * site.rows * site.k * site.n
+    wbytes = site.k * site.n * site.weight_bits / 8.0
+    abytes = site.rows * (site.k + site.n) * site.act_bits / 8.0
+    return flops / (wbytes + abytes)
+
+
+def classify(site: MatmulSite, chip: hw.Chip = hw.V5E) -> str:
+    ridge = chip.peak_flops / chip.hbm_bw  # flops per byte at the knee
+    if site.sparsity >= 0.5 and site.rows <= 256:
+        return "sparse_gather"
+    if arithmetic_intensity(site) < ridge:
+        return "gemv_stream"
+    return "gemm_mxu"
+
+
+@dataclasses.dataclass
+class Dispatcher:
+    """Binds regimes to callables; the model layers call through this so the
+    heterogeneous policy is swappable (and mockable in tests)."""
+
+    impls: Dict[str, Callable]
+    override: Optional[str] = None
+
+    def __call__(self, site: MatmulSite, *args, **kwargs):
+        regime = self.override or classify(site)
+        return self.impls[regime](*args, **kwargs), regime
+
+
+def decode_regime_report(d_model: int, d_ff: int, vocab: int,
+                         batch: int, chip: hw.Chip = hw.V5E) -> Dict[str, str]:
+    """Which engine each decode-step matmul site lands on — used in docs/
+    benchmarks to show the heterogeneous placement decision table."""
+    sites = {
+        "attn_qkvo": MatmulSite(rows=batch, k=d_model, n=d_model),
+        "ffn_up": MatmulSite(rows=batch, k=d_model, n=d_ff),
+        "ffn_down_sparse": MatmulSite(rows=batch, k=d_ff, n=d_model,
+                                      sparsity=0.9),
+        "lm_head": MatmulSite(rows=batch, k=d_model, n=vocab),
+    }
+    return {name: classify(s, chip) for name, s in sites.items()}

@@ -1,0 +1,118 @@
+"""NMCE execution model — bank-partitioned weight-stationary GEMV.
+
+Paper Fig. 4/5: four near-memory compute engines, one per L2 bank. The CPU
+programs each engine with (v1Reg: 64B stationary int8 vector, v2addr, stride,
+count<=32); the engine streams ``count`` rows past v1Reg, producing saturated
+int16 dot products; the CPU accumulates partials across engines/chunks.
+
+TPU mapping (DESIGN.md C1): VMEM tile = bank SRAM; the Pallas grid iterates
+"banks" (output-row blocks); the stationary activation tile is the v1Reg; the
+weight stream is the HBM->VMEM block pipeline; cross-chip partial accumulation
+(tensor parallel) is Fig. 5's "CPU accumulates across engines" writ large.
+
+This module is the *semantic* model (pure jnp, chunk-exact): it plans the
+bank partition and emulates the per-command arithmetic. The performance
+implementation is ``repro.kernels.nmce_matvec``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class NMCEConfig:
+    n_banks: int = 4
+    vreg_bytes: int = quant.NMCE_VREG_BYTES   # 64B int8 stationary operand
+    max_count: int = quant.NMCE_MAX_COUNT     # rows per command
+    saturating: bool = True                   # int16 saturation per command
+
+
+@dataclasses.dataclass(frozen=True)
+class BankPlan:
+    """Row range each bank owns, plus the per-command chunking (Fig. 5)."""
+    row_start: int
+    row_count: int
+    commands: int          # ceil(row_count / max_count)
+
+
+def plan_matvec(n_rows: int, cfg: NMCEConfig) -> List[BankPlan]:
+    """Partition ``n_rows`` output rows across banks as evenly as possible —
+    the CPU-side scheduling loop from Fig. 5 (both the 256x4 and 128x4
+    layouts fall out of this)."""
+    base, rem = divmod(n_rows, cfg.n_banks)
+    plans, start = [], 0
+    for b in range(cfg.n_banks):
+        cnt = base + (1 if b < rem else 0)
+        plans.append(BankPlan(row_start=start, row_count=cnt,
+                              commands=math.ceil(cnt / cfg.max_count) if cnt else 0))
+        start += cnt
+    return plans
+
+
+def nmce_matvec(x_q: quant.QuantizedTensor, w_q: quant.QuantizedTensor,
+                cfg: NMCEConfig = NMCEConfig(), out_dtype=jnp.float32):
+    """Emulate the full NMCE matvec: y = W @ x with W int8[N, K], x int8[K].
+
+    Chunks K into 64B v1Reg loads; each (bank, command, chunk) performs a
+    saturating int16 dot; the CPU accumulates chunk partials in int32 and
+    dequantizes. Matches hardware semantics chunk-for-chunk; used as the
+    fidelity oracle.
+    """
+    w, x = w_q.q, x_q.q
+    n, k = w.shape
+    pad_k = (-k) % cfg.vreg_bytes
+    if pad_k:
+        w = jnp.pad(w, ((0, 0), (0, pad_k)))
+        x = jnp.pad(x, ((0, pad_k),))
+    kc = w.shape[1] // cfg.vreg_bytes
+    wv = w.reshape(n, kc, cfg.vreg_bytes).astype(jnp.int32)
+    xv = x.reshape(kc, cfg.vreg_bytes).astype(jnp.int32)
+    per_chunk = jnp.einsum("nkv,kv->nk", wv, xv)
+    if cfg.saturating:
+        per_chunk = jnp.clip(per_chunk, quant.INT16_MIN, quant.INT16_MAX)
+    acc = jnp.sum(per_chunk, axis=-1, dtype=jnp.int32)
+
+    scale_w = w_q.scale
+    if w_q.axis is not None:
+        if w_q.axis != 0:
+            raise ValueError("matvec weights W[N,K] must be quantized "
+                             "per-output-row (axis=0) or per-tensor")
+        scale_w = scale_w.reshape(-1)  # per-row (output channel) of W[N,K]
+    y = acc.astype(jnp.float32) * scale_w * x_q.scale
+    return y.astype(out_dtype)
+
+
+def nmce_traffic_bytes(n: int, k: int, cfg: NMCEConfig = NMCEConfig()) -> dict:
+    """Off-chip traffic model for one matvec (the paper's bottleneck):
+    weights stream once (n*k int8 bytes), activations are loaded once per
+    bank (k bytes each — v1Reg reloads), results written back (2B int16)."""
+    return {
+        "weight_bytes": n * k,
+        "activation_bytes": k * cfg.n_banks,
+        "result_bytes": 2 * n,
+        "total": n * k + k * cfg.n_banks + 2 * n,
+    }
+
+
+def speedup_model(n: int, k: int, *, sw_gops: float = 0.0566,
+                  mem_bw_gbps: float = 3.2) -> Tuple[float, float]:
+    """Roofline model of Table II: software multi-core does 56.6 MOPs
+    (0.0566 GOPs); the NMCE path is limited by the off-chip link streaming
+    int8 weights (paper: 'limited by off-chip memory bandwidth').
+
+    Returns (nmce_gops, speedup_vs_multicore). With the chip's measured
+    numbers this reproduces the ~100x of Fig. 7 / Table II.
+    """
+    ops = 2.0 * n * k
+    bytes_ = float(nmce_traffic_bytes(n, k)["total"])
+    t_mem = bytes_ / (mem_bw_gbps * 1e9)
+    nmce_gops = ops / t_mem / 1e9
+    return nmce_gops, nmce_gops / sw_gops

@@ -1,0 +1,198 @@
+"""Int8 quantization with NeCTAr NMCE arithmetic semantics.
+
+The NMCE (paper Fig. 4) computes int8 x int8 dot products of 64-byte vectors
+and writes each *saturated int16* result to an MMIO register. We implement:
+
+  * symmetric int8 quantization (per-tensor / per-channel scales),
+  * the exact saturating-int16 MAC the engine performs (``saturating_mac``),
+  * W8A8 matmuls with int32 accumulation + dequant epilogue — the TPU-native
+    version (MXU-friendly: int32 accumulate, saturate only if asked),
+  * bit-exact NMCE mode for faithfulness tests.
+
+Everything here is pure jnp so it can serve as the oracle for the Pallas
+kernel in ``repro.kernels.nmce_matvec``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN, INT8_MAX = -128, 127
+INT16_MIN, INT16_MAX = -32768, 32767
+
+# NMCE ISA constants (paper §II-B): 64B vector register, count <= 32 ops.
+NMCE_VREG_BYTES = 64
+NMCE_MAX_COUNT = 32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """int8 values + fp32 scale(s). ``axis`` is the quantization axis
+    (scales broadcast along it); ``axis=None`` means per-tensor."""
+
+    q: jax.Array           # int8
+    scale: jax.Array       # f32, shape broadcastable to q
+    axis: Optional[int] = None
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+    # pytree protocol (axis is static)
+    def tree_flatten(self):
+        return (self.q, self.scale), self.axis
+
+    @classmethod
+    def tree_unflatten(cls, axis, leaves):
+        q, scale = leaves
+        return cls(q=q, scale=scale, axis=axis)
+
+
+def _absmax(x: jax.Array, axis: Optional[int]) -> jax.Array:
+    if axis is None:
+        return jnp.max(jnp.abs(x))
+    reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+    return jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+
+
+def quantize_int8(x: jax.Array, axis: Optional[int] = None) -> QuantizedTensor:
+    """Symmetric int8 quantization. ``axis`` keeps a scale per slice of that
+    axis (e.g. per-output-channel for weights)."""
+    amax = _absmax(x.astype(jnp.float32), axis)
+    scale = jnp.where(amax > 0, amax / INT8_MAX, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), INT8_MIN, INT8_MAX)
+    return QuantizedTensor(q=q.astype(jnp.int8), scale=scale, axis=axis)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    return qt.dequantize(dtype)
+
+
+def saturating_mac(v1: jax.Array, v2: jax.Array) -> jax.Array:
+    """Bit-exact NMCE dot product: int8 x int8 -> int32 accumulate ->
+    saturate to int16 (paper Fig. 4: "saturated int16 result").
+
+    v1, v2: int8 arrays whose last dim is the reduction dim (<= 64 elements
+    per NMCE op in hardware; callers chunk longer reductions).
+    """
+    acc = jnp.sum(v1.astype(jnp.int32) * v2.astype(jnp.int32), axis=-1)
+    return jnp.clip(acc, INT16_MIN, INT16_MAX).astype(jnp.int16)
+
+
+def nmce_dot_stream(v1reg: jax.Array, rows: jax.Array) -> jax.Array:
+    """One NMCE command: ``count`` dot products of the stationary 64B
+    ``v1reg`` (int8[64]) against streamed ``rows`` (int8[count, 64]),
+    each saturated to int16 — the Fig. 4 programming model."""
+    assert v1reg.shape[-1] == NMCE_VREG_BYTES, v1reg.shape
+    assert rows.shape[-1] == NMCE_VREG_BYTES, rows.shape
+    return saturating_mac(rows, v1reg[None, :])
+
+
+def w8a8_matmul(
+    x_q: QuantizedTensor,
+    w_q: QuantizedTensor,
+    out_dtype=jnp.float32,
+    saturate_int16: bool = False,
+) -> jax.Array:
+    """Quantized matmul: x[int8 (..., K)] @ w[int8 (K, N)] with int32
+    accumulation, dequantized by scale_x * scale_w.
+
+    ``saturate_int16=True`` reproduces NMCE semantics (each partial 64-wide
+    chunk saturates to int16 before the cross-chunk accumulation the CPU
+    performs) — used only for fidelity tests; the TPU path accumulates int32.
+    """
+    x, w = x_q.q, w_q.q
+    if not saturate_int16:
+        acc = jax.lax.dot_general(
+            x, w,
+            (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    else:
+        k = x.shape[-1]
+        pad = (-k) % NMCE_VREG_BYTES
+        if pad:
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+            w = jnp.pad(w, [(0, pad), (0, 0)])
+        kc = x.shape[-1] // NMCE_VREG_BYTES
+        xc = x.reshape(x.shape[:-1] + (kc, NMCE_VREG_BYTES))
+        wc = w.reshape(kc, NMCE_VREG_BYTES, w.shape[-1])
+        # per-chunk int32 dot -> saturate int16 (the engine) ->
+        # int32 accumulation across chunks (the CPU, paper Fig. 5).
+        partial_acc = jnp.einsum(
+            "...ck,ckn->...cn",
+            xc.astype(jnp.int32),
+            wc.astype(jnp.int32),
+        )
+        partial_acc = jnp.clip(partial_acc, INT16_MIN, INT16_MAX)
+        acc = jnp.sum(partial_acc, axis=-2, dtype=jnp.int32)
+
+    scale_x = x_q.scale
+    if x_q.axis is not None:  # broadcast per-row activation scales
+        scale_x = jnp.reshape(scale_x, scale_x.shape)
+    scale_w = w_q.scale
+    if w_q.axis == 1:
+        scale_w = jnp.reshape(scale_w, (1,) * (acc.ndim - 1) + (-1,))
+    elif w_q.axis == 0:
+        raise ValueError("weight scales must be per-output-channel (axis=1) "
+                         "or per-tensor (axis=None)")
+    return (acc.astype(jnp.float32) * scale_x * scale_w).astype(out_dtype)
+
+
+def quantized_linear(
+    x: jax.Array,
+    w_q: QuantizedTensor,
+    bias: Optional[jax.Array] = None,
+    out_dtype=None,
+    saturate_int16: bool = False,
+) -> jax.Array:
+    """Dynamic-activation-quant linear: quantize x per-row to int8, run W8A8,
+    dequantize. This is the software contract of the NMCE path."""
+    out_dtype = out_dtype or x.dtype
+    x_q = quantize_int8(x, axis=x.ndim - 2 if x.ndim >= 2 else None)
+    # per-row scale has keepdims shape; flatten to broadcast over N
+    y = w8a8_matmul(x_q, w_q, out_dtype=jnp.float32,
+                    saturate_int16=saturate_int16)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(out_dtype)
+
+
+@partial(jax.jit, static_argnames=("axis",))
+def quant_dequant(x: jax.Array, axis: Optional[int] = None) -> jax.Array:
+    """Fake-quant roundtrip (used by tests and QAT-style ablations)."""
+    return quantize_int8(x, axis=axis).dequantize(x.dtype)
+
+
+def quantize_tree(params, axis: int = 1, min_size: int = 1024):
+    """Quantize every >=2D leaf (weights) of a pytree to int8 per-output-
+    channel; small leaves (norms, biases) stay fp. Returns mixed pytree."""
+
+    def _q(leaf):
+        if leaf.ndim >= 2 and leaf.size >= min_size:
+            return quantize_int8(leaf, axis=leaf.ndim - 1)
+        return leaf
+
+    return jax.tree.map(_q, params)
+
+
+def tree_bytes(params) -> int:
+    """Total parameter bytes (counting int8 leaves as 1B) — the off-chip
+    traffic unit the paper argues in."""
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,253 @@
+"""Activation sparsity — the ReLU-Llama technique (paper §V-A, ref [11]).
+
+NeCTAr's end-to-end win comes from running a *ReLU-fied* Llama: after ReLU,
+most FFN hidden activations are exactly zero, so the rows of W_down (and the
+second half of the memory traffic of the FFN) for those positions never need
+to be read from off-chip memory — "halving weight reads".
+
+This module provides:
+  * ReLU-fication helpers (swap SiLU/GELU -> ReLU),
+  * sparsity measurement (instantaneous + EMA stats pytrees),
+  * active-index selection: oracle (true nonzeros), threshold, top-k,
+  * a Deja-Vu-style low-rank *predictor* that guesses the active set from the
+    FFN input (so the gather can be issued before the up-projection),
+  * reference sparse-FFN evaluation used as the oracle for
+    ``repro.kernels.sparse_ffn``.
+
+All functions are shape-static (padded index sets) so they jit/pjit cleanly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# ReLU-fication
+
+
+def relufy_act(act_name: str) -> str:
+    """ReLU Strikes Back [11]: replace the smooth activation with ReLU to
+    induce activation sparsity (fine-tuning recovers quality)."""
+    return "relu"
+
+
+def apply_act(x: jax.Array, act: str) -> jax.Array:
+    if act == "relu":
+        return jax.nn.relu(x)
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    if act == "relu2":  # squared relu (Primer)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {act!r}")
+
+
+# ---------------------------------------------------------------------------
+# Sparsity measurement
+
+
+def sparsity_fraction(h: jax.Array, eps: float = 0.0) -> jax.Array:
+    """Fraction of activations with |h| <= eps (exact zeros for ReLU)."""
+    return jnp.mean((jnp.abs(h) <= eps).astype(jnp.float32))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparsityStats:
+    """EMA tracker for per-layer activation sparsity (used by the serving
+    engine to pick k for top-k gathers and by benchmarks to report the
+    paper's 'halve weight reads' claim)."""
+
+    ema: jax.Array      # f32[n_layers]
+    count: jax.Array    # i32[]
+    decay: float = 0.99
+
+    @classmethod
+    def init(cls, n_layers: int, decay: float = 0.99) -> "SparsityStats":
+        return cls(ema=jnp.zeros((n_layers,), jnp.float32),
+                   count=jnp.zeros((), jnp.int32), decay=decay)
+
+    def update(self, layer_fracs: jax.Array) -> "SparsityStats":
+        new = jnp.where(self.count == 0, layer_fracs,
+                        self.decay * self.ema + (1 - self.decay) * layer_fracs)
+        return SparsityStats(ema=new, count=self.count + 1, decay=self.decay)
+
+    def tree_flatten(self):
+        return (self.ema, self.count), self.decay
+
+    @classmethod
+    def tree_unflatten(cls, decay, leaves):
+        ema, count = leaves
+        return cls(ema=ema, count=count, decay=decay)
+
+
+# ---------------------------------------------------------------------------
+# Active-set selection (static shapes: always return k indices, padded)
+
+
+def topk_indices(h: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Indices of the k largest |h| entries along the last dim.
+
+    Returns (idx i32[..., k], valid bool[..., k]) where ``valid`` marks
+    entries that are actually nonzero (so oracle mode == exact sparsity)."""
+    mag = jnp.abs(h)
+    _, idx = jax.lax.top_k(mag, k)
+    valid = jnp.take_along_axis(mag, idx, axis=-1) > 0
+    return idx.astype(jnp.int32), valid
+
+
+def threshold_mask(h: jax.Array, tau: float = 0.0) -> jax.Array:
+    """Boolean mask of active units (|h| > tau). Data-dependent *count*, so
+    only usable on the masked-dense path, not the gather path."""
+    return jnp.abs(h) > tau
+
+
+def active_fraction_to_k(d_ff: int, frac: float, multiple: int = 128) -> int:
+    """Convert a target active fraction to a hardware-aligned k (multiple of
+    the TPU lane width so gathered GEMV tiles stay MXU/VPU aligned)."""
+    k = max(multiple, int(round(d_ff * frac / multiple)) * multiple)
+    return min(k, d_ff)
+
+
+# ---------------------------------------------------------------------------
+# Masked-dense and gathered sparse FFN references
+
+
+def dense_ffn(x, w_up, w_down, act="relu", w_gate=None):
+    """Plain FFN: (act(x@w_gate) * (x@w_up)) @ w_down, or non-GLU variant."""
+    if w_gate is not None:
+        h = apply_act(x @ w_gate, act) * (x @ w_up)
+    else:
+        h = apply_act(x @ w_up, act)
+    return h @ w_down
+
+
+def masked_dense_ffn(x, w_up, w_down, act="relu", w_gate=None, tau=0.0):
+    """Sparsity applied as a mask (no traffic savings — correctness ref;
+    identical to dense for ReLU with tau=0)."""
+    if w_gate is not None:
+        g = apply_act(x @ w_gate, act)
+        h = jnp.where(threshold_mask(g, tau), g, 0.0) * (x @ w_up)
+    else:
+        h = apply_act(x @ w_up, act)
+        h = jnp.where(threshold_mask(h, tau), h, 0.0)
+    return h @ w_down
+
+
+def gathered_sparse_ffn(x, w_up, w_down, k, act="relu", w_gate=None):
+    """The NeCTAr sparse path (reference): compute the (cheap) gate/up
+    activations, select top-k active units, and contract ONLY the gathered
+    k rows of W_down. Byte traffic for W_down drops by k/d_ff.
+
+    x: f[..., d], w_up/w_gate: f[d, d_ff], w_down: f[d_ff, d].
+    """
+    if w_gate is not None:
+        g = apply_act(x @ w_gate, act)
+        h = g * (x @ w_up)
+    else:
+        h = apply_act(x @ w_up, act)
+    idx, valid = topk_indices(h, k)                       # [..., k]
+    hk = jnp.take_along_axis(h, idx, axis=-1)
+    hk = jnp.where(valid, hk, 0.0)
+    wk = jnp.take(w_down, idx, axis=0)                    # [..., k, d]
+    return jnp.einsum("...k,...kd->...d", hk, wk)
+
+
+# ---------------------------------------------------------------------------
+# Deja-Vu-style sparsity predictor (low-rank logistic head)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparsityPredictor:
+    """Predicts which FFN units will be active *from the FFN input*, so the
+    W_up column gather + W_down row gather can both be issued before the
+    up-projection — this is the near-core 'sparse structure traversal' part
+    of the paper's C2, done ahead of the streamed compute."""
+
+    w_in: jax.Array   # f32[d_model, r]
+    w_out: jax.Array  # f32[r, d_ff]
+
+    @classmethod
+    def init(cls, key, d_model: int, d_ff: int, rank: int = 64,
+             dtype=jnp.float32) -> "SparsityPredictor":
+        k1, k2 = jax.random.split(key)
+        s_in = 1.0 / jnp.sqrt(d_model)
+        s_out = 1.0 / jnp.sqrt(rank)
+        return cls(
+            w_in=(jax.random.normal(k1, (d_model, rank)) * s_in).astype(dtype),
+            w_out=(jax.random.normal(k2, (rank, d_ff)) * s_out).astype(dtype),
+        )
+
+    def logits(self, x: jax.Array) -> jax.Array:
+        return (x @ self.w_in) @ self.w_out
+
+    def predict_topk(self, x: jax.Array, k: int):
+        """Top-k predicted-active indices; returns (idx, scores)."""
+        s = self.logits(x)
+        val, idx = jax.lax.top_k(s, k)
+        return idx.astype(jnp.int32), val
+
+    def loss(self, x: jax.Array, h_true: jax.Array) -> jax.Array:
+        """Per-unit logistic loss against the true active mask (h_true>0)."""
+        z = self.logits(x)
+        y = (h_true > 0).astype(z.dtype)
+        return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+    def recall_at_k(self, x: jax.Array, h_true: jax.Array, k: int) -> jax.Array:
+        """Fraction of truly-active mass captured by the predicted top-k."""
+        idx, _ = self.predict_topk(x, k)
+        mass = jnp.sum(jnp.abs(h_true), axis=-1)
+        picked = jnp.sum(jnp.take_along_axis(jnp.abs(h_true), idx, axis=-1), axis=-1)
+        return jnp.mean(picked / jnp.maximum(mass, 1e-9))
+
+    def tree_flatten(self):
+        return (self.w_in, self.w_out), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+
+def train_predictor(pred: SparsityPredictor, xs: jax.Array, hs: jax.Array,
+                    lr: float = 1e-2, steps: int = 100) -> SparsityPredictor:
+    """SGD-train the predictor on (ffn input, true hidden) pairs."""
+
+    def step(p, _):
+        g = jax.grad(lambda q: q.loss(xs, hs))(p)
+        new = jax.tree.map(lambda a, b: a - lr * b, p, g)
+        return new, None
+
+    pred, _ = jax.lax.scan(step, pred, None, length=steps)
+    return pred
+
+
+# ---------------------------------------------------------------------------
+# Traffic accounting (the unit the paper argues in)
+
+
+def ffn_weight_bytes(d_model: int, d_ff: int, bytes_per_el: float,
+                     glu: bool, active_frac: float = 1.0) -> float:
+    """Off-chip weight bytes for one FFN application at a given active
+    fraction. Up/gate are always streamed (their *columns* can be gathered
+    only with a predictor); W_down rows scale with the active fraction."""
+    up = d_model * d_ff * bytes_per_el * (2.0 if glu else 1.0)
+    down = d_model * d_ff * bytes_per_el * active_frac
+    return up + down
+
+
+def ffn_weight_bytes_predicted(d_model: int, d_ff: int, bytes_per_el: float,
+                               glu: bool, active_frac: float,
+                               predictor_rank: int) -> float:
+    """With a predictor, up/gate columns AND down rows are gathered; the
+    predictor itself costs d*r + r*d_ff bytes."""
+    up = d_model * d_ff * bytes_per_el * (2.0 if glu else 1.0) * active_frac
+    down = d_model * d_ff * bytes_per_el * active_frac
+    pred = (d_model * predictor_rank + predictor_rank * d_ff) * bytes_per_el
+    return up + down + pred

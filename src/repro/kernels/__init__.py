@@ -1,0 +1,7 @@
+# Pallas TPU kernels (interpret=True validation on CPU):
+#   nmce_matvec — W8A8 weight-streaming GEMV/GEMM (paper C1)
+#   sparse_ffn  — scalar-prefetch gather over active W_down rows (paper C2)
+#   relu_ffn    — fused ReLU-FFN with @pl.when dead-block skip (C2, fused)
+#   decode_attn — GQA flash-decode over a streamed KV cache
+# ops.py: jit'd dispatching wrappers; ref.py: pure-jnp oracles.
+from repro.kernels import ops, ref  # noqa: F401

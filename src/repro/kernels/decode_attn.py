@@ -1,0 +1,106 @@
+"""GQA flash-decode kernel: one query token vs a long KV cache.
+
+Decode attention is the other memory-bound stream of LM inference (the KV
+cache plays the role the weights play in the FFN): the kernel streams KV
+blocks HBM->VMEM once, keeps the query tile stationary in VMEM (the same
+v1Reg discipline as the NMCE kernel), and maintains the online-softmax
+running (m, l, o) in VMEM scratch.
+
+Grid: (B, S // block_s) with S sequential — Pallas double-buffers the KV
+block DMAs. kv_len masks the tail (cache is a ring of max length S).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, n_s: int, block_s: int):
+    """One (b, s) grid step.
+
+    len_ref: i32[B]                  scalar-prefetched kv lengths
+    q_ref:   f[1, Kv, G, Dh]         stationary query tile
+    k_ref:   f[1, block_s, Kv, Dh]   streamed KV block
+    v_ref:   f[1, block_s, Kv, Dh]
+    o_ref:   f32[1, Kv, G, Dh]
+    scratch: m, l f32[Kv, G]; acc f32[Kv, G, Dh]
+    """
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # [Kv, G, Dh]
+    k = k_ref[0].astype(jnp.float32)                     # [bs, Kv, Dh]
+    v = v_ref[0].astype(jnp.float32)
+    Dh = q.shape[-1]
+    scores = jnp.einsum("kgd,skd->kgs", q * Dh ** -0.5, k)
+
+    kv_pos = s * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, block_s), 2)
+    mask = kv_pos < len_ref[b]
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(scores, axis=-1))
+    alive = m_new > NEG_INF / 2
+    p = jnp.exp(scores - jnp.where(alive, m_new, 0.0)[..., None])
+    p = jnp.where(alive[..., None], p, 0.0)
+    corr = jnp.where(alive, jnp.exp(m_old - m_new), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + \
+        jnp.einsum("kgs,skd->kgd", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _done():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *, block_s: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q: f[B, Hq, Dh]; k, v: f[B, S, Kv, Dh]; kv_len: i32[B].
+    Returns f32[B, Hq, Dh]."""
+    B, Hq, Dh = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    G = Hq // Kv
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    n_s = S // bs
+    qg = q.reshape(B, Kv, G, Dh)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, n_s=n_s, block_s=bs),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, n_s),
+            in_specs=[
+                pl.BlockSpec((1, Kv, G, Dh), lambda b, s, lr: (b, 0, 0, 0)),
+                pl.BlockSpec((1, bs, Kv, Dh), lambda b, s, lr: (b, s, 0, 0)),
+                pl.BlockSpec((1, bs, Kv, Dh), lambda b, s, lr: (b, s, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, Kv, G, Dh), lambda b, s, lr: (b, 0, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((Kv, G), jnp.float32),
+                            pltpu.VMEM((Kv, G), jnp.float32),
+                            pltpu.VMEM((Kv, G, Dh), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, Dh), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, Hq, Dh)

@@ -1,0 +1,116 @@
+"""NMCE W8A8 matvec/GEMM Pallas kernel — the near-memory compute engine.
+
+TPU mapping of paper Fig. 4/5 (see DESIGN.md C1):
+  * the int8 activation block is the *stationary* operand (v1Reg): it is
+    loaded into VMEM once per output tile and reused against the streamed
+    weight blocks;
+  * int8 weights stream HBM->VMEM in BlockSpec tiles at full bandwidth —
+    this is the roofline-limiting stream the paper's engine optimizes;
+  * the grid's N dimension is the "bank" dimension (paper: 4 NMCEs, here:
+    N//block_n parallel output tiles);
+  * accumulation is int32 in VMEM scratch; per-channel scales are fused in
+    the epilogue (dequant to f32);
+  * ``saturate_int16`` reproduces the engine's per-command saturating
+    int16 arithmetic bit-exactly for fidelity tests.
+
+Grid: (N_blocks, K_blocks); K is the ``arbitrary`` (sequential) dimension so
+the output tile accumulates across K steps while Pallas double-buffers the
+weight-block DMAs (the best-offset prefetch analogue — lookahead handled by
+the pipeline, depth chosen in ops.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import quant
+
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_K = 512
+
+
+def _nmce_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *,
+                 n_k: int, saturate_int16: bool):
+    """One (n, k) grid step.
+
+    x_ref:  i8[M, bk]      stationary activation block (v1Reg analogue)
+    w_ref:  i8[bk, bn]     streamed weight block
+    xs_ref: f32[M, 1]      per-row activation scales
+    ws_ref: f32[1, bn]     per-col weight scales
+    o_ref:  f32[M, bn]     output tile
+    acc_ref: i32[M, bn]    VMEM accumulator scratch
+    """
+    k_step = pl.program_id(1)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    if saturate_int16:
+        # NMCE fidelity: each 64B chunk saturates to int16 before the
+        # cross-chunk accumulate (paper Fig. 4).
+        M, bk = x.shape
+        kc = bk // quant.NMCE_VREG_BYTES
+        xc = x.reshape(M, kc, quant.NMCE_VREG_BYTES)
+        wc = w.reshape(kc, quant.NMCE_VREG_BYTES, -1)
+        part = jax.lax.dot_general(
+            xc, wc, (((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.int32)        # [kc, M, bn]
+        part = jnp.clip(part, quant.INT16_MIN, quant.INT16_MAX)
+        acc_ref[...] += jnp.sum(part, axis=0)
+    else:
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    @pl.when(k_step == n_k - 1)
+    def _epilogue():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * xs_ref[...] * ws_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_n", "block_k", "saturate_int16", "interpret"))
+def nmce_matmul(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+                w_scale: jax.Array, *, block_n: int = DEFAULT_BLOCK_N,
+                block_k: int = DEFAULT_BLOCK_K, saturate_int16: bool = False,
+                interpret: bool = True) -> jax.Array:
+    """x_q i8[M, K] @ w_q i8[K, N] -> f32[M, N] with fused dequant.
+
+    M is small (decode batch) — the whole M dim rides in VMEM; weights
+    stream. Scales: x_scale f32[M, 1], w_scale f32[1, N].
+    """
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (x_q.shape, w_q.shape)
+    bn = min(block_n, N)
+    bk = min(block_k, K)
+    assert N % bn == 0 and K % bk == 0, (N, bn, K, bk)
+    if saturate_int16:
+        assert bk % quant.NMCE_VREG_BYTES == 0, bk
+    n_n, n_k = N // bn, K // bk
+
+    return pl.pallas_call(
+        functools.partial(_nmce_kernel, n_k=n_k,
+                          saturate_int16=saturate_int16),
+        grid=(n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((M, bk), lambda n, k: (0, k)),     # activations
+            pl.BlockSpec((bk, bn), lambda n, k: (k, n)),    # weight stream
+            pl.BlockSpec((M, 1), lambda n, k: (0, 0)),      # x scales
+            pl.BlockSpec((1, bn), lambda n, k: (0, n)),     # w scales
+        ],
+        out_specs=pl.BlockSpec((M, bn), lambda n, k: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((M, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_q, w_q, x_scale, w_scale)

@@ -1,0 +1,86 @@
+"""Public kernel entry points.
+
+Each op picks the right implementation for the platform:
+  * TPU: the Pallas kernel (interpret=False);
+  * CPU (this container): interpret=True for small shapes (tests), or the
+    jnp oracle for anything large (interpret mode is a correctness tool,
+    not a performance path).
+
+The heterogeneous dispatcher (core.heterogeneous) calls through these.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.kernels import ref
+from repro.kernels.decode_attn import decode_attention as _decode_pallas
+from repro.kernels.nmce_matvec import nmce_matmul as _nmce_pallas
+from repro.kernels.relu_ffn import relu_ffn as _relu_ffn_pallas
+from repro.kernels.sparse_ffn import sparse_gather_matvec as _sparse_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+_INTERPRET_ELEM_LIMIT = 1 << 22  # interpret mode only for small problems
+
+
+def nmce_matmul(x: jax.Array, w_q: quant.QuantizedTensor, *,
+                saturate_int16: bool = False,
+                use_pallas: Optional[bool] = None) -> jax.Array:
+    """Quantized activation x int8-weight matmul (NMCE path).
+
+    x: float[M, K] (quantized per-row on the fly), w_q: int8[K, N] with
+    per-col scales. Returns f32[M, N]."""
+    x_q = quant.quantize_int8(x, axis=0)
+    xs = x_q.scale.reshape(-1, 1)
+    ws = w_q.scale.reshape(1, -1)
+    if use_pallas is None:
+        use_pallas = _on_tpu() or (x.shape[0] * w_q.q.size
+                                   <= _INTERPRET_ELEM_LIMIT)
+    if use_pallas:
+        return _nmce_pallas(x_q.q, w_q.q, xs, ws,
+                            saturate_int16=saturate_int16,
+                            interpret=not _on_tpu())
+    return ref.nmce_matmul_ref(x_q.q, w_q.q, xs, ws,
+                               saturate_int16=saturate_int16)
+
+
+def sparse_gather_matvec(h: jax.Array, idx: jax.Array, w_down: jax.Array,
+                         *, use_pallas: Optional[bool] = None) -> jax.Array:
+    """Active-row gather contraction (sparse accelerator path)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu() or (h.size * w_down.shape[1]
+                                   <= _INTERPRET_ELEM_LIMIT)
+    if use_pallas:
+        return _sparse_pallas(h, idx.astype(jnp.int32), w_down,
+                              interpret=not _on_tpu())
+    return ref.sparse_gather_matvec_ref(h, idx, w_down)
+
+
+def relu_ffn_fused(x: jax.Array, w_up: jax.Array, w_down: jax.Array, *,
+                   use_pallas: Optional[bool] = None) -> jax.Array:
+    """Fused ReLU-FFN with dead-block skip (sparse engine, fused form)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu() or (x.shape[0] * w_up.size
+                                   <= _INTERPRET_ELEM_LIMIT)
+    if use_pallas:
+        return _relu_ffn_pallas(x, w_up, w_down, interpret=not _on_tpu())
+    return ref.relu_ffn_ref(x, w_up, w_down)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *,
+                     use_pallas: Optional[bool] = None) -> jax.Array:
+    """GQA flash-decode (KV streaming path)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu() or (k.size <= _INTERPRET_ELEM_LIMIT)
+    if use_pallas:
+        return _decode_pallas(q, k, v, kv_len, interpret=not _on_tpu())
+    return ref.decode_attention_ref(q, k, v, kv_len)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def nmce_matmul_ref(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+                    w_scale: jax.Array, saturate_int16: bool = False
+                    ) -> jax.Array:
+    """W8A8 matmul oracle: x_q i8[M,K] @ w_q i8[K,N] -> f32[M,N],
+    dequantized by per-row x_scale [M,1] and per-col w_scale [1,N].
+    ``saturate_int16`` reproduces per-64-chunk NMCE saturation."""
+    if not saturate_int16:
+        acc = jax.lax.dot_general(
+            x_q, w_q, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    else:
+        M, K = x_q.shape
+        pad = (-K) % quant.NMCE_VREG_BYTES
+        xq = jnp.pad(x_q, ((0, 0), (0, pad)))
+        wq = jnp.pad(w_q, ((0, pad), (0, 0)))
+        kc = xq.shape[1] // quant.NMCE_VREG_BYTES
+        xc = xq.reshape(M, kc, quant.NMCE_VREG_BYTES).astype(jnp.int32)
+        wc = wq.reshape(kc, quant.NMCE_VREG_BYTES, -1).astype(jnp.int32)
+        part = jnp.einsum("mcv,cvn->mcn", xc, wc)
+        part = jnp.clip(part, quant.INT16_MIN, quant.INT16_MAX)
+        acc = jnp.sum(part, axis=1, dtype=jnp.int32)
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def sparse_gather_matvec_ref(h: jax.Array, idx: jax.Array,
+                             w_down: jax.Array) -> jax.Array:
+    """Activation-sparse FFN contraction oracle.
+
+    h: f[B, k] active hidden values; idx: i32[B, k] rows of w_down
+    (idx == d_ff means 'empty slot'); w_down: f[d_ff, d].
+    out[b] = sum_j h[b, j] * w_down[idx[b, j]].
+    """
+    d_ff = w_down.shape[0]
+    wpad = jnp.concatenate([w_down, jnp.zeros((1, w_down.shape[1]),
+                                              w_down.dtype)], axis=0)
+    rows = jnp.take(wpad, idx, axis=0)               # [B, k, d]
+    return jnp.einsum("bk,bkd->bd", h.astype(jnp.float32),
+                      rows.astype(jnp.float32))
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array) -> jax.Array:
+    """GQA decode attention oracle.
+
+    q: f[B, Hq, Dh]; k, v: f[B, S, Kv, Dh]; kv_len: i32[B].
+    Returns f[B, Hq, Dh] (fp32 softmax)."""
+    B, Hq, Dh = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    G = Hq // Kv
+    qg = q.reshape(B, Kv, G, Dh).astype(jnp.float32) * Dh ** -0.5
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(S)[None, :] < kv_len[:, None]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Dh)
+
+
+def relu_ffn_ref(x: jax.Array, w_up: jax.Array, w_down: jax.Array
+                 ) -> jax.Array:
+    """Fused ReLU-FFN oracle (non-GLU): relu(x @ w_up) @ w_down."""
+    h = jax.nn.relu(x @ w_up)
+    return h @ w_down

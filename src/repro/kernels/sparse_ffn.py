@@ -1,0 +1,98 @@
+"""Activation-sparse FFN gather kernel — the near-core sparse accelerator.
+
+TPU mapping of paper Fig. 6 (DESIGN.md C2): after ReLU, only k of d_ff
+hidden units are nonzero. The index set (computed cheaply by the "core" —
+plain XLA top-k) is *scalar-prefetched* into SMEM; the kernel's BlockSpec
+index_map dereferences it so only the ACTIVE rows of W_down are ever DMA'd
+from HBM. Pallas's grid pipeline double-buffers those row DMAs — the
+hardware's request queue + prefetcher, in software.
+
+Byte traffic for W_down drops from d_ff*d to k*d — the paper's "halve the
+weight reads" is exactly this term (k/d_ff ~= 10% at ReLU sparsity ~90%).
+
+Grid: (B, k // row_block). Each step gathers ``row_block`` CONSECUTIVE-
+in-index-table rows (arbitrary positions in HBM), multiplies by the active
+hidden values, and accumulates the [1, d] output tile in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sparse_kernel(idx_ref, h_ref, w_row_ref, o_ref, acc_ref, *, n_j: int,
+                   row_block: int):
+    """One (b, j) grid step.
+
+    idx_ref:   i32[B, k]          scalar-prefetched active indices
+    h_ref:     f32[1, k]          active hidden values for this token
+    w_row_ref: f[row_block, d]    gathered W_down rows (index-mapped)
+    o_ref:     f32[1, d]          output tile
+    acc_ref:   f32[1, d]          VMEM accumulator
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    hvals = h_ref[0, pl.ds(j * row_block, row_block)]     # [row_block]
+    rows = w_row_ref[...].astype(jnp.float32)             # [row_block, d]
+    acc_ref[...] += jnp.sum(hvals.astype(jnp.float32)[:, None] * rows,
+                            axis=0, keepdims=True)
+
+    @pl.when(j == n_j - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "interpret"))
+def sparse_gather_matvec(h: jax.Array, idx: jax.Array, w_down: jax.Array,
+                         *, row_block: int = 1,
+                         interpret: bool = True) -> jax.Array:
+    """out[b] = sum_j h[b, j] * w_down[idx[b, j]].
+
+    h: f[B, k]; idx: i32[B, k] (== d_ff marks empty slots -> zero row);
+    w_down: f[d_ff, d]. Returns f32[B, d].
+
+    row_block > 1 gathers multiple rows per grid step ONLY when the rows
+    are known to be sorted/contiguous; the general case uses row_block=1
+    (one DMA per active row, pipelined).
+    """
+    B, k = h.shape
+    d_ff, d = w_down.shape
+    assert idx.shape == (B, k)
+    assert k % row_block == 0, (k, row_block)
+    n_j = k // row_block
+
+    # pad W with a zero row so idx == d_ff lands on zeros
+    wpad = jnp.concatenate(
+        [w_down, jnp.zeros((1, d), w_down.dtype)], axis=0)
+
+    def w_index_map(b, j, idx_ref):
+        # gather: block row = table entry (row_block==1 path uses entry j)
+        return (idx_ref[b, j * row_block], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, n_j),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda b, j, idx_ref: (b, 0)),
+            pl.BlockSpec((row_block, d), w_index_map),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, j, idx_ref: (b, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_sparse_kernel, n_j=n_j, row_block=row_block),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(idx, h, wpad)

@@ -1,0 +1,2 @@
+# Launch entry points: mesh.py (production meshes), dryrun.py (multi-pod
+# compile-only validation + roofline terms), train.py, serve.py.

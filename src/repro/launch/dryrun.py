@@ -1,0 +1,476 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+SPMD-partitions, and compiles; extract memory + cost + collective-traffic
+artifacts for the roofline analysis.
+
+Per cell:
+  * FULL lowering (scan-over-units, remat) -> .lower().compile() on the
+    production mesh; memory_analysis() proves it fits; HLO saved.
+  * PROBE lowerings (single-pod roofline only): 1-unit and 2-unit configs
+    with EVERY scan unrolled (loop-free HLO). XLA's HloCostAnalysis counts
+    while bodies once, so exact per-step FLOPs/bytes/collective-bytes come
+    from: probe1 + (n_units - 1) * (probe2 - probe1).
+
+Artifacts: benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json
+(cached: cells that already have an artifact are skipped unless --force).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape decode_32k
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import (SHAPES, ModelConfig, TrainConfig,
+                                applicable_shapes)
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh, mesh_info
+from repro.models import Model
+from repro.train import loop as train_loop
+from repro.train import optimizer as opt
+
+ARCHS = [
+    "llama3.2-1b", "granite-34b", "qwen3-4b", "qwen2.5-3b",
+    "llama4-maverick-400b-a17b", "moonshot-v1-16b-a3b", "qwen2-vl-72b",
+    "zamba2-2.7b", "musicgen-medium", "xlstm-125m",
+]
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "artifacts", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Per-arch dry-run policies (derived from HBM budget; see EXPERIMENTS.md)
+
+
+# perf-variant hook: launch.perf registers per-config policy overrides here
+POLICY_OVERRIDES = {}
+
+
+def train_config(cfg: ModelConfig) -> TrainConfig:
+    big = cfg.param_count() > 30e9
+    return TrainConfig(adam_8bit=big, microbatch=0)
+
+
+def train_policy(cfg: ModelConfig) -> shd.ShardingPolicy:
+    # seq_shard (Megatron-SP residuals): without it, deep models blow the
+    # HBM budget on scan-saved unit-boundary residuals (88 layers x
+    # [16,4096,d] bf16 ~= 70 GiB/device for granite-34b).
+    resid = (cfg.n_units * (256 // 16) * 4096 * cfg.d_model * 2)
+    base = shd.ShardingPolicy(fsdp=True,
+                              seq_shard=resid > 6 * 2 ** 30,
+                              pod_param_shard=cfg.param_count() > 100e9)
+    return dataclasses.replace(base, **POLICY_OVERRIDES.get(cfg.name, {}))
+
+
+def serve_policy(cfg: ModelConfig) -> shd.ShardingPolicy:
+    # big models can't replicate weights across the data axis at decode
+    base = shd.ShardingPolicy(fsdp=cfg.param_count() > 30e9,
+                              seq_shard=False, shard_kv_seq=True)
+    return dataclasses.replace(base, **POLICY_OVERRIDES.get(cfg.name, {}))
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Shape/dtype stand-ins (no allocation) for one assigned shape."""
+    sh = SHAPES[shape_name]
+    B, S, kind = sh["batch"], sh["seq"], sh["kind"]
+    i32, f32 = jnp.int32, jnp.float32
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    if kind == "train":
+        tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+        batch = {"tokens": sds(tok_shape, i32),
+                 "labels": sds(tok_shape, i32),
+                 "mask": sds((B, S), f32)}
+        if cfg.frontend == "vision_stub":
+            batch["vision_embeds"] = sds((B, S // 4, cfg.d_model),
+                                         jnp.bfloat16)
+            batch["mrope_positions"] = sds((3, B, S), i32)
+        if cfg.frontend == "audio_stub":
+            batch["audio_embeds"] = sds((B, S // 4, cfg.d_model),
+                                        jnp.bfloat16)
+        return {"batch": batch}
+
+    if kind == "prefill":
+        tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+        batch = {"tokens": sds(tok_shape, i32)}
+        if cfg.frontend == "vision_stub":
+            batch["vision_embeds"] = sds((B, S // 4, cfg.d_model),
+                                         jnp.bfloat16)
+            batch["mrope_positions"] = sds((3, B, S), i32)
+        if cfg.frontend == "audio_stub":
+            batch["audio_embeds"] = sds((B, S // 4, cfg.d_model),
+                                        jnp.bfloat16)
+        cache = cache_specs(cfg, B, S)
+        return {"batch": batch, "cache": cache}
+
+    # decode: one new token against a KV cache of length S
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1)
+    return {"tokens": sds(tok_shape, i32), "cache": cache_specs(cfg, B, S)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    model = Model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_len, jnp.bfloat16))
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(txt: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum PER-DEVICE operand bytes of every collective op in the (SPMD-
+    partitioned, per-device) HLO. NOTE: ops inside while loops are counted
+    once — use the unrolled probes for exact totals."""
+    per_op = defaultdict(float)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"=\s*(.+?)\s+(" + "|".join(_COLLECTIVES)
+                      + r")(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        if "-done(" in line:
+            continue  # avoid double counting start/done pairs
+        # operand bytes: shapes of the arguments; approximate with the
+        # output shape for all-reduce/permute (same size), and with the
+        # output/N for all-gather (operand is the local shard — conservative:
+        # use output bytes as upper bound of link traffic per device).
+        out_bytes = _shape_bytes(m.group(1))
+        per_op[op] += out_bytes
+        counts[op] += 1
+    return {"bytes_by_type": dict(per_op), "counts": dict(counts),
+            "total_bytes": float(sum(per_op.values()))}
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-device memory (TPU-expected)
+#
+# memory_analysis() on the CPU backend overstates real HBM need by up to
+# ~5x for deep scans: (a) bf16 GEMM operands get whole-tensor f32 upcasts,
+# (b) whole-residual-stack converts are hoisted out of the backward loop,
+# (c) while-state copies are not aliased across loop nests. We verified via
+# jax.ad_checkpoint.print_saved_residuals that the JAX-level reserved set
+# is exactly {params, opt state, one bf16 residual stack, rope tables} —
+# so the artifact records BOTH numbers; fits_hbm is judged on the analytic
+# one, with the CPU number kept as the (environmental) upper bound.
+
+
+def _sharded_tree_bytes(tree, shardings) -> float:
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(shardings)):
+        shape = tuple(leaf.shape)
+        local = sh.shard_shape(shape) if hasattr(sh, "shard_shape") else shape
+        total += float(np.prod(local, dtype=np.float64)
+                       * jnp.dtype(leaf.dtype).itemsize) if local else 0.0
+    return total
+
+
+def estimate_cell_memory(cfg: ModelConfig, shape_name: str, mesh,
+                         policy, params_sh, p_shard, opt_sh=None,
+                         o_shard=None, cache_sh=None, c_shard=None) -> dict:
+    sh = SHAPES[shape_name]
+    B, S, kind = sh["batch"], sh["seq"], sh["kind"]
+    dpn = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    mo = mesh.shape.get("model", 1)
+    B_l = B // dpn if B % dpn == 0 else B
+    S_l = S // mo if (policy.seq_shard and S % mo == 0) else S
+
+    params_b = _sharded_tree_bytes(params_sh, p_shard)
+    out = {"params_gib": params_b / 2 ** 30}
+    total = params_b
+    if kind == "train":
+        opt_b = _sharded_tree_bytes(opt_sh, o_shard)
+        grads_b = params_b  # transient, same sharding/dtype as params
+        resid_b = cfg.n_units * B_l * S_l * cfg.d_model * 2.0
+        # per-unit workspace: gathered unit weights (FSDP gather over dp;
+        # stays TP-sharded) x2 double-buffer + attention/ffn transients
+        unit_params = params_b / max(cfg.n_units, 1) * dpn
+        d_attn = cfg.n_heads * cfg.d_head
+        kv_dim = cfg.n_kv_heads * cfg.d_head
+        # flash per-unit liveset: q/o/do bf16 + dq f32 (query side) and
+        # k/v bf16 + dk/dv f32 (kv side, GQA-small)
+        attn_ws = B_l * S * (10.0 * d_attn + 12.0 * kv_dim)
+        logits_ws = 4.0 * B_l * min(S, 512) * cfg.vocab / max(mo, 1)
+        ws = 2 * unit_params + attn_ws + logits_ws
+        out.update(opt_gib=opt_b / 2 ** 30, grads_gib=grads_b / 2 ** 30,
+                   residuals_gib=resid_b / 2 ** 30,
+                   workspace_gib=ws / 2 ** 30)
+        total += opt_b + grads_b + resid_b + ws
+    else:
+        cache_b = _sharded_tree_bytes(cache_sh, c_shard) if cache_sh else 0.0
+        d_attn = cfg.n_heads * cfg.d_head
+        if kind == "prefill":
+            ws = 6.0 * B_l * S * max(d_attn, cfg.d_model) * 2.0
+        else:
+            ws = 4.0 * B_l * (S / max(mo, 1)) * max(d_attn, cfg.d_model) * 4.0
+        unit_params = params_b / max(cfg.n_units, 1) * \
+            (dpn if policy.fsdp else 1)
+        ws += 2 * unit_params
+        out.update(cache_gib=cache_b / 2 ** 30, workspace_gib=ws / 2 ** 30)
+        total += cache_b + ws
+    out["total_gib"] = total / 2 ** 30
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+
+
+def build_lowerable(cfg: ModelConfig, shape_name: str, mesh):
+    """Returns (jitted_fn, example_args) ready for .lower(*args)."""
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    model = Model(cfg)
+    specs = input_specs(cfg, shape_name)
+
+    if kind == "train":
+        tcfg = train_config(cfg)
+        policy = train_policy(cfg)
+        params_sh = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        init, _ = opt.make_optimizer(tcfg)
+        opt_sh = jax.eval_shape(init, params_sh)
+        fn, (p_sh, o_sh, _) = train_loop.compile_train_step(
+            cfg, tcfg, mesh, params_sh, opt_sh, specs["batch"],
+            policy=policy, donate=True)
+        mem = estimate_cell_memory(cfg, shape_name, mesh, policy,
+                                   params_sh, p_sh, opt_sh, o_sh)
+        return fn, (params_sh, opt_sh, specs["batch"]), policy, mem
+
+    policy = serve_policy(cfg)
+    params_sh = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = shd.params_shardings(params_sh, cfg, mesh, policy)
+    cache_sh_fn = shd.cache_shardings(cfg, mesh, sh["batch"], policy)
+    cache_shard = jax.tree_util.tree_map_with_path(cache_sh_fn,
+                                                   specs["cache"])
+    if kind == "prefill":
+        b_shard = shd.batch_shardings(cfg, mesh, sh["batch"], sh["seq"],
+                                      "prefill", policy)
+        b_shard = {k: b_shard[k] for k in specs["batch"]}
+        fn = jax.jit(model.prefill,
+                     in_shardings=(p_shard, b_shard, cache_shard),
+                     out_shardings=(None, cache_shard),
+                     donate_argnums=(2,))
+        mem = estimate_cell_memory(cfg, shape_name, mesh, policy,
+                                   params_sh, p_shard,
+                                   cache_sh=specs["cache"],
+                                   c_shard=cache_shard)
+        return fn, (params_sh, specs["batch"], specs["cache"]), policy, mem
+
+    # decode
+    t_shard = shd.batch_shardings(cfg, mesh, sh["batch"], sh["seq"],
+                                  "decode", policy)["tokens"]
+    fn = jax.jit(model.decode_step,
+                 in_shardings=(p_shard, t_shard, cache_shard),
+                 out_shardings=(None, cache_shard),
+                 donate_argnums=(2,))
+    mem = estimate_cell_memory(cfg, shape_name, mesh, policy,
+                               params_sh, p_shard,
+                               cache_sh=specs["cache"], c_shard=cache_shard)
+    return fn, (params_sh, specs["tokens"], specs["cache"]), policy, mem
+
+
+# ---------------------------------------------------------------------------
+# Probe-based exact costs (single-pod roofline)
+
+
+def probe_costs(arch: str, shape_name: str, mesh) -> dict:
+    """Exact per-step cost via loop-free probes (see module docstring).
+
+    Recurrent families (hybrid/ssm) at train/prefill would unroll hundreds
+    of SSD/mLSTM chunk bodies (XLA passes go superlinear -> multi-hour
+    compiles); those cells fall back to the analytic cost model in
+    roofline.analysis (probe_mode='analytic'). Their decode cells have no
+    inner scans and keep exact probes."""
+    base = get_config(arch)
+    if base.family in ("hybrid", "ssm") and \
+            SHAPES[shape_name]["kind"] in ("train", "prefill"):
+        return {"probe_mode": "analytic",
+                "note": "inner-scan unroll infeasible; analytic model used"}
+    unit_len = len(base.pattern_unit())
+    out = {}
+    costs = []
+    for n_units in (1, 2):
+        cfg = dataclasses.replace(base, n_layers=unit_len * n_units,
+                                  unroll=True)
+        fn, args, policy, _ = build_lowerable(cfg, shape_name, mesh)
+        with shd.activation_sharding_scope(mesh, policy):
+            lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        costs.append({
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "collective_bytes": coll["total_bytes"],
+            "collective_by_type": coll["bytes_by_type"],
+        })
+        del compiled, lowered
+    n_units_full = base.n_units
+    unit = {k: costs[1][k] - costs[0][k]
+            for k in ("flops", "bytes", "collective_bytes")}
+    total = {k: costs[0][k] + (n_units_full - 1) * unit[k]
+             for k in unit}
+    out["probe1"] = costs[0]
+    out["probe2"] = costs[1]
+    out["per_unit"] = unit
+    out["total_per_device"] = total
+    out["n_units"] = n_units_full
+    out["note"] = ("totals are PER-DEVICE (SPMD module); multiply by "
+                   "mesh size for global. slstm time-scan bodies counted "
+                   "once (correction in roofline.analysis).")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Runner
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             with_probes: bool = True, force: bool = False) -> dict:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(
+        ART_DIR, f"{arch}__{shape_name}__{mesh_kind}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_info(mesh),
+           "kind": SHAPES[shape_name]["kind"], "ok": False}
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args, policy, mem_est = build_lowerable(cfg, shape_name,
+                                                        mesh)
+            with shd.activation_sharding_scope(mesh, policy):
+                lowered = fn.lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+            ma = compiled.memory_analysis()
+            print(compiled.memory_analysis())
+            ca = compiled.cost_analysis() or {}
+            coll = parse_collectives(compiled.as_text())
+            rec.update({
+                "ok": True,
+                "lower_s": t_lower - t0,
+                "compile_s": t_compile - t_lower,
+                "memory_analytic": mem_est,
+                "memory": {
+                    "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+                    "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+                    "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+                    "alias_bytes": getattr(ma, "alias_size_in_bytes", 0),
+                    "per_device_total_gib": (
+                        getattr(ma, "argument_size_in_bytes", 0)
+                        + getattr(ma, "output_size_in_bytes", 0)
+                        + getattr(ma, "temp_size_in_bytes", 0)
+                        - getattr(ma, "alias_size_in_bytes", 0)) / 2 ** 30,
+                },
+                "cost_analysis": {
+                    "flops_per_device_loopbody_once":
+                        float(ca.get("flops", 0.0)),
+                    "bytes_per_device_loopbody_once":
+                        float(ca.get("bytes accessed", 0.0)),
+                },
+                "collectives_loopbody_once": coll,
+            })
+            print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+            del compiled, lowered
+            if with_probes and mesh_kind == "pod":
+                rec["probes"] = probe_costs(arch, shape_name, mesh)
+    except Exception as e:  # noqa: BLE001 — record the failure verbatim
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = time.time() - t0
+
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec["ok"] else f"FAIL ({rec.get('error', '')[:120]})"
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: {status} "
+          f"({rec['wall_s']:.1f}s)")
+    return rec
+
+
+def all_cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape_name in applicable_shapes(cfg):
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    results = []
+    if args.all:
+        cells = list(all_cells())
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    for arch, shape_name in cells:
+        for mk in meshes:
+            results.append(run_cell(arch, shape_name, mk,
+                                    with_probes=not args.no_probes,
+                                    force=args.force))
+    n_ok = sum(r["ok"] for r in results)
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh definitions.
+
+Single pod: 16x16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — the 'pod' axis
+crosses DCN (thin link; gradient traffic is hierarchical + compressible,
+see dist.collectives / dist.compression).
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh over the first prod(shape) devices (tests, examples)."""
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_info(mesh) -> dict:
+    return {"shape": dict(mesh.shape), "n_devices": mesh.size,
+            "axes": list(mesh.axis_names)}

@@ -1,0 +1,56 @@
+"""Public model API: init / forward / loss / prefill / decode."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+class Model:
+    """Functional facade over the decoder stack for one config."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # --- params ---
+    def init(self, key) -> Dict[str, Any]:
+        return transformer.init_params(key, self.cfg)
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+    # --- training ---
+    def loss(self, params, batch: dict):
+        return transformer.loss_fn(params, self.cfg, batch)
+
+    def forward(self, params, batch: dict):
+        """Hidden states + logits (small-scale/eval use)."""
+        hidden, aux, _ = transformer.forward(params, self.cfg, batch)
+        return transformer.project_logits(params, self.cfg, hidden), aux
+
+    # --- serving ---
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return transformer.init_cache(self.cfg, batch, max_len, dtype)
+
+    def prefill(self, params, batch: dict, cache):
+        """Process a prompt of S tokens, fill the cache, return logits of
+        the last position and the updated cache."""
+        hidden, _, new_cache = transformer.forward(
+            params, self.cfg, batch, cache=cache)
+        last = hidden[:, -1:]
+        logits = transformer.project_logits(params, self.cfg, last)
+        return logits, new_cache
+
+    def decode_step(self, params, tokens, cache,
+                    batch_extra: Optional[dict] = None):
+        return transformer.decode_step(params, self.cfg, tokens, cache,
+                                       batch_extra=batch_extra)
+
+    # --- sampling helper (greedy; serving engine adds temperature) ---
+    def greedy_token(self, logits):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)

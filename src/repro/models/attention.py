@@ -1,0 +1,124 @@
+"""Multi-head attention (MHA/GQA/MQA) with KV cache, qk-norm, qkv-bias."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, rope
+from repro.models.flash import (block_causal_attention,
+                                blockwise_attention,
+                                reference_attention)
+
+
+def init_attn(key, cfg: ModelConfig, dtype):
+    d, dh = cfg.d_model, cfg.d_head
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], (d, nq * dh), dtype),
+        "wk": layers.dense_init(ks[1], (d, nkv * dh), dtype),
+        "wv": layers.dense_init(ks[2], (d, nkv * dh), dtype),
+        "wo": layers.dense_init(ks[3], (nq * dh, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * dh,), dtype)
+        p["bk"] = jnp.zeros((nkv * dh,), dtype)
+        p["bv"] = jnp.zeros((nkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _qkv(p, cfg: ModelConfig, x):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = layers.head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_forward(p, cfg: ModelConfig, x, cos, sin,
+                 cache: Optional[dict] = None,
+                 pos: Optional[jax.Array] = None,
+                 block_kv: int = 512):
+    """Attention for train/prefill (full sequence, causal).
+
+    x: [B, S, d]; cos/sin: [B, S, dh//2]. If ``cache`` is given, writes
+    K/V at [pos, pos+S) and returns (out, new_cache); attends only within
+    the current segment (prefill semantics: segment starts at pos=0).
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    q = rope.apply_rope(q, cos, sin)
+    k = rope.apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        start = 0 if pos is None else pos
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                     k.astype(cache["k"].dtype),
+                                                     start, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                     v.astype(cache["v"].dtype),
+                                                     start, axis=1),
+        }
+
+    qg = q.reshape(B, S, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
+    if cfg.block_causal and S > block_kv:
+        o = block_causal_attention(qg, k, v, block_q=block_kv,
+                                   block_kv=block_kv, unroll=cfg.unroll)
+    else:
+        o = blockwise_attention(qg, k, v, causal=True, block_kv=block_kv,
+                                unroll=cfg.unroll)
+    o = o.reshape(B, S, cfg.n_heads * cfg.d_head)
+    out = o @ p["wo"]
+    return (out, new_cache) if cache is not None else (out, None)
+
+
+def attn_decode(p, cfg: ModelConfig, x, cos, sin, cache: dict,
+                lens: jax.Array, block_kv: int = 1024):
+    """One-token decode: x [B, 1, d]; ``lens`` i32[B] is each row's current
+    context length — the new KV is scattered at position lens[b] (per-slot
+    continuous batching) and attention masks to lens+1.
+
+    The KV cache may be sequence-sharded across the model axis — GSPMD
+    handles the baseline; the optimized distributed-LSE path lives in
+    ``repro.dist.collectives``.
+    """
+    B = x.shape[0]
+    q, k, v = _qkv(p, cfg, x)
+    q = rope.apply_rope(q, cos, sin)
+    k = rope.apply_rope(k, cos, sin)
+    rows = jnp.arange(B)
+    ck = cache["k"].at[rows, lens].set(k[:, 0].astype(cache["k"].dtype),
+                                       mode="drop")
+    cv = cache["v"].at[rows, lens].set(v[:, 0].astype(cache["v"].dtype),
+                                       mode="drop")
+    qg = q.reshape(B, 1, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
+    # Single-token decode uses FULL-score attention (no KV-block scan):
+    # scores are [B, Kv, G, 1, S] — small — and, crucially, GSPMD shards
+    # the softmax reduction over the seq-sharded KV cache cleanly (the
+    # scan's dynamic-slice forces involuntary resharding). The Pallas
+    # flash-decode kernel covers the on-chip version (kernels/decode_attn).
+    o = reference_attention(qg, ck, cv, causal=False, kv_len=lens + 1)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.d_head)
+    return o @ p["wo"], {"k": ck, "v": cv}

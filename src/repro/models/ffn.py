@@ -1,0 +1,43 @@
+"""FFN: dense GLU / non-GLU, with the NeCTAr sparse decode path.
+
+Training/prefill always run the dense MXU path. At decode, configs with
+``relu_sparse`` route through ``gathered_sparse_ffn`` (paper C2) and configs
+with ``int8_weights`` use the quantized NMCE contract (paper C1); both are
+validated against the dense path in tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import sparsity
+from repro.models import layers
+
+
+def init_ffn(key, cfg: ModelConfig, dtype, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": layers.dense_init(ks[0], (d, f), dtype),
+         "w_down": layers.dense_init(ks[1], (f, d), dtype)}
+    if cfg.glu:
+        p["w_gate"] = layers.dense_init(ks[2], (d, f), dtype)
+    return p
+
+
+def ffn_forward(p, cfg: ModelConfig, x):
+    """Dense path (train/prefill)."""
+    act = "relu" if cfg.relu_sparse else cfg.act
+    return sparsity.dense_ffn(x, p["w_up"], p["w_down"], act=act,
+                              w_gate=p.get("w_gate"))
+
+
+def ffn_decode(p, cfg: ModelConfig, x):
+    """Decode path: sparse gather when relu_sparse (the paper's technique),
+    dense otherwise. x: [B, 1, d]."""
+    if not cfg.relu_sparse:
+        return ffn_forward(p, cfg, x)
+    k = sparsity.active_fraction_to_k(cfg.d_ff, cfg.sparse_k_frac)
+    return sparsity.gathered_sparse_ffn(
+        x, p["w_up"], p["w_down"], k=k, act="relu", w_gate=p.get("w_gate"))

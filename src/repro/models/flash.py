@@ -1,0 +1,280 @@
+"""Blockwise (flash-style) attention in pure JAX.
+
+XLA has no fused attention on TPU, and materializing [B, H, S, S] scores at
+seq 4k-32k is impossible, so the model path uses an online-softmax scan over
+KV blocks: memory O(S * block) instead of O(S^2). This is the compilable,
+GSPMD-shardable path used everywhere (train/prefill); the Pallas kernel in
+``repro.kernels`` is the TPU fast path validated against the same math.
+
+Causal handling: scanning KV blocks for a given query block, fully-masked
+blocks are still *computed* (static shapes) — the ~2x causal overcompute is
+visible in the roofline's MODEL_FLOPS/HLO_FLOPs ratio and is attacked in the
+perf loop (EXPERIMENTS.md §Perf) via the bounded-kv variant below.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: [B, Sq, Kv, G, Dh], k: [B, Skv, Kv, Dh] -> [B, Kv, G, Sq, Skv]."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p, v):
+    """p: [B, Kv, G, Sq, Skv], v: [B, Skv, Kv, Dh] -> f32[B, Kv, G, Sq, Dh].
+
+    Probs are cast to v's dtype (bf16 on TPU — same as flash kernels) and
+    the dot accumulates in f32 (MXU semantics). Avoiding an f32 pre-cast of
+    v keeps XLA from materializing the whole KV cache in f32."""
+    return jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32)
+
+
+def _bwd_pass(q, k, v, o, lse, do, *, causal: bool, block_kv: int,
+              kv_len, unroll: bool):
+    """FlashAttention-2-style manual backward: recompute p per KV block;
+    memory O(Sq * block) instead of O(Sq * Skv)."""
+    B, Sq, Kv, G, Dh = q.shape
+    Skv = k.shape[1]
+    blk = min(block_kv, Skv)
+    n_blocks = (Skv + blk - 1) // blk
+    pad = n_blocks * blk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    scale = Dh ** -0.5
+    qf = q * jnp.asarray(scale, q.dtype)
+    q_pos = (Skv - Sq) + jnp.arange(Sq)
+    dof = do.astype(jnp.float32)
+    # D[t] = rowsum(do * o)
+    Dt = jnp.einsum("bqkgd,bqkgd->bkgq", dof, o.astype(jnp.float32))
+    alive = jnp.isfinite(lse)
+    lse_safe = jnp.where(alive, lse, 0.0)
+
+    kb = k.reshape(B, n_blocks, blk, Kv, Dh)
+    vb = v.reshape(B, n_blocks, blk, Kv, Dh)
+
+    def body(dq_acc, xs):
+        kc, vc, blk_idx = xs
+        s = _gqa_scores(qf, kc)                          # f32 [B,Kv,G,Sq,blk]
+        kv_pos = blk_idx * blk + jnp.arange(blk)
+        if causal:
+            bias = jnp.where(kv_pos[None, :] <= q_pos[:, None], 0.0, NEG_INF)
+        else:
+            bias = jnp.where(kv_pos[None, :] < Skv, 0.0, NEG_INF)
+        s = s + bias[None, None, None]
+        if kv_len is not None:
+            lbias = jnp.where(kv_pos[None, :] < kv_len[:, None], 0.0,
+                              NEG_INF)
+            s = s + lbias[:, None, None, None]
+        # exp(NEG_INF - lse) == 0 for masked entries; alive guards
+        # fully-masked rows (lse = -inf)
+        p = jnp.where(alive[..., None],
+                      jnp.exp(s - lse_safe[..., None]), 0.0)
+        # dv = p^T do
+        dv = jnp.einsum("bkgqs,bqkgd->bskd", p.astype(do.dtype), do,
+                        preferred_element_type=jnp.float32)
+        # dp = do v^T ; ds = p * (dp - D)
+        dp = jnp.einsum("bqkgd,bskd->bkgqs", do, vc,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - Dt[..., None])
+        dsc = ds.astype(q.dtype)
+        dq_acc = dq_acc + jnp.einsum("bkgqs,bskd->bqkgd", dsc, kc,
+                                     preferred_element_type=jnp.float32)
+        dk = jnp.einsum("bkgqs,bqkgd->bskd", dsc, qf,
+                        preferred_element_type=jnp.float32)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, Sq, Kv, G, Dh), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(
+        body, dq0,
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+         jnp.arange(n_blocks)), unroll=unroll)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, n_blocks * blk, Kv, Dh)[:, :Skv]
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, n_blocks * blk, Kv, Dh)[:, :Skv]
+    dq = (dq * scale).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@partial(jax.custom_vjp,
+         nondiff_argnames=("causal", "block_kv", "unroll", "has_kv_len"))
+def _flash(q, k, v, kv_len, causal, block_kv, unroll, has_kv_len):
+    out, _ = _flash_fwd_impl(q, k, v, kv_len, causal, block_kv, unroll,
+                             has_kv_len)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, kv_len, causal, block_kv, unroll, has_kv_len):
+    out, lse = _blockwise_fwd(q, k, v, causal=causal, block_kv=block_kv,
+                              kv_len=kv_len if has_kv_len else None,
+                              unroll=unroll)
+    return out, (q, k, v, out, lse, kv_len)
+
+
+def _flash_fwd(q, k, v, kv_len, causal, block_kv, unroll, has_kv_len):
+    out, res = _flash_fwd_impl(q, k, v, kv_len, causal, block_kv, unroll,
+                               has_kv_len)
+    return out, res
+
+
+def _flash_bwd(causal, block_kv, unroll, has_kv_len, res, do):
+    q, k, v, o, lse, kv_len = res
+    dq, dk, dv = _bwd_pass(q, k, v, o, lse, do, causal=causal,
+                           block_kv=block_kv,
+                           kv_len=kv_len if has_kv_len else None,
+                           unroll=unroll)
+    return dq, dk, dv, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@partial(jax.jit, static_argnames=("causal", "block_kv", "q_offset_static",
+                                   "unroll"))
+def blockwise_attention(q, k, v, *, causal: bool = True, block_kv: int = 512,
+                        q_offset: jax.Array | None = None,
+                        kv_len: jax.Array | None = None,
+                        q_offset_static: int = 0, unroll: bool = False):
+    """Flash attention with a manual VJP (recompute-per-block backward —
+    O(Sq*block) memory; without it the inner scan saves O(Sq*Skv) prob
+    matrices per layer and training at seq 4k+ cannot fit HBM)."""
+    if q_offset is None and q_offset_static == 0:
+        has_len = kv_len is not None
+        dummy = kv_len if has_len else jnp.zeros((q.shape[0],), jnp.int32)
+        return _flash(q, k, v, dummy, causal, block_kv, unroll, has_len)
+    return _blockwise_attention_nograd(
+        q, k, v, causal=causal, block_kv=block_kv, q_offset=q_offset,
+        kv_len=kv_len, q_offset_static=q_offset_static, unroll=unroll)
+
+
+def block_causal_attention(q, k, v, *, block_q: int = 512,
+                           block_kv: int = 512, unroll: bool = False):
+    """Causal attention with the lower-triangle-only schedule: query block
+    i attends kv[: (i+1)*block] — ~2x fewer FLOPs than masked-full blocks
+    (the §Perf fix for causal overcompute). Equal block sizes make the
+    per-block causal offset line up automatically (Skv_i - Sq_i = i*blk).
+    """
+    B, Sq, Kv, G, Dh = q.shape
+    assert q.shape[1] == k.shape[1], "self-attention only"
+    blk = min(block_q, Sq)
+    assert block_kv == block_q or Sq <= blk, \
+        "equal q/kv blocks required for offset alignment"
+    n = (Sq + blk - 1) // blk
+    if n <= 1:
+        return blockwise_attention(q, k, v, causal=True, block_kv=block_kv,
+                                   unroll=unroll)
+    assert Sq % blk == 0, (Sq, blk)
+    outs = []
+    for i in range(n):
+        qi = jax.lax.slice_in_dim(q, i * blk, (i + 1) * blk, axis=1)
+        ki = jax.lax.slice_in_dim(k, 0, (i + 1) * blk, axis=1)
+        vi = jax.lax.slice_in_dim(v, 0, (i + 1) * blk, axis=1)
+        outs.append(blockwise_attention(qi, ki, vi, causal=True,
+                                        block_kv=blk, unroll=unroll))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _blockwise_attention_nograd(q, k, v, *, causal, block_kv, q_offset,
+                                kv_len, q_offset_static, unroll):
+    out, _ = _blockwise_fwd(q, k, v, causal=causal, block_kv=block_kv,
+                            q_offset=q_offset, kv_len=kv_len,
+                            q_offset_static=q_offset_static, unroll=unroll)
+    return out
+
+
+def _blockwise_fwd(q, k, v, *, causal: bool = True, block_kv: int = 512,
+                   q_offset: jax.Array | None = None,
+                   kv_len: jax.Array | None = None,
+                   q_offset_static: int = 0, unroll: bool = False):
+    """Online-softmax attention.
+
+    q: [B, Sq, n_kv, group, d_head]   (group = n_heads // n_kv)
+    k, v: [B, Skv, n_kv, d_head]
+    causal: apply causal mask with queries at absolute positions
+        q_offset + arange(Sq) (q_offset defaults to Skv - Sq).
+    kv_len: optional i32[B] valid KV length (decode: mask the tail).
+
+    Returns [B, Sq, n_kv, group, d_head] in q.dtype.
+    """
+    B, Sq, Kv, G, Dh = q.shape
+    Skv = k.shape[1]
+    blk = min(block_kv, Skv)
+    n_blocks = (Skv + blk - 1) // blk
+    pad = n_blocks * blk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    scale = Dh ** -0.5
+    qf = (q * jnp.asarray(scale, q.dtype))  # stay in q.dtype; dots accum f32
+    q_pos = (q_offset if q_offset is not None
+             else jnp.asarray(Skv - Sq + q_offset_static)) + jnp.arange(Sq)
+
+    kb = k.reshape(B, n_blocks, blk, Kv, Dh)
+    vb = v.reshape(B, n_blocks, blk, Kv, Dh)
+
+    def body(carry, xs):
+        m, l, o = carry
+        kc, vc, blk_idx = xs
+        s = _gqa_scores(qf, kc)                           # f32 [B,Kv,G,Sq,blk]
+        kv_pos = blk_idx * blk + jnp.arange(blk)
+        # additive f32 bias (fuses into the softmax pipeline; boolean
+        # where-masks get materialized/hoisted as [B,...] pred stacks by
+        # XLA's loop-invariant motion — observed GiB-scale waste)
+        if causal:
+            bias = jnp.where(kv_pos[None, :] <= q_pos[:, None], 0.0, NEG_INF)
+        else:
+            bias = jnp.where(kv_pos[None, :] < Skv, 0.0, NEG_INF)
+        s = s + bias[None, None, None]
+        if kv_len is not None:
+            lbias = jnp.where(kv_pos[None, :] < kv_len[:, None], 0.0,
+                              NEG_INF)                    # [B, blk]
+            s = s + lbias[:, None, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (exp(NEG_INF - NEG_INF) -> exp(0)=1 bug)
+        alive = m_new > NEG_INF / 2
+        p = jnp.exp(s - jnp.where(alive, m_new, 0.0)[..., None])
+        p = jnp.where(alive[..., None], p, 0.0)
+        corr = jnp.where(alive, jnp.exp(m - m_new), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_new = o * corr[..., None] + _gqa_out(p, vc)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, Kv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Kv, G, Sq), jnp.float32)
+    o0 = jnp.zeros((B, Kv, G, Sq, Dh), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        body, (m0, l0, o0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(n_blocks)),
+        unroll=unroll)
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    # log-sum-exp per query (for the custom-vjp backward); -inf marks
+    # fully-masked rows. NOTE: scores were computed on q*scale, so lse is
+    # in scaled units — the backward recomputes scores identically.
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), -jnp.inf)
+    return jnp.moveaxis(o, -2, 1).astype(q.dtype), lse  # [B,Sq,Kv,G,Dh]
+
+
+def reference_attention(q, k, v, *, causal=True, q_offset=None, kv_len=None):
+    """Naive O(S^2)-memory oracle for tests."""
+    B, Sq, Kv, G, Dh = q.shape
+    Skv = k.shape[1]
+    s = _gqa_scores(q * jnp.asarray(Dh ** -0.5, q.dtype), k)
+    q_pos = (q_offset if q_offset is not None else Skv - Sq) + jnp.arange(Sq)
+    if causal:
+        mask = jnp.arange(Skv)[None, :] <= q_pos[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if kv_len is not None:
+        lm = jnp.arange(Skv)[None, :] < kv_len[:, None]
+        s = jnp.where(lm[:, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.moveaxis(_gqa_out(p, v), -2, 1).astype(q.dtype)

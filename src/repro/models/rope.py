@@ -1,0 +1,48 @@
+"""RoPE and M-RoPE (qwen2-vl) rotary position embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    """Inverse frequencies f32[d_head//2]."""
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def rope_cos_sin(positions: jax.Array, d_head: int, theta: float):
+    """positions i32[B, S] -> (cos, sin) f32[B, S, d_head//2]."""
+    ang = positions.astype(jnp.float32)[..., None] * rope_freqs(d_head, theta)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions: jax.Array, d_head: int, theta: float,
+                  sections=(16, 24, 24)):
+    """Qwen2-VL M-RoPE: positions i32[3, B, S] (temporal, height, width);
+    the d_head//2 frequency slots are split into three sections, each rotated
+    by its own position channel (arXiv:2409.12191)."""
+    assert positions.shape[0] == 3
+    freqs = rope_freqs(d_head, theta)                     # [d_head//2]
+    half = d_head // 2
+    assert sum(sections) == half, (sections, half)
+    # section id per frequency slot: 0/1/2
+    sec = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                     total_repeat_length=half)            # [half]
+    # pick the position channel per slot
+    pos = positions.astype(jnp.float32)                   # [3, B, S]
+    pos_per_slot = jnp.take(pos, sec, axis=0)             # [half, B, S]
+    ang = jnp.moveaxis(pos_per_slot, 0, -1) * freqs       # [B, S, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, H, d_head]; cos/sin: [B, S, d_head//2] (broadcast over H).
+    Pairing convention: (x[..., :half], x[..., half:]) — HF 'neox' style."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)

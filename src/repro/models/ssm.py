@@ -1,0 +1,199 @@
+"""Mamba2 / SSD blocks (arXiv:2405.21060), chunked-parallel + recurrent.
+
+Training/prefill use the chunked SSD algorithm: within-chunk quadratic
+(attention-like, MXU-shaped einsums) + an inter-chunk recurrent state scan.
+Decode is the O(1) recurrence. State: h [B, H, P, N] with P = head dim,
+N = ssm_state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or max(1, d_in // 64)
+    P = d_in // H
+    N = cfg.ssm_state
+    return d_in, H, P, N
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N  # conv over (x, B, C)
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z(d_in), x(d_in), B(N), C(N), dt(H)]
+        "w_in": layers.dense_init(ks[0], (d, 2 * d_in + 2 * N + H), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch))
+                   * (1.0 / cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "w_out": layers.dense_init(ks[3], (d_in, d), dtype),
+    }
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype):
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv over time. xbc: [B, S, C], conv_w: [W, C].
+    Returns (y [B,S,C], new_state [B, W-1, C])."""
+    W = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)          # [B, S+W-1, C]
+    y = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(W))
+    y = y + conv_b
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return jax.nn.silu(y), new_state
+
+
+def _split_proj(z_x_b_c_dt, cfg):
+    d_in, H, P, N = ssm_dims(cfg)
+    z = z_x_b_c_dt[..., :d_in]
+    x = z_x_b_c_dt[..., d_in:2 * d_in]
+    Bc = z_x_b_c_dt[..., 2 * d_in:2 * d_in + N]
+    Cc = z_x_b_c_dt[..., 2 * d_in + N:2 * d_in + 2 * N]
+    dt = z_x_b_c_dt[..., 2 * d_in + 2 * N:]
+    return z, x, Bc, Cc, dt
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, h0, chunk: int = 128,
+                unroll: bool = False):
+    """Chunked SSD scan.
+
+    xh: [B, S, H, P], dt: f32[B, S, H], A: f32[H] (negative),
+    Bm/Cm: [B, S, N], h0: f32[B, H, P, N].
+    Returns (y [B,S,H,P] f32, h_final).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    n_chunks = S // Q
+    assert S % Q == 0, (S, Q)
+
+    xf = xh.astype(jnp.float32).reshape(Bsz, n_chunks, Q, H, P)
+    dtf = dt.reshape(Bsz, n_chunks, Q, H)
+    Bf = Bm.astype(jnp.float32).reshape(Bsz, n_chunks, Q, N)
+    Cf = Cm.astype(jnp.float32).reshape(Bsz, n_chunks, Q, N)
+
+    la = dtf * A  # log decay per step [B, nc, Q, H]
+    lacum = jnp.cumsum(la, axis=2)
+
+    def body(h, xs):
+        xc, dtc, bc, cc, lac = xs   # [B,Q,H,P], [B,Q,H], [B,Q,N], ...
+        # intra-chunk: scores[t,s] = (C_t . B_s) * exp(lac_t - lac_s) * dt_s
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)            # [B,Q,Q]
+        dec = jnp.exp(lac[:, :, None, :] - lac[:, None, :, :])  # [B,t,s,H]
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        w = jnp.where(causal[None, :, :, None],
+                      cb[..., None] * dec * dtc[:, None, :, :], 0.0)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xc)
+        # inter-chunk: y_inter[t] = (C_t . h_in) * exp(lac_t)
+        y_inter = jnp.einsum("btn,bhpn->bthp", cc, h) * \
+            jnp.exp(lac)[..., None].transpose(0, 1, 2, 3)
+        # state update: h' = exp(lac_end)*h + sum_s exp(lac_end-lac_s)*dt_s*x_s B_s^T
+        lend = lac[:, -1:, :]                              # [B,1,H]
+        wst = jnp.exp(lend - lac) * dtc                    # [B,Q,H]
+        dh = jnp.einsum("bsh,bshp,bsn->bhpn", wst, xc, bc)
+        h_new = jnp.exp(lend[:, 0])[:, :, None, None] * h + dh
+        return h_new, y_intra + y_inter
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0),
+          jnp.moveaxis(lacum, 1, 0))
+    h_final, ys = jax.lax.scan(body, h0.astype(jnp.float32), xs,
+                               unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def mamba2_forward(p, cfg: ModelConfig, x, cache=None, chunk: int = 128):
+    """Full-sequence forward (train/prefill). x: [B, S, d].
+    Returns (out [B,S,d], new_cache or None)."""
+    B, S, d = x.shape
+    d_in, H, P, N = ssm_dims(cfg)
+    zxbcdt = x @ p["w_in"]
+    z, xs, Bc, Cc, dt = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bc, Cc = (xbc[..., :d_in], xbc[..., d_in:d_in + N],
+                  xbc[..., d_in + N:])
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, H, P)
+    h0 = (cache["ssm"] if cache is not None
+          else jnp.zeros((B, H, P, N), jnp.float32))
+    y, h_final = ssd_chunked(xh, dtf, A, Bc, Cc, h0, chunk=chunk,
+                             unroll=cfg.unroll)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = layers.rms_norm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": h_final, "conv": new_conv.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, cache):
+    """One-token recurrence. x: [B, 1, d]."""
+    B = x.shape[0]
+    d_in, H, P, N = ssm_dims(cfg)
+    zxbcdt = x @ p["w_in"]
+    z, xs, Bc, Cc, dt = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)    # [B, 1, C]
+    # conv over (state || current)
+    window = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+    y = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(y)                            # [B, C]
+    new_conv = window[:, 1:]
+    xs1, Bc1, Cc1 = (xbc1[..., :d_in], xbc1[..., d_in:d_in + N],
+                     xbc1[..., d_in + N:])
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    xh = xs1.reshape(B, H, P).astype(jnp.float32)
+    decay = jnp.exp(dtf * A)                         # [B, H]
+    h = cache["ssm"] * decay[:, :, None, None] + \
+        jnp.einsum("bh,bhp,bn->bhpn", dtf, xh, Bc1.astype(jnp.float32))
+    yh = jnp.einsum("bn,bhpn->bhp", Cc1.astype(jnp.float32), h)
+    yh = yh + xh * p["D"][None, :, None]
+    yv = yh.reshape(B, 1, d_in).astype(x.dtype)
+    yv = yv * jax.nn.silu(z)
+    yv = layers.rms_norm(yv, p["norm"], cfg.norm_eps)
+    out = yv @ p["w_out"]
+    return out, {"ssm": h, "conv": new_conv.astype(cache["conv"].dtype)}
+
+
+def mamba2_reference(p, cfg: ModelConfig, x):
+    """Step-by-step recurrent oracle (tests): same math, no chunking."""
+    B, S, d = x.shape
+    cache = init_mamba2_cache(cfg, B, x.dtype)
+    outs = []
+    for t in range(S):
+        o, cache = mamba2_decode(p, cfg, x[:, t:t + 1], cache)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

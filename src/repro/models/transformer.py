@@ -1,0 +1,402 @@
+"""The decoder stack: pattern-unit scan over composable blocks.
+
+A config's ``pattern_unit()`` (e.g. zamba2: 5x mamba2 + shared_attn) is the
+scan body; the stack runs ``n_units`` copies with stacked per-unit params —
+the Chipyard-style generator at the model level. Shared blocks (zamba2's
+shared attention) live outside the scan and are closed over.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain_residual, constrain_seq_gathered
+from repro.models import attention, ffn, layers, moe, rope, ssm, xlstm
+
+
+# ---------------------------------------------------------------------------
+# Per-block init
+
+
+def init_block(key, kind: str, cfg: ModelConfig, dtype):
+    if kind in ("attn", "shared_attn"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"norm1": jnp.ones((cfg.d_model,), dtype),
+                "attn": attention.init_attn(k1, cfg, dtype),
+                "norm2": jnp.ones((cfg.d_model,), dtype),
+                "ffn": ffn.init_ffn(k2, cfg, dtype)}
+    if kind == "moe":
+        k1, k2 = jax.random.split(key)
+        return {"norm1": jnp.ones((cfg.d_model,), dtype),
+                "attn": attention.init_attn(k1, cfg, dtype),
+                "norm2": jnp.ones((cfg.d_model,), dtype),
+                "moe": moe.init_moe(k2, cfg, dtype)}
+    if kind == "mamba2":
+        return {"norm": jnp.ones((cfg.d_model,), dtype),
+                "mamba": ssm.init_mamba2(key, cfg, dtype)}
+    if kind == "mlstm":
+        return xlstm.init_mlstm_block(key, cfg, dtype)
+    if kind == "slstm":
+        return xlstm.init_slstm_block(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype):
+    if kind in ("attn", "shared_attn", "moe"):
+        return attention.init_kv_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba2":
+        return ssm.init_mamba2_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return xlstm.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Per-block forward / decode. ctx: dict(cos, sin, pos, shared_params)
+
+
+def block_forward(kind, p, cfg: ModelConfig, x, ctx,
+                  cache: Optional[dict]):
+    if kind == "shared_attn":
+        p = ctx["shared_params"]
+    if kind in ("attn", "shared_attn", "moe"):
+        h = constrain_seq_gathered(
+            layers.rms_norm(x, p["norm1"], cfg.norm_eps))
+        a, new_cache = attention.attn_forward(
+            p["attn"], cfg, h, ctx["cos"], ctx["sin"], cache=cache,
+            pos=ctx.get("pos"))
+        x = x + a
+        h = constrain_seq_gathered(
+            layers.rms_norm(x, p["norm2"], cfg.norm_eps))
+        if kind == "moe":
+            y, aux = moe.moe_forward(p["moe"], cfg, h)
+        else:
+            y, aux = ffn.ffn_forward(p["ffn"], cfg, h), 0.0
+        return x + y, new_cache, aux
+    if kind == "mamba2":
+        h = constrain_seq_gathered(
+            layers.rms_norm(x, p["norm"], cfg.norm_eps))
+        y, new_cache = ssm.mamba2_forward(p["mamba"], cfg, h, cache=cache)
+        return x + y, new_cache, 0.0
+    if kind == "mlstm":
+        y, new_cache = xlstm.mlstm_block_forward(
+            p, cfg, constrain_seq_gathered(x), cache=cache)
+        return y, new_cache, 0.0
+    if kind == "slstm":
+        y, new_cache = xlstm.slstm_block_forward(
+            p, cfg, constrain_seq_gathered(x), cache=cache)
+        return y, new_cache, 0.0
+    raise ValueError(kind)
+
+
+def block_decode(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
+    if kind == "shared_attn":
+        p = ctx["shared_params"]
+    if kind in ("attn", "shared_attn", "moe"):
+        h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+        a, new_cache = attention.attn_decode(
+            p["attn"], cfg, h, ctx["cos"], ctx["sin"], cache, ctx["lens"])
+        x = x + a
+        h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            y, _ = moe.moe_forward(p["moe"], cfg, h)
+        else:
+            y = ffn.ffn_decode(p["ffn"], cfg, h)
+        return x + y, new_cache
+    if kind == "mamba2":
+        h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+        y, new_cache = ssm.mamba2_decode(p["mamba"], cfg, h, cache)
+        return x + y, new_cache
+    if kind == "mlstm":
+        return xlstm.mlstm_block_decode(p, cfg, x, cache)
+    if kind == "slstm":
+        return xlstm.slstm_block_decode(p, cfg, x, cache)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stack
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    unit = cfg.pattern_unit()
+    n_units = cfg.n_units
+    k_embed, k_head, k_units, k_shared = jax.random.split(key, 4)
+
+    params: Dict[str, Any] = {}
+    if cfg.n_codebooks:
+        params["embed"] = layers.embed_init(
+            k_embed, cfg.n_codebooks * cfg.vocab, cfg.d_model, dtype
+        ).reshape(cfg.n_codebooks, cfg.vocab, cfg.d_model)
+    else:
+        params["embed"] = layers.embed_init(k_embed, cfg.vocab, cfg.d_model,
+                                            dtype)
+    if not cfg.tie_embeddings:
+        if cfg.n_codebooks:
+            params["head"] = layers.dense_init(
+                k_head, (cfg.n_codebooks, cfg.d_model, cfg.vocab), dtype)
+        else:
+            params["head"] = layers.dense_init(
+                k_head, (cfg.d_model, cfg.vocab), dtype)
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+
+    def init_unit(k):
+        ks = jax.random.split(k, len(unit))
+        return {f"b{j}": init_block(ks[j], kind, cfg, dtype)
+                for j, kind in enumerate(unit)
+                if kind != "shared_attn"}
+
+    unit_keys = jax.random.split(k_units, n_units)
+    params["units"] = jax.vmap(init_unit)(unit_keys)
+    if "shared_attn" in unit:
+        params["shared"] = init_block(k_shared, "shared_attn", cfg, dtype)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    unit = cfg.pattern_unit()
+
+    def one_unit():
+        return {f"b{j}": init_block_cache(kind, cfg, batch, max_len, dtype)
+                for j, kind in enumerate(unit)}
+
+    units = [one_unit() for _ in range(cfg.n_units)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+    # per-row context lengths (continuous batching: slots advance
+    # independently)
+    return {"lens": jnp.zeros((batch,), jnp.int32), "units": stacked}
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict):
+    tokens = batch["tokens"]
+    if cfg.n_codebooks:
+        # tokens: [B, S, nc] -> sum of per-codebook embeddings (gathered
+        # from the flattened [nc*V, d] table, then reduced over nc)
+        nc, V, d = params["embed"].shape
+        flat = params["embed"].reshape(nc * V, d)
+        idx = tokens + (jnp.arange(nc) * V)[None, None, :]
+        x = jnp.sum(jnp.take(flat, idx, axis=0), axis=2)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend == "vision_stub" and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(x.dtype)
+        pad = x.shape[1] - ve.shape[1]
+        x = x + jnp.pad(ve, ((0, 0), (0, pad), (0, 0)))
+    if cfg.frontend == "audio_stub" and "audio_embeds" in batch:
+        ae = batch["audio_embeds"].astype(x.dtype)
+        pad = x.shape[1] - ae.shape[1]
+        x = x + jnp.pad(ae, ((0, 0), (0, pad), (0, 0)))
+    return x
+
+
+def _positions(cfg: ModelConfig, batch: dict, B: int, S: int,
+               offset=0):
+    if cfg.mrope:
+        if "mrope_positions" in batch:
+            return batch["mrope_positions"]
+        # text-only M-RoPE default: all 3 channels share the position
+        pos = jnp.arange(S)[None, None, :] + offset
+        return jnp.broadcast_to(pos, (3, B, S))
+    pos = jnp.arange(S)[None, :] + offset
+    return jnp.broadcast_to(pos, (B, S))
+
+
+def _rope_tables(cfg: ModelConfig, positions):
+    if cfg.pos_emb != "rope":
+        # identity rotation
+        if cfg.mrope:
+            positions = positions[0]
+        B, S = positions.shape
+        return (jnp.ones((B, S, cfg.d_head // 2), jnp.float32),
+                jnp.zeros((B, S, cfg.d_head // 2), jnp.float32))
+    if cfg.mrope:
+        return rope.mrope_cos_sin(positions, cfg.d_head, cfg.rope_theta,
+                                  sections=_mrope_sections(cfg))
+    return rope.rope_cos_sin(positions, cfg.d_head, cfg.rope_theta)
+
+
+def _mrope_sections(cfg: ModelConfig):
+    half = cfg.d_head // 2
+    t = half // 4
+    rest = half - t
+    h = rest // 2
+    return (t, h, rest - h)
+
+
+def forward(params, cfg: ModelConfig, batch: dict, cache=None):
+    """Full-sequence forward (train / prefill).
+
+    Returns (hidden [B,S,d], aux_loss, new_cache)."""
+    x = _embed_inputs(params, cfg, batch)
+    x = constrain_residual(x)
+    B, S, _ = x.shape
+    start = 0  # prefill always fills [0, S); per-slot merge is engine-side
+    positions = _positions(cfg, batch, B, S, offset=start)
+    cos, sin = _rope_tables(cfg, positions)
+    if cfg.pos_emb == "sin":
+        p1 = positions[0] if cfg.mrope else positions
+        x = x + layers.sinusoidal_positions(p1, cfg.d_model).astype(x.dtype)
+
+    ctx = {"cos": cos, "sin": sin, "pos": start,
+           "shared_params": params.get("shared")}
+    unit = cfg.pattern_unit()
+
+    def unit_body(carry, xs):
+        x, aux = carry
+        unit_p, unit_cache = xs
+        new_caches = {}
+        for j, kind in enumerate(unit):
+            bp = unit_p.get(f"b{j}")
+            bc = unit_cache[f"b{j}"] if unit_cache is not None else None
+            x, nc, a = block_forward(kind, bp, cfg, x, ctx, bc)
+            x = constrain_residual(x)
+            new_caches[f"b{j}"] = nc
+            aux = aux + a
+        return (x, aux), (new_caches if unit_cache is not None else 0)
+
+    body = unit_body
+    if cfg.remat:
+        body = jax.checkpoint(unit_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.unroll:
+        # loop-free lowering for the dry-run cost probes
+        carry = (x, jnp.zeros((), jnp.float32))
+        new_unit_list = []
+        for i in range(cfg.n_units):
+            u_p = jax.tree.map(lambda a: a[i], params["units"])
+            u_c = (jax.tree.map(lambda a: a[i], cache["units"])
+                   if cache is not None else None)
+            carry, ys = body(carry, (u_p, u_c))
+            new_unit_list.append(ys)
+        (x, aux) = carry
+        new_cache = None
+        if cache is not None:
+            new_units = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                     *new_unit_list)
+            new_cache = {"lens": jnp.full_like(cache["lens"], S),
+                         "units": new_units}
+    elif cache is None:
+        (x, aux), _ = jax.lax.scan(
+            lambda c, p: (body(c, (p, None))[0], None),
+            (x, jnp.zeros((), jnp.float32)), params["units"])
+        new_cache = None
+    else:
+        (x, aux), new_units = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["units"], cache["units"]))
+        new_cache = {"lens": jnp.full_like(cache["lens"], S),
+                     "units": new_units}
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, batch_extra=None):
+    """One-token decode. tokens: [B, 1] (or [B, 1, nc]).
+    Per-row positions come from cache['lens']. Returns (logits, new_cache)."""
+    batch = {"tokens": tokens}
+    if batch_extra:
+        batch.update(batch_extra)
+    x = _embed_inputs(params, cfg, batch)
+    B = x.shape[0]
+    lens = cache["lens"]
+    positions = lens[:, None] if not cfg.mrope \
+        else jnp.broadcast_to(lens[None, :, None], (3, B, 1))
+    cos, sin = _rope_tables(cfg, positions)
+    if cfg.pos_emb == "sin":
+        p1 = positions[0] if cfg.mrope else positions
+        x = x + layers.sinusoidal_positions(p1, cfg.d_model).astype(x.dtype)
+
+    ctx = {"cos": cos, "sin": sin, "lens": lens,
+           "shared_params": params.get("shared")}
+    unit = cfg.pattern_unit()
+
+    def unit_body(x, xs):
+        unit_p, unit_cache = xs
+        new_caches = {}
+        for j, kind in enumerate(unit):
+            bp = unit_p.get(f"b{j}")
+            x, nc = block_decode(kind, bp, cfg, x, ctx, unit_cache[f"b{j}"])
+            x = constrain_residual(x)
+            new_caches[f"b{j}"] = nc
+        return x, new_caches
+
+    if cfg.unroll:
+        new_unit_list = []
+        for i in range(cfg.n_units):
+            u_p = jax.tree.map(lambda a: a[i], params["units"])
+            u_c = jax.tree.map(lambda a: a[i], cache["units"])
+            x, ys = unit_body(x, (u_p, u_c))
+            new_unit_list.append(ys)
+        new_units = jax.tree.map(lambda *xs: jnp.stack(xs), *new_unit_list)
+    else:
+        x, new_units = jax.lax.scan(unit_body, x,
+                                    (params["units"], cache["units"]))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = project_logits(params, cfg, x)
+    return logits, {"lens": lens + 1, "units": new_units}
+
+
+def project_logits(params, cfg: ModelConfig, x):
+    """x: [B, S, d] -> logits (fp32 via accumulate-in-f32 dots; operands
+    stay bf16 so XLA never materializes an f32 copy of the vocab matrix).
+    Musicgen: [B, S, nc, V]."""
+    if cfg.n_codebooks:
+        head = params["head"]  # [nc, d, V]
+        return jnp.einsum("bsd,ndv->bsnv", x, head,
+                          preferred_element_type=jnp.float32)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("bsd,dv->bsv", x, params["head"],
+                      preferred_element_type=jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, token_chunk: int = 0):
+    """Next-token CE (+ MoE aux). Chunked over tokens so the [*, V] logits
+    never materialize for the full sequence (vocab up to 202k)."""
+    hidden, aux, _ = forward(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    B, S, d = hidden.shape
+
+    if token_chunk <= 0:
+        # pick a chunk so logits stay ~<=256 MiB fp32 per device pre-shard
+        token_chunk = max(1, min(S, int(2 ** 26 // max(cfg.vocab, 1)) or 1))
+    n_chunks = max(1, S // token_chunk)
+    while S % n_chunks:
+        n_chunks -= 1
+    tc = S // n_chunks
+
+    hid = hidden.reshape(B, n_chunks, tc, d).swapaxes(0, 1)
+    lab = labels.reshape((B, n_chunks, tc) + labels.shape[2:]).swapaxes(0, 1)
+    if mask is not None:
+        msk = mask.reshape(B, n_chunks, tc).swapaxes(0, 1)
+    else:
+        msk = jnp.ones((n_chunks, B, tc), jnp.float32)
+
+    def chunk_loss(_, xs):
+        h, y, m = xs
+        logits = project_logits(params, cfg, constrain_seq_gathered(h))
+        if cfg.n_codebooks:
+            m = m[..., None] * jnp.ones(cfg.n_codebooks)
+        ce = layers.softmax_cross_entropy(logits, y, m)
+        return 0.0, (ce, jnp.sum(m))
+
+    chunk = jax.checkpoint(chunk_loss,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    _, (ces, ws) = jax.lax.scan(chunk, 0.0, (hid, lab, msk),
+                                unroll=cfg.unroll)
+    total_w = jnp.maximum(jnp.sum(ws), 1.0)
+    ce = jnp.sum(ces * ws) / total_w
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux, "ppl": jnp.exp(ce)}

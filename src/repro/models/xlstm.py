@@ -1,0 +1,326 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential) with stabilized exponential gating.
+
+mLSTM training uses a blockwise parallel form (flash-style online rescaling
+with the gate-decay bias); decode is the O(1) matrix-memory recurrence.
+sLSTM is a true nonlinear recurrence (block-diagonal R per head) -> lax.scan.
+
+Forget gates use log-sigmoid; input gates are exponential with the running
+stabilizer m (paper App. A). Parallel and recurrent forms are cross-checked
+in tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+
+
+def mlstm_parallel(q, k, v, i_pre, f_pre, block: int = 256,
+                   initial_state=None, return_state: bool = False,
+                   unroll: bool = False):
+    """Blockwise-parallel mLSTM.
+
+    q,k,v: [B, S, H, P]; i_pre/f_pre: f32[B, S, H] gate pre-activations.
+    initial_state: optional (C [B,H,P,P], n [B,H,P], m [B,H]) from prefix.
+    Returns y [B,S,H,P] (+ final state if return_state).
+    """
+    B, S, H, P = q.shape
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))         # [B,S,H]
+    i_pre = i_pre.astype(jnp.float32)
+    scale = P ** -0.5
+
+    blk = min(block, S)
+    nb = S // blk
+    assert S % blk == 0, (S, blk)
+
+    qb = q.reshape(B, nb, blk, H, P)
+    kb = k.reshape(B, nb, blk, H, P)
+    vb = v.reshape(B, nb, blk, H, P)
+    # BLOCK-LOCAL inclusive cumsum of log-forget: the carried state already
+    # folds in all decay up to the block start, so inter-block decay to
+    # query t is F_local[t] (global offsets cancel for intra-block terms).
+    Fb = jnp.cumsum(logf.reshape(B, nb, blk, H), axis=2)
+    ib = i_pre.reshape(B, nb, blk, H)
+
+    if initial_state is not None:
+        C0, n0, m0 = initial_state
+        C0, n0, m0 = (C0.astype(jnp.float32), n0.astype(jnp.float32),
+                      m0.astype(jnp.float32))
+    else:
+        C0 = jnp.zeros((B, H, P, P), jnp.float32)
+        n0 = jnp.zeros((B, H, P), jnp.float32)
+        m0 = jnp.full((B, H), NEG_INF, jnp.float32)
+
+    def q_block(carry_state, xs):
+        (C_in, n_in, m_in) = carry_state
+        qc, kc, vc, Fc, ic = xs   # [B,blk,H,*]
+        qf = qc.astype(jnp.float32) * scale
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+
+        # intra-block decay bias: D[t,s] = F[t]-F[s]+i[s], s<=t
+        Db = Fc[:, :, None, :] - Fc[:, None, :, :] + ic[:, None, :, :]
+        causal = jnp.tril(jnp.ones((blk, blk), bool))
+        Db = jnp.where(causal[None, :, :, None], Db, NEG_INF)
+        # inter contribution enters with bias F[t] (+ carried m_in)
+        m_inter = Fc + m_in[:, None, :]                           # [B,blk,H]
+        m_t = jnp.maximum(jnp.max(Db, axis=2), m_inter)           # [B,blk,H]
+
+        s_qk = jnp.einsum("bthp,bshp->btsh", qf, kf)
+        Sm = s_qk * jnp.exp(Db - m_t[:, :, None, :])
+        num = jnp.einsum("btsh,bshp->bthp", Sm, vf)
+        den = jnp.sum(Sm, axis=2)                                 # [B,blk,H]
+
+        # inter-block: state C_in contributes exp(F[t]+m_in - m_t) * q C_in
+        w_int = jnp.exp(m_inter - m_t)                            # [B,blk,H]
+        num = num + jnp.einsum("bthp,bhpe->bthe", qf, C_in) * w_int[..., None]
+        den = den + jnp.einsum("bthp,bhp->bth", qf, n_in) * w_int
+
+        n_t = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        y = num / n_t[..., None]
+
+        # state update to end of block:
+        F_end = Fc[:, -1, :]                                      # [B,H]
+        m_upd_cands = Fc[:, -1:, :] - Fc + ic                     # [B,blk,H]
+        m_new = jnp.maximum(F_end + m_in, jnp.max(m_upd_cands, axis=1))
+        w_st = jnp.exp(m_upd_cands - m_new[:, None, :])           # [B,blk,H]
+        C_new = jnp.exp(F_end + m_in - m_new)[:, :, None, None] * C_in + \
+            jnp.einsum("bsh,bshp,bshe->bhpe", w_st, kf, vf)
+        n_new = jnp.exp(F_end + m_in - m_new)[:, :, None] * n_in + \
+            jnp.einsum("bsh,bshp->bhp", w_st, kf)
+        return (C_new, n_new, m_new), y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qb, kb, vb, Fb, ib))
+    (Cf, nf, mf), ys = jax.lax.scan(q_block, (C0, n0, m0), xs,
+                                    unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P).astype(q.dtype)
+    if return_state:
+        return y, (Cf, nf, mf)
+    return y
+
+
+def mlstm_step(state, q, k, v, i_pre, f_pre):
+    """One-token recurrence. q,k,v: [B,H,P]; gates f32[B,H].
+    state: (C [B,H,P,P], n [B,H,P], m [B,H])."""
+    C, n, m = state
+    P = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    i_pre = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, i_pre)
+    fw = jnp.exp(logf + m - m_new)
+    iw = jnp.exp(i_pre - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C_new = fw[..., None, None] * C + iw[..., None, None] * \
+        jnp.einsum("bhp,bhe->bhpe", kf, vf)
+    n_new = fw[..., None] * n + iw[..., None] * kf
+    qf = q.astype(jnp.float32) * P ** -0.5
+    num = jnp.einsum("bhp,bhpe->bhe", qf, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qf, n_new)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).astype(q.dtype)
+    return (C_new, n_new, m_new), y
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell (sequential; block-diagonal recurrence per head)
+
+
+def slstm_scan(x_z, x_i, x_f, x_o, R, state0):
+    """x_*: [B, S, H, P] input pre-activations; R: {z,i,f,o}: [H, P, P].
+    state0: (c, n, h, m) each [B, H, P] (m: [B,H]).
+    Returns (y [B,S,H,P], final_state)."""
+
+    def step(state, xs):
+        c, n, h, m = state
+        xz, xi, xf, xo = xs   # [B,H,P]
+        rz = jnp.einsum("bhp,hpe->bhe", h, R["z"])
+        ri = jnp.einsum("bhp,hpe->bhe", h, R["i"])
+        rf = jnp.einsum("bhp,hpe->bhe", h, R["f"])
+        ro = jnp.einsum("bhp,hpe->bhe", h, R["o"])
+        z = jnp.tanh((xz + rz).astype(jnp.float32))
+        i_pre = (xi + ri).astype(jnp.float32)
+        logf = jax.nn.log_sigmoid((xf + rf).astype(jnp.float32))
+        o = jax.nn.sigmoid((xo + ro).astype(jnp.float32))
+        # per-unit stabilizer (m is [B,H,P] here for sLSTM)
+        m_new = jnp.maximum(logf + m, i_pre)
+        fw = jnp.exp(logf + m - m_new)
+        iw = jnp.exp(i_pre - m_new)
+        c_new = fw * c + iw * z
+        n_new = fw * n + iw
+        h_new = (o * c_new / jnp.maximum(n_new, 1e-6)).astype(h.dtype)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (x_z, x_i, x_f, x_o))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+
+
+def init_mlstm_block(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in = 2 * d
+    H = cfg.n_heads
+    P = d_in // H
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_up": layers.dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, d_in)) * 0.25).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": layers.dense_init(ks[2], (d_in, d_in), dtype),
+        "wk": layers.dense_init(ks[3], (d_in, d_in), dtype),
+        "wv": layers.dense_init(ks[4], (d_in, d_in), dtype),
+        "w_if": layers.dense_init(ks[5], (d_in, 2 * H), dtype, scale=0.01),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]
+                                ).astype(jnp.float32),
+        "out_norm": jnp.ones((d_in,), dtype),
+        "w_down": layers.dense_init(ks[6], (d_in, d), dtype),
+    }
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype):
+    d_in = 2 * cfg.d_model
+    H = cfg.n_heads
+    P = d_in // H
+    return {
+        "C": jnp.zeros((batch, H, P, P), jnp.float32),
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "m": jnp.full((batch, H), NEG_INF, jnp.float32),
+        "conv": jnp.zeros((batch, 3, d_in), dtype),
+    }
+
+
+def _mlstm_qkvif(p, cfg, xm, conv_state=None):
+    """Shared projection path. xm: [B,S,d_in]."""
+    from repro.models.ssm import _causal_conv
+    B, S, d_in = xm.shape
+    H = cfg.n_heads
+    P = d_in // H
+    xc, new_conv = _causal_conv(xm, p["conv_w"], p["conv_b"], conv_state)
+    q = (xc @ p["wq"]).reshape(B, S, H, P)
+    k = (xc @ p["wk"]).reshape(B, S, H, P)
+    v = (xm @ p["wv"]).reshape(B, S, H, P)
+    gif = (xc @ p["w_if"]).astype(jnp.float32) + p["b_if"]
+    i_pre, f_pre = gif[..., :H], gif[..., H:]
+    return q, k, v, i_pre, f_pre, new_conv
+
+
+def mlstm_block_forward(p, cfg: ModelConfig, x, cache=None):
+    """x: [B,S,d] -> (out, new_cache)."""
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    up = h @ p["w_up"]
+    d_in = 2 * cfg.d_model
+    xm, z = up[..., :d_in], up[..., d_in:]
+    conv_state = cache["conv"] if cache is not None else None
+    q, k, v, i_pre, f_pre, new_conv = _mlstm_qkvif(p, cfg, xm, conv_state)
+    init_state = None
+    if cache is not None:
+        init_state = (cache["C"], cache["n"], cache["m"])
+    res = mlstm_parallel(q, k, v, i_pre, f_pre, initial_state=init_state,
+                         return_state=cache is not None, unroll=cfg.unroll)
+    if cache is not None:
+        y, (C, n, m) = res
+        new_cache = {"C": C, "n": n, "m": m,
+                     "conv": new_conv.astype(cache["conv"].dtype)}
+    else:
+        y, new_cache = res, None
+    B, S = x.shape[:2]
+    y = y.reshape(B, S, d_in)
+    y = layers.rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = (y * jax.nn.silu(z)) @ p["w_down"]
+    return x + out, new_cache
+
+
+def mlstm_block_decode(p, cfg: ModelConfig, x, cache):
+    """x: [B,1,d]."""
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    up = h @ p["w_up"]
+    d_in = 2 * cfg.d_model
+    xm, z = up[..., :d_in], up[..., d_in:]
+    q, k, v, i_pre, f_pre, new_conv = _mlstm_qkvif(
+        p, cfg, xm, cache["conv"])
+    state = (cache["C"], cache["n"], cache["m"])
+    state, y = mlstm_step(state, q[:, 0], k[:, 0], v[:, 0],
+                          i_pre[:, 0], f_pre[:, 0])
+    C, n, m = state
+    B = x.shape[0]
+    y = y.reshape(B, 1, d_in)
+    y = layers.rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = (y * jax.nn.silu(z)) @ p["w_down"]
+    return x + out, {"C": C, "n": n, "m": m,
+                     "conv": new_conv.astype(cache["conv"].dtype)}
+
+
+def init_slstm_block(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    f_up = max(1, int(round(d * 4 / 3 / 64)) * 64)
+    ks = jax.random.split(key, 8)
+    R = {g: (jax.random.normal(k, (H, P, P)) * P ** -0.5).astype(dtype)
+         for g, k in zip("zifo", jax.random.split(ks[0], 4))}
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_zifo": layers.dense_init(ks[1], (d, 4 * d), dtype),
+        "b_zifo": jnp.concatenate(
+            [jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)), jnp.zeros((d,))]
+        ).astype(jnp.float32),
+        "R": R,
+        "out_norm": jnp.ones((d,), dtype),
+        "w_up": layers.dense_init(ks[2], (d, 2 * f_up), dtype),
+        "w_down": layers.dense_init(ks[3], (f_up, d), dtype),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    z = jnp.zeros((batch, H, P), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def _slstm_core(p, cfg, x, state):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    P = d // H
+    pre = (x @ p["w_zifo"]).astype(jnp.float32) + p["b_zifo"]
+    xz, xi, xf, xo = [pre[..., i * d:(i + 1) * d].reshape(B, S, H, P)
+                      for i in range(4)]
+    y, final = slstm_scan(xz, xi, xf, xo, p["R"], state)
+    return y.reshape(B, S, d).astype(x.dtype), final
+
+
+def slstm_block_forward(p, cfg: ModelConfig, x, cache=None):
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    B = x.shape[0]
+    state = (tuple(cache[k] for k in "cnhm") if cache is not None
+             else tuple(init_slstm_cache(cfg, B, x.dtype)[k] for k in "cnhm"))
+    y, final = _slstm_core(p, cfg, h, state)
+    y = layers.rms_norm(y, p["out_norm"], cfg.norm_eps)
+    f2 = p["w_up"].shape[1] // 2
+    up = y @ p["w_up"]
+    y = (jax.nn.gelu(up[..., :f2]) * up[..., f2:]) @ p["w_down"]
+    out = x + y
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(zip("cnhm", final))
+    return out, new_cache
+
+
+def slstm_block_decode(p, cfg: ModelConfig, x, cache):
+    return slstm_block_forward(p, cfg, x, cache)

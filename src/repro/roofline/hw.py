@@ -1,0 +1,60 @@
+"""Target hardware constants (TPU v5e) for roofline analysis.
+
+Values fixed by the assignment: 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. int8 throughput on v5e is ~2x bf16 (394 TOPS).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_flops: float          # bf16 FLOP/s
+    peak_int8_ops: float       # int8 OP/s
+    hbm_bw: float              # bytes/s
+    ici_bw: float              # bytes/s per link
+    ici_links: int             # links per chip (2D torus -> 4)
+    dcn_bw: float              # bytes/s per chip, cross-pod
+    hbm_gib: float             # HBM capacity per chip
+    vmem_bytes: int            # VMEM per core
+
+
+V5E = Chip(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    peak_int8_ops=394e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    ici_links=4,
+    dcn_bw=6.25e9,   # ~50 Gbit/s per chip over DCN (thin inter-pod link)
+    hbm_gib=16.0,
+    vmem_bytes=128 * 1024 * 1024 // 8,  # 16 MiB usable VMEM
+)
+
+
+def ridge_point(chip: Chip = V5E, dtype_bits: int = 16) -> float:
+    """FLOPs/byte at the memory/compute knee."""
+    peak = chip.peak_flops if dtype_bits >= 16 else chip.peak_int8_ops
+    return peak / chip.hbm_bw
+
+
+def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
+                   n_chips: int, chip: Chip = V5E,
+                   collective_bw: float | None = None) -> dict:
+    """The three-term roofline (seconds) + the dominant bottleneck.
+
+    ``flops``/``hbm_bytes``/``collective_bytes`` are GLOBAL (whole step,
+    all chips); each term divides by aggregate machine capability.
+    """
+    bw = collective_bw if collective_bw is not None else chip.ici_bw
+    t_compute = flops / (n_chips * chip.peak_flops)
+    t_memory = hbm_bytes / (n_chips * chip.hbm_bw)
+    t_collective = (collective_bytes / (n_chips * bw)) if collective_bytes else 0.0
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    terms["bound"] = max(terms, key=lambda k: terms[k] if k != "bound" else -1)
+    terms["step_s_lower_bound"] = max(t_compute, t_memory, t_collective)
+    return terms

@@ -1,0 +1,1 @@
+from repro.serve import engine, kv_cache  # noqa: F401

@@ -1,0 +1,65 @@
+"""KV-cache utilities: sizing, int8 KV quantization, slot management for
+continuous batching."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def kv_bytes(cfg: ModelConfig, batch: int, max_len: int,
+             bytes_per_el: int = 2) -> int:
+    """Decode-cache HBM footprint (the decode roofline's memory stream)."""
+    n_attn = sum(1 for k in cfg.layer_kinds()
+                 if k in ("attn", "shared_attn", "moe"))
+    return (2 * n_attn * batch * max_len * cfg.n_kv_heads * cfg.d_head
+            * bytes_per_el)
+
+
+def quantize_kv(cache_k: jax.Array, cache_v: jax.Array):
+    """int8 per-(token, head) KV quantization — halves the decode memory
+    stream again on top of the paper's sparsity (kv_quant serve option)."""
+    def q(x):
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        return (jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8),
+                scale.astype(jnp.float32))
+
+    return q(cache_k), q(cache_v)
+
+
+def dequantize_kv(kq, scale, dtype=jnp.bfloat16):
+    return (kq.astype(jnp.float32) * scale).astype(dtype)
+
+
+@dataclasses.dataclass
+class SlotAllocator:
+    """Fixed-slot continuous batching: requests claim a batch row; freed on
+    completion. (Paged-attention block tables are out of scope — slots are
+    whole rows, which matches the fixed-shape jit'd decode step.)"""
+
+    n_slots: int
+
+    def __post_init__(self):
+        self.free: List[int] = list(range(self.n_slots))
+        self.active: dict = {}
+
+    def alloc(self, request_id) -> Optional[int]:
+        if not self.free:
+            return None
+        slot = self.free.pop(0)
+        self.active[request_id] = slot
+        return slot
+
+    def release(self, request_id) -> None:
+        slot = self.active.pop(request_id)
+        self.free.append(slot)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)

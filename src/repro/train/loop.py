@@ -1,0 +1,156 @@
+"""Training loop: jit'd train_step with microbatch accumulation, mixed
+precision, donation, and mesh-aware shardings."""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.dist import sharding as shd
+from repro.models import transformer
+from repro.train import optimizer as opt
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+    _, update = opt.make_optimizer(tcfg)
+
+    def loss_fn(params, batch):
+        loss, metrics = transformer.loss_fn(params, cfg, batch)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            n = tcfg.microbatch
+
+            def micro(carry, mb):
+                acc_g, acc_l = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), m
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), ms = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss / n
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        grads, gnorm = opt.clip_by_global_norm(grads, tcfg.grad_clip)
+        params, opt_state = update(params, grads, opt_state, tcfg)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def compile_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
+                       params_shapes, opt_shapes, batch_shapes,
+                       policy: shd.ShardingPolicy = shd.ShardingPolicy(),
+                       donate: bool = True):
+    """jit + shard the train step for ``mesh``. Returns (fn, shardings)."""
+    train_step = make_train_step(cfg, tcfg)
+    p_sh = shd.params_shardings(params_shapes, cfg, mesh, policy)
+    o_sh = _opt_shardings(opt_shapes, p_sh, mesh)
+    b, s = _batch_dims(batch_shapes)
+    x_sh = shd.batch_shardings(cfg, mesh, b, s, "train", policy)
+    x_sh = {k: x_sh[k] for k in batch_shapes}
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, x_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, (p_sh, o_sh, x_sh)
+
+
+def _batch_dims(batch_shapes) -> Tuple[int, int]:
+    t = batch_shapes["tokens"]
+    return t.shape[0], t.shape[1]
+
+
+def _opt_shardings(opt_shapes, p_sh, mesh: Mesh):
+    """Optimizer state inherits param shardings where shapes match; the
+    int8-moment blocks ((nb, BLOCK) layout) and scalars replicate."""
+    flat_p = jax.tree.leaves(p_sh)
+    rep = NamedSharding(mesh, P())
+    # int8 moment blocks are (nb, BLOCK): shard nb across as many mesh axes
+    # as divide it (keeps llama4's optimizer state at ~2.25B/param/chip
+    # instead of replicated); small leaves (norms, biases) replicate.
+    axis_sets = [tuple(mesh.axis_names)]
+    for i in range(1, len(mesh.axis_names)):
+        axis_sets.append(tuple(mesh.axis_names[i:]))
+    axis_sets.append(tuple(mesh.axis_names[-1:]))
+
+    def _block_sharding(leaf):
+        if leaf.ndim != 2:
+            return rep
+        sizes = dict(mesh.shape)
+        for axes in axis_sets:
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            if n > 1 and leaf.shape[0] % n == 0:
+                return NamedSharding(mesh, P(axes, None))
+        return rep
+
+    if hasattr(opt_shapes, "_fields"):  # NamedTuple (AdamState/Adam8State)
+        vals = []
+        for name in opt_shapes._fields:
+            sub = getattr(opt_shapes, name)
+            if name == "step":
+                vals.append(rep)
+            elif name in ("m", "v"):
+                # fp32 moments: identical tree -> inherit param shardings
+                leaves, tdef = jax.tree.flatten(sub)
+                vals.append(tdef.unflatten(list(flat_p)))
+            else:
+                vals.append(jax.tree.map(_block_sharding, sub))
+        return type(opt_shapes)(*vals)
+    return jax.tree.map(lambda l: rep, opt_shapes)
+
+
+def run_training(model, cfg: ModelConfig, tcfg: TrainConfig, source,
+                 steps: int, params=None, opt_state=None, start_step: int = 0,
+                 guard=None, on_checkpoint=None, log_every: int = 10):
+    """Single-host training driver (examples / e2e benches)."""
+    init, update = opt.make_optimizer(tcfg)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(tcfg.seed))
+    if opt_state is None:
+        opt_state = init(params)
+    train_step = jax.jit(make_train_step(cfg, tcfg))
+
+    history = []
+    it = source.iterate(start=start_step)
+    t0 = time.time()
+    for step in range(start_step, steps):
+        cursor, np_batch = next(it)
+        batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append((step, m))
+        if guard is not None and guard.should_stop:
+            if on_checkpoint:
+                on_checkpoint(step + 1, params, opt_state)
+            break
+        if on_checkpoint and (step + 1) % tcfg.checkpoint_every == 0:
+            on_checkpoint(step + 1, params, opt_state)
+    dt = time.time() - t0
+    return params, opt_state, {"history": history, "wall_s": dt,
+                               "steps_done": step + 1 - start_step}

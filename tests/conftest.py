@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device (the dry-run sets its own device count in a
+# subprocess); keep x64 off and make CPU deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

@@ -1,0 +1,18 @@
+"""Distribution-layer tests (8 fake devices, in a subprocess so the forced
+device count doesn't leak into other tests)."""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_distribution_checks_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "dist_worker.py")],
+        capture_output=True, text=True, timeout=560, cwd=REPO, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "ALL DIST CHECKS PASSED" in r.stdout

@@ -1,0 +1,118 @@
+"""Launch + roofline unit tests (no multi-device compile — the dry-run
+itself is exercised via its artifacts and the sweep; here we test the
+pure logic: input specs, HLO collective parsing, roofline math)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.roofline import analysis, hw
+
+
+def _dryrun():
+    # importing repro.launch.dryrun sets XLA_FLAGS; safe here because the
+    # device count only binds at first jax backend init (conftest already
+    # initialized the single-CPU backend).
+    from repro.launch import dryrun
+    return dryrun
+
+
+def test_input_specs_train_shapes():
+    dr = _dryrun()
+    cfg = get_config("llama3.2-1b")
+    specs = dr.input_specs(cfg, "train_4k")["batch"]
+    assert specs["tokens"].shape == (256, 4096)
+    assert specs["labels"].dtype == jnp.int32
+    assert specs["mask"].shape == (256, 4096)
+
+
+def test_input_specs_decode_cache():
+    dr = _dryrun()
+    cfg = get_config("granite-34b")
+    specs = dr.input_specs(cfg, "decode_32k")
+    assert specs["tokens"].shape == (128, 1)
+    kv = specs["cache"]["units"]["b0"]["k"]
+    assert kv.shape == (88, 128, 32768, 1, 128)  # MQA kv=1
+    assert specs["cache"]["lens"].shape == (128,)
+
+
+def test_input_specs_vlm_frontend_stub():
+    dr = _dryrun()
+    cfg = get_config("qwen2-vl-72b")
+    specs = dr.input_specs(cfg, "prefill_32k")["batch"]
+    assert "vision_embeds" in specs and "mrope_positions" in specs
+    assert specs["mrope_positions"].shape == (3, 32, 32768)
+
+
+def test_input_specs_audio_codebooks():
+    dr = _dryrun()
+    cfg = get_config("musicgen-medium")
+    specs = dr.input_specs(cfg, "train_4k")["batch"]
+    assert specs["tokens"].shape == (256, 4096, 4)
+
+
+def test_parse_collectives_counts_bytes():
+    dr = _dryrun()
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=[16,16]<=[256]
+  %ar = f32[64]{0} all-reduce(%y), to_apply=%add
+  %rs.1 = f32[4,4]{1,0} reduce-scatter(%z), dimensions={0}
+  %cp = bf16[8]{0} collective-permute(%w)
+  %notacoll = f32[2,2]{1,0} add(%a, %b)
+"""
+    out = dr.parse_collectives(hlo)
+    assert out["counts"] == {"all-gather": 1, "all-reduce": 1,
+                             "reduce-scatter": 1, "collective-permute": 1}
+    assert out["bytes_by_type"]["all-gather"] == 16 * 1024 * 2
+    assert out["bytes_by_type"]["all-reduce"] == 64 * 4
+
+
+def test_roofline_terms_dominance():
+    # clearly memory-bound case
+    t = hw.roofline_terms(flops=1e12, hbm_bytes=1e13, collective_bytes=0,
+                          n_chips=256)
+    assert t["bound"] == "memory_s"
+    # clearly collective-bound case
+    t2 = hw.roofline_terms(flops=1e12, hbm_bytes=1e10,
+                           collective_bytes=1e13, n_chips=256)
+    assert t2["bound"] == "collective_s"
+
+
+def test_model_flops_decode_vs_train():
+    cfg = get_config("llama3.2-1b")
+    f_train = analysis.model_flops(cfg, "train_4k")
+    f_dec = analysis.model_flops(cfg, "decode_32k")
+    # train: 6*N*B*S tokens; decode: 2*N*B
+    assert f_train / f_dec == pytest.approx(
+        3 * 256 * 4096 / 128, rel=1e-6)
+
+
+def test_analytic_flops_cover_recurrent_families():
+    for arch in ("zamba2-2.7b", "xlstm-125m"):
+        cfg = get_config(arch)
+        f = analysis.analytic_hlo_flops(cfg, "train_4k")
+        assert f > analysis.model_flops(cfg, "train_4k")  # attn/ssd extras
+
+
+def test_slstm_correction_only_for_xlstm():
+    assert analysis.slstm_correction_flops(
+        get_config("xlstm-125m"), "train_4k") > 0
+    assert analysis.slstm_correction_flops(
+        get_config("llama3.2-1b"), "train_4k") == 0
+
+
+def test_non_embed_params_moe_active():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    n_active = analysis.non_embed_params(cfg, active_only=True)
+    n_total = analysis.non_embed_params(cfg, active_only=False)
+    assert n_total > 10 * n_active  # 128 experts, top-1
+
+
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_shapes_table(shape_name):
+    sh = SHAPES[shape_name]
+    assert sh["kind"] in ("train", "prefill", "decode")
+    assert sh["seq"] * sh["batch"] > 0

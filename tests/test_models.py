@@ -1,0 +1,209 @@
+"""Model-layer correctness: flash vs naive attention, chunked-vs-recurrent
+SSM/mLSTM consistency, MoE dispatch vs dense oracle, decode==forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.models import Model, flash, moe, ssm, xlstm
+
+
+def test_blockwise_attention_matches_reference():
+    key = jax.random.PRNGKey(0)
+    B, Sq, Kv, G, Dh = 2, 33, 2, 3, 16
+    Skv = 33
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, Kv, G, Dh))
+    k = jax.random.normal(ks[1], (B, Skv, Kv, Dh))
+    v = jax.random.normal(ks[2], (B, Skv, Kv, Dh))
+    out = flash.blockwise_attention(q, k, v, causal=True, block_kv=8)
+    ref = flash.reference_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_attention_kv_len_mask():
+    key = jax.random.PRNGKey(1)
+    B, Kv, G, Dh, Skv = 3, 2, 2, 8, 40
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, Kv, G, Dh))
+    k = jax.random.normal(ks[1], (B, Skv, Kv, Dh))
+    v = jax.random.normal(ks[2], (B, Skv, Kv, Dh))
+    kv_len = jnp.array([1, 17, 40])
+    out = flash.blockwise_attention(q, k, v, causal=False, kv_len=kv_len,
+                                    block_kv=16)
+    ref = flash.reference_attention(q, k, v, causal=False, kv_len=kv_len)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_mamba2_chunked_matches_recurrent():
+    cfg = get_config("zamba2-smoke")
+    key = jax.random.PRNGKey(2)
+    p = ssm.init_mamba2(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, cfg.d_model)) * 0.5
+    y_par, _ = ssm.mamba2_forward(p, cfg, x, chunk=8)
+    y_rec = ssm.mamba2_reference(p, cfg, x)
+    np.testing.assert_allclose(y_par, y_rec, rtol=1e-4, atol=1e-4)
+
+
+def test_mamba2_prefill_state_continues_decode():
+    cfg = get_config("zamba2-smoke")
+    key = jax.random.PRNGKey(4)
+    p = ssm.init_mamba2(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 12, cfg.d_model)) * 0.5
+    # full forward over 12 steps
+    y_full, _ = ssm.mamba2_forward(p, cfg, x, chunk=4)
+    # prefill 8 then decode 4
+    cache = ssm.init_mamba2_cache(cfg, 1, jnp.float32)
+    y_pre, cache = ssm.mamba2_forward(p, cfg, x[:, :8], cache=cache, chunk=4)
+    outs = [y_pre]
+    for t in range(8, 12):
+        o, cache = ssm.mamba2_decode(p, cfg, x[:, t:t + 1], cache)
+        outs.append(o)
+    y_inc = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(y_full, y_inc, rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_parallel_matches_recurrent():
+    B, S, H, P = 2, 24, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    q = jax.random.normal(ks[0], (B, S, H, P))
+    k = jax.random.normal(ks[1], (B, S, H, P))
+    v = jax.random.normal(ks[2], (B, S, H, P))
+    i_pre = jax.random.normal(ks[3], (B, S, H))
+    f_pre = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    y_par, state_par = xlstm.mlstm_parallel(q, k, v, i_pre, f_pre, block=8,
+                                            return_state=True)
+    # recurrent
+    state = (jnp.zeros((B, H, P, P)), jnp.zeros((B, H, P)),
+             jnp.full((B, H), xlstm.NEG_INF))
+    ys = []
+    for t in range(S):
+        state, y = xlstm.mlstm_step(state, q[:, t], k[:, t], v[:, t],
+                                    i_pre[:, t], f_pre[:, t])
+        ys.append(y)
+    y_rec = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y_par, y_rec, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(state_par[0], state[0], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(state_par[1], state[1], rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_initial_state_resume():
+    """parallel(x[0:S]) == parallel(x[0:h]) -> parallel(x[h:S], state)."""
+    B, S, H, P = 1, 16, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    q = jax.random.normal(ks[0], (B, S, H, P))
+    k = jax.random.normal(ks[1], (B, S, H, P))
+    v = jax.random.normal(ks[2], (B, S, H, P))
+    ip = jax.random.normal(ks[3], (B, S, H))
+    fp = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    y_full = xlstm.mlstm_parallel(q, k, v, ip, fp, block=4)
+    y1, st = xlstm.mlstm_parallel(q[:, :8], k[:, :8], v[:, :8], ip[:, :8],
+                                  fp[:, :8], block=4, return_state=True)
+    y2 = xlstm.mlstm_parallel(q[:, 8:], k[:, 8:], v[:, 8:], ip[:, 8:],
+                              fp[:, 8:], block=4, initial_state=st)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_dispatch_matches_dense_reference():
+    cfg = get_config("moonshot-v1-smoke")
+    # generous capacity so nothing drops -> exact match with dense oracle
+    cfg2 = ModelConfig(**{**cfg.__dict__, "name": "t", "capacity_factor": 8.0})
+    key = jax.random.PRNGKey(8)
+    p = moe.init_moe(key, cfg2, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 8, cfg2.d_model))
+    y, aux = moe.moe_forward(p, cfg2, x)
+    y_ref = moe.moe_reference(p, cfg2, x)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+    assert aux.shape == ()
+
+
+def test_moe_capacity_drops_are_bounded():
+    cfg = get_config("moonshot-v1-smoke")
+    key = jax.random.PRNGKey(10)
+    p = moe.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 16, cfg.d_model))
+    y, _ = moe.moe_forward(p, cfg, x)
+    assert jnp.all(jnp.isfinite(y))
+
+
+@pytest.mark.parametrize("name", ["llama3.2-1b-smoke", "zamba2-smoke",
+                                  "xlstm-smoke", "musicgen-smoke"])
+def test_prefill_then_decode_matches_forward(name):
+    """Teacher-forced decode after prefill reproduces full-forward logits."""
+    cfg = get_config(name)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(12))
+    B, S = 1, 12
+    shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+    toks = jax.random.randint(jax.random.PRNGKey(13), shape, 0, cfg.vocab)
+    logits_full, _ = m.forward(params, {"tokens": toks})
+
+    cache = m.init_cache(B, 16, jnp.float32)
+    pre = 8
+    _, cache = m.prefill(params, {"tokens": toks[:, :pre]}, cache)
+    errs = []
+    for t in range(pre, S):
+        lg, cache = m.decode_step(params, toks[:, t:t + 1], cache)
+        errs.append(np.max(np.abs(np.asarray(lg[:, 0] - logits_full[:, t]))))
+    assert max(errs) < 2e-3, errs
+
+
+def test_param_count_formula_close():
+    """Analytic param_count within 2% of actual (excl. small norms)."""
+    for name in ["llama3.2-1b-smoke", "granite-34b-smoke",
+                 "moonshot-v1-smoke"]:
+        cfg = get_config(name)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        actual = m.param_count(params)
+        est = cfg.param_count()
+        assert abs(est - actual) / actual < 0.05, (name, est, actual)
+
+
+def test_nectar_model_is_1p7m():
+    cfg = get_config("nectar-relu-llama-1.7m")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    n = m.param_count(params)
+    assert 1.2e6 < n < 2.2e6, n  # the paper's "1.7M" model
+
+
+# ---------------------------------------------------------------------------
+# MoE routing invariants (hypothesis)
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), t=st.sampled_from([8, 16, 32]),
+       topk=st.sampled_from([1, 2]))
+def test_moe_route_conservation(seed, t, topk):
+    """Every (expert, slot) holds at most one assignment; each token is
+    assigned at most top_k slots; gates are normalized and zero on empty
+    slots."""
+    from repro.configs import get_config
+    from repro.configs.base import ModelConfig
+    from repro.models import moe as moe_mod
+
+    cfg = ModelConfig(**{**get_config("moonshot-v1-smoke").__dict__,
+                         "name": "t", "top_k": topk})
+    E = cfg.n_experts
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (t, E))
+    cap = moe_mod.capacity(t, cfg)
+    table, gates, aux = moe_mod.route(logits, cfg, cap)
+    tb = np.asarray(table)
+    gt = np.asarray(gates)
+    # empty slots marked with sentinel t and zero gate
+    assert ((tb == t) == (gt == 0.0)).all()
+    # each token appears at most top_k times
+    counts = np.bincount(tb[tb < t], minlength=t)
+    assert (counts <= topk).all()
+    # gates for a token sum to <= 1 (normalized over its kept slots)
+    sums = np.zeros(t)
+    np.add.at(sums, tb[tb < t], gt[tb < t])
+    assert (sums <= 1.0 + 1e-5).all()
+    assert np.isfinite(float(aux))

@@ -1,0 +1,313 @@
+"""Substrate tests: quant/sparsity properties, optimizer, compression,
+checkpoint/resume determinism, data pipeline, fault handling, prefetcher."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import TrainConfig
+from repro.core import nmce, prefetch, quant, sparsity
+from repro.dist import compression
+from repro.train import checkpoint, data, fault, optimizer as opt
+
+
+# ---------------------------------------------------------------------------
+# quant
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), per_channel=st.booleans())
+def test_quant_roundtrip_bounded(seed, per_channel):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32, 64))
+    qt = quant.quantize_int8(x, axis=1 if per_channel else None)
+    err = jnp.abs(qt.dequantize() - x)
+    bound = qt.scale / 2 * 1.001
+    assert jnp.all(err <= jnp.broadcast_to(bound, err.shape) + 1e-6)
+
+
+def test_saturating_mac_matches_hw_semantics():
+    v1 = jnp.full((64,), 127, jnp.int8)
+    rows = jnp.full((4, 64), 127, jnp.int8)
+    out = quant.nmce_dot_stream(v1, rows)
+    assert out.dtype == jnp.int16
+    assert jnp.all(out == quant.INT16_MAX)  # 64*127*127 >> 32767 saturates
+    neg = quant.nmce_dot_stream(v1, -rows)
+    assert jnp.all(neg == quant.INT16_MIN)
+
+
+def test_nmce_bank_plan_covers_all_rows():
+    for rows in (8, 100, 256, 1000):
+        plans = nmce.plan_matvec(rows, nmce.NMCEConfig())
+        assert sum(p.row_count for p in plans) == rows
+        assert plans[0].row_start == 0
+
+
+def test_nmce_speedup_model_reproduces_paper_100x():
+    _, speedup = nmce.speedup_model(4096, 4096)
+    assert 50 < speedup < 200, speedup  # paper: ~100x (Fig. 7 / Table II)
+
+
+# ---------------------------------------------------------------------------
+# sparsity
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), shift=st.floats(-1.0, 2.0))
+def test_relu_sparsity_fraction_counts_zeros(seed, shift):
+    h = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(seed), (64, 128))
+                    - shift)
+    frac = sparsity.sparsity_fraction(h)
+    expected = np.mean(np.asarray(h) == 0)
+    assert abs(float(frac) - expected) < 1e-6
+
+
+def test_gathered_sparse_ffn_exact_when_k_covers_active():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (4, 32))
+    w_up = jax.random.normal(ks[1], (32, 256)) * 0.3
+    w_down = jax.random.normal(ks[2], (256, 32)) * 0.3
+    h = jax.nn.relu(x @ w_up)
+    max_active = int(jnp.max(jnp.sum(h > 0, -1)))
+    y = sparsity.gathered_sparse_ffn(x, w_up, w_down, k=max_active,
+                                     act="relu")
+    np.testing.assert_allclose(y, sparsity.dense_ffn(x, w_up, w_down,
+                                                     act="relu"),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_predictor_learns_active_sets():
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    d, f = 32, 128
+    w_up = jax.random.normal(ks[0], (d, f)) * 0.5
+    xs = jax.random.normal(ks[1], (256, d))
+    hs = jax.nn.relu(xs @ w_up)
+    pred = sparsity.SparsityPredictor.init(ks[2], d, f, rank=32)
+    r0 = float(pred.recall_at_k(xs, hs, k=32))
+    pred = sparsity.train_predictor(pred, xs, hs, lr=2e-1, steps=1500)
+    r1 = float(pred.recall_at_k(xs, hs, k=32))
+    assert r1 > r0 + 0.2, (r0, r1)
+
+
+def test_ffn_traffic_model_halves_reads():
+    """Paper: activation sparsity 'halves weight reads'. With 90% sparsity
+    on a GLU FFN the total weight bytes drop to ~(2+0.1)/3 ~= 0.70; on the
+    paper's non-GLU ReLU net, with a predictor, to ~0.1 (>=2x)."""
+    d, f = 2048, 8192
+    dense = sparsity.ffn_weight_bytes(d, f, 1, glu=False, active_frac=1.0)
+    sparse = sparsity.ffn_weight_bytes_predicted(
+        d, f, 1, glu=False, active_frac=0.1, predictor_rank=64)
+    assert dense / sparse >= 2.0, dense / sparse
+
+
+# ---------------------------------------------------------------------------
+# prefetch (best-offset)
+
+
+@pytest.mark.parametrize("stride", [1, 2, 3, 7])
+def test_best_offset_learns_stride(stride):
+    s = prefetch.BestOffsetScheduler(offsets=range(1, 9))
+    off = s.train_on_stream(prefetch.strided_stream(600, stride))
+    assert off == stride, (off, stride)
+
+
+def test_best_offset_disables_on_random_stream():
+    rng = np.random.default_rng(0)
+    s = prefetch.BestOffsetScheduler(offsets=range(1, 9), bad_score=4)
+    off = s.train_on_stream(list(rng.integers(0, 10 ** 6, size=600)))
+    assert off == 0  # no stream -> prefetching gated off (paper stride-0)
+
+
+def test_pipeline_lookahead_improves_throughput():
+    eff1 = prefetch.pipeline_efficiency(2.0, 1.0, lookahead=0)
+    eff2 = prefetch.pipeline_efficiency(2.0, 1.0,
+                                        lookahead=prefetch.choose_lookahead(
+                                            2.0, 1.0, vmem_blocks=8))
+    assert eff2 > eff1 * 1.2
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+
+
+def _quad_problem():
+    key = jax.random.PRNGKey(0)
+    target = jax.random.normal(key, (64, 32))
+    params = {"w": jnp.zeros((64, 32))}
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    return params, loss
+
+
+def test_adam8_tracks_adam_fp32():
+    params, loss = _quad_problem()
+    tcfg = TrainConfig(lr=1e-2, warmup_steps=0, total_steps=200,
+                       weight_decay=0.0)
+    p32, s32 = dict(params), opt.adam_init(params)
+    p8, s8 = dict(params), opt.adam8_init(params)
+    for _ in range(50):
+        g32 = jax.grad(loss)(p32)
+        p32, s32 = opt.adam_update(p32, g32, s32, tcfg)
+        g8 = jax.grad(loss)(p8)
+        p8, s8 = opt.adam8_update(p8, g8, s8, tcfg)
+    l32, l8 = float(loss(p32)), float(loss(p8))
+    assert l8 < 0.9 * float(loss(params))  # both make progress
+    assert abs(l8 - l32) / max(l32, 1e-9) < 0.2, (l32, l8)
+
+
+def test_grad_clip_global_norm():
+    g = {"a": jnp.ones((10,)) * 10}
+    clipped, gn = opt.clip_by_global_norm(g, 1.0)
+    norm = float(jnp.linalg.norm(clipped["a"]))
+    assert abs(norm - 1.0) < 1e-5 and float(gn) > 30
+
+
+# ---------------------------------------------------------------------------
+# compression
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_int8_compression_bounded_error(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1000,)) * 3
+    y = compression.compress_roundtrip(x)
+    blocks = np.asarray(jnp.pad(x, (0, (-x.size) % compression.BLOCK))
+                        ).reshape(-1, compression.BLOCK)
+    bound = np.abs(blocks).max(1) / 127.0
+    err = np.abs(np.asarray(y - x))
+    err_blocks = np.pad(err, (0, (-err.size) % compression.BLOCK)
+                        ).reshape(-1, compression.BLOCK)
+    assert np.all(err_blocks.max(1) <= bound * 0.5 + 1e-7)
+
+
+def test_error_feedback_accumulates_residual():
+    g = {"w": jnp.ones((512,)) * 1e-4}  # tiny grads vanish under int8...
+    r = compression.init_residuals(g)
+    total = jnp.zeros((512,))
+    for _ in range(50):  # ...but error feedback preserves them on average
+        comp, r = compression.ef_compress_tree(g, r)
+        total = total + comp["w"]
+    np.testing.assert_allclose(np.asarray(total),
+                               np.asarray(g["w"] * 50), rtol=0.05)
+
+
+def test_compression_ratio_about_quarter():
+    x = jnp.zeros((10000,))
+    assert compression.compression_ratio(x) < 0.27
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume determinism
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    state = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+             "step": jnp.asarray(7)}
+    for s in (1, 2, 3, 4):
+        checkpoint.save(str(tmp_path), s, state, data_cursor=s * 10, keep=2)
+    assert checkpoint.latest_step(str(tmp_path)) == 4
+    restored, man = checkpoint.restore(str(tmp_path), 4, state)
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  state["params"]["w"])
+    assert man["data_cursor"] == 40
+    dirs = sorted(os.listdir(tmp_path))
+    assert dirs == ["step_00000003", "step_00000004"]  # keep=2
+
+
+def test_train_resume_is_bit_exact(tmp_path):
+    """Train 6 steps straight vs 3 + checkpoint + restore + 3: identical."""
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.train.loop import run_training
+
+    cfg = get_config("nectar-relu-llama-1.7m")
+    model = Model(cfg)
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=6, seed=0)
+    src = data.TinyStoriesSynth(data.DataConfig(
+        seq_len=32, batch_size=2, vocab_size=cfg.vocab))
+
+    pA, oA, _ = run_training(model, cfg, tcfg, src, steps=6)
+
+    pB, oB, _ = run_training(model, cfg, tcfg, src, steps=3)
+    checkpoint.save(str(tmp_path), 3, {"p": pB, "o": oB}, data_cursor=3)
+    restored, man = checkpoint.restore(str(tmp_path), 3, {"p": pB, "o": oB})
+    pC, oC, _ = run_training(model, cfg, tcfg, src, steps=6,
+                             params=restored["p"], opt_state=restored["o"],
+                             start_step=man["data_cursor"])
+    for a, c in zip(jax.tree.leaves(pA), jax.tree.leaves(pC)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+
+
+def test_data_deterministic_and_seekable():
+    src = data.TinyStoriesSynth(data.DataConfig(seq_len=64, batch_size=4))
+    b1 = src.batch_at(17)
+    b2 = data.TinyStoriesSynth(data.DataConfig(seq_len=64,
+                                               batch_size=4)).batch_at(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 64)
+    assert b1["tokens"].max() < data.VOCAB_SIZE
+
+
+def test_data_batches_differ():
+    src = data.TinyStoriesSynth(data.DataConfig(seq_len=64, batch_size=4))
+    assert not np.array_equal(src.batch_at(0)["tokens"],
+                              src.batch_at(1)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# fault handling
+
+
+def test_straggler_detector_flags_slow_host():
+    det = fault.StragglerDetector(n_hosts=8, threshold=1.5)
+    for _ in range(20):
+        times = [1.0] * 8
+        times[3] = 2.5
+        flagged = det.observe(times)
+    assert flagged == [3]
+
+
+def test_restart_policy_retries_then_succeeds():
+    calls = {"n": 0}
+
+    def flaky(attempt):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("node died")
+        return 42
+
+    pol = fault.RestartPolicy(max_restarts=5, backoff_s=0.0)
+    assert pol.run(flaky) == 42
+    assert calls["n"] == 3
+
+
+def test_preemption_guard_checkpoints_midway(tmp_path):
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.train.loop import run_training
+
+    cfg = get_config("nectar-relu-llama-1.7m")
+    model = Model(cfg)
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=1, total_steps=10, seed=0)
+    src = data.TinyStoriesSynth(data.DataConfig(
+        seq_len=16, batch_size=2, vocab_size=cfg.vocab))
+    guard = fault.PreemptionGuard()
+    saved = {}
+
+    def on_ckpt(step, params, opt_state):
+        saved["step"] = step
+
+    guard.should_stop = True  # preempt immediately after first step
+    _, _, info = run_training(model, cfg, tcfg, src, steps=10, guard=guard,
+                              on_checkpoint=on_ckpt)
+    assert info["steps_done"] == 1
+    assert saved["step"] == 1
