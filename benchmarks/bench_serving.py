@@ -1,0 +1,138 @@
+"""Serving benchmark: sustained tokens/s and p99 TTFT under a Poisson
+arrival trace of mixed long/short prompts, seed engine vs the paged
+scheduler engine.
+
+The seed engine loses on two fronts this trace exposes:
+  * whole-prompt prefill inside ``add_request`` head-of-line-blocks every
+    decoding request for the full prefill, and
+  * the batch-1 prefill re-jits for every distinct prompt length.
+The paged engine prefills in fixed-shape chunks (one compile, ever)
+interleaved with decode steps.
+
+Emits CSV rows for benchmarks.run and writes BENCH_serving.json.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_serving
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ServeConfig
+from repro.models import Model
+from repro.serve.engine import Engine
+from repro.serve.scheduler import Request
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "BENCH_serving.json")
+
+N_REQUESTS = 16
+MAX_NEW = 16
+ARRIVAL_RATE = 6.0          # requests/s (Poisson)
+LONG_FRAC = 0.3
+
+
+def make_trace(cfg, seed=0):
+    """(arrival_s, Request) pairs: 70% short prompts (4-12 tokens), 30%
+    long (48-64) — every long prompt also gets a unique length, which is
+    exactly the shape of traffic that re-jits the seed prefill."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / ARRIVAL_RATE, N_REQUESTS)
+    arrivals = np.cumsum(gaps)
+    trace = []
+    for i in range(N_REQUESTS):
+        if rng.random() < LONG_FRAC:
+            n = int(rng.integers(48, 65))
+        else:
+            n = int(rng.integers(4, 13))
+        prompt = rng.integers(0, cfg.vocab, size=n, dtype=np.int32)
+        trace.append((float(arrivals[i]),
+                      Request(rid=i, prompt=prompt, max_new=MAX_NEW)))
+    return trace
+
+
+def run_trace(eng: Engine, trace):
+    """Arrival-paced driver: requests become visible at their trace time;
+    the engine ticks whenever there is work."""
+    t0 = time.monotonic()
+    pending = list(trace)
+    served = 0
+    while pending or eng._busy():
+        now = time.monotonic() - t0
+        while pending and pending[0][0] <= now:
+            if eng.add_request(pending[0][1]):
+                pending.pop(0)
+                served += 1
+            else:
+                break
+        if eng._busy():
+            eng.step()
+        elif pending:
+            time.sleep(min(0.005, pending[0][0] - now))
+    wall = time.monotonic() - t0
+    s = eng.metrics.summary()
+    s["wall_s"] = wall
+    s["served"] = served
+    return s
+
+
+def bench_engine(cfg, params, paged: bool, seed=0):
+    scfg = ServeConfig(max_batch=4, max_seq=96, paged=paged, block_size=8,
+                       prefill_chunk=16)
+    eng = Engine(cfg, params, scfg)
+    # warm the decode jit (both modes) so compile time isn't billed to the
+    # trace; per-prompt-length prefill re-jits stay billed to the seed
+    # engine because they are its steady-state behavior, not warmup.
+    warm = Request(rid=-1, prompt=np.arange(4, dtype=np.int32), max_new=2)
+    eng.run([warm], max_steps=50)
+    eng.metrics = type(eng.metrics)(cfg, scfg)
+    return run_trace(eng, make_trace(cfg, seed))
+
+
+def run():
+    cfg = get_config("nectar-relu-llama-1.7m")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    seed_s = bench_engine(cfg, params, paged=False)
+    paged_s = bench_engine(cfg, params, paged=True)
+    speedup = paged_s["tokens_per_s"] / max(seed_s["tokens_per_s"], 1e-9)
+
+    report = {
+        "trace": {"n_requests": N_REQUESTS, "max_new": MAX_NEW,
+                  "arrival_rate_per_s": ARRIVAL_RATE,
+                  "long_prompt_frac": LONG_FRAC},
+        "seed_engine": seed_s,
+        "paged_engine": paged_s,
+        "tokens_per_s_speedup": speedup,
+    }
+    with open(ART, "w") as f:
+        json.dump(report, f, indent=1)
+
+    rows = []
+    for name, s in (("seed", seed_s), ("paged", paged_s)):
+        rows.append((f"serving_{name}_engine",
+                     s["wall_s"] / max(s["generated_tokens"], 1) * 1e6,
+                     f"tok_s={s['tokens_per_s']:.1f};"
+                     f"p99_ttft_ms={s['ttft_p99_ms']:.0f};"
+                     f"p50_ttft_ms={s['ttft_p50_ms']:.0f};"
+                     f"evictions={s['evictions']}"))
+    rows.append(("serving_paged_speedup", 0.0,
+                 f"tokens_per_s_ratio={speedup:.2f}x;target>=1.5x"))
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+    print(f"wrote {ART}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ import sys
 import traceback
 
 SUITES = ["bench_matmul", "bench_sparsity", "bench_prefetch", "bench_e2e",
-          "roofline_report"]
+          "bench_serving", "roofline_report"]
 
 
 def main() -> None:

@@ -1,0 +1,75 @@
+"""Production serving demo: paged KV + chunked-prefill scheduler +
+streaming API.
+
+Shows the pieces the fixed-slot demo (sparse_serving.py) can't:
+  * tokens stream out of ``api.generate`` while other requests decode,
+  * a long prompt no longer head-of-line-blocks short requests (chunked
+    prefill interleaves with decode),
+  * priority scheduling and preemption under a deliberately tiny block
+    pool, with TTFT/TPOT/p99 metrics at the end.
+
+    PYTHONPATH=src python examples/streaming_serve.py
+"""
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ServeConfig
+from repro.models import Model
+from repro.serve import api
+from repro.serve.engine import Engine
+
+
+def main():
+    cfg = get_config("nectar-relu-llama-1.7m")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    scfg = ServeConfig(max_batch=2, max_seq=96, paged=True, block_size=8,
+                       prefill_chunk=16, policy="priority")
+    eng = Engine(cfg, params, scfg)
+    print(f"paged engine: {eng.pool.n_blocks} blocks x "
+          f"{eng.pool.block_size} tokens "
+          f"({eng.pool.capacity_bytes():,.0f} KV bytes)")
+
+    # one token-by-token stream
+    prompt = rng.integers(0, cfg.vocab, size=9, dtype=np.int32)
+    print("streaming generate:", end=" ", flush=True)
+    for tok in api.generate(eng, prompt, max_new=8):
+        print(tok, end=" ", flush=True)
+    print()
+
+    # a long prompt and several short ones through the multiplexing server;
+    # the long prefill streams in chunks between the short requests' decode
+    srv = api.StreamingServer(eng)
+    long_rid = srv.submit(rng.integers(0, cfg.vocab, 64, dtype=np.int32),
+                          max_new=8, priority=0)
+    short_rids = [srv.submit(rng.integers(0, cfg.vocab,
+                                          int(rng.integers(4, 10)),
+                                          dtype=np.int32),
+                             max_new=8, priority=5)
+                  for _ in range(4)]
+    done = srv.drain()
+    print(f"served {len(done)} requests "
+          f"(1 long prompt + {len(short_rids)} short, priority-first)")
+    for rid in sorted(done):
+        r = done[rid]
+        kind = "long " if rid == long_rid else "short"
+        print(f"    req {rid} ({kind}): {len(r.prompt)} prompt toks -> "
+              f"{len(r.tokens_out)} generated")
+
+    s = eng.metrics.summary()
+    print(f"metrics: {s['tokens_per_s']:.1f} tok/s  "
+          f"ttft p50={s['ttft_p50_ms']:.1f}ms p99={s['ttft_p99_ms']:.1f}ms  "
+          f"tpot p50={s['tpot_p50_ms']:.2f}ms  evictions={s['evictions']}")
+    print(f"traffic: weight={s['weight_bytes']:,.0f}B "
+          f"kv={s['kv_bytes']:,.0f}B "
+          f"sparse_saved={s['sparse_savings_bytes']:,.0f}B")
+    print("pool:", eng.pool.stats())
+
+
+if __name__ == "__main__":
+    main()

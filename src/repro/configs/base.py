@@ -177,6 +177,22 @@ class ServeConfig:
     int8_decode: bool = True        # NMCE int8 weight streaming
     kv_quant: bool = False          # int8 KV cache
 
+    # --- paged serving (serve.paged_kv + serve.scheduler) ---
+    paged: bool = False             # block-table paged KV decode
+    block_size: int = 16            # tokens per KV block
+    n_kv_blocks: int = 0            # KV pool size; 0 = max_batch*max_seq/bs
+    prefill_chunk: int = 32         # chunked-prefill tokens per tick
+    policy: str = "fifo"            # request ordering: fifo | priority
+    max_queue: int = 256            # admission control: queue depth bound
+
+    @property
+    def blocks_per_seq(self) -> int:
+        return -(-self.max_seq // self.block_size)
+
+    @property
+    def pool_blocks(self) -> int:
+        return self.n_kv_blocks or self.max_batch * self.blocks_per_seq
+
 
 # --- assigned input shapes (seq_len, global_batch, kind) -------------------
 

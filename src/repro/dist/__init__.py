@@ -1,0 +1,9 @@
+"""Distribution layer: shardings, collectives, gradient compression,
+elastic resharding, ring attention.
+
+Everything here is a no-op on a single device — the model/train/serve code
+calls ``constrain_*`` unconditionally and pays nothing unless an
+``activation_sharding_scope`` is active on a real mesh.
+"""
+
+from repro.dist import compression, sharding  # noqa: F401

@@ -1,0 +1,82 @@
+"""Optimized collectives: distributed-LSE decode attention and
+hierarchical (intra-pod-first, optionally compressed cross-pod) gradient
+all-reduce. Both are shard_map programs over the launch.mesh axes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.flash import NEG_INF
+
+MODEL_AXIS = "model"
+
+
+def lse_combine_decode_attention(mesh: Mesh, q, k, v, kv_len):
+    """Decode attention over a sequence-sharded KV cache without resharding:
+    each 'model' shard computes a partial softmax over its local KV slice
+    and the partials merge with a log-sum-exp combine (psum of weighted
+    numerators / denominators under the global running max).
+
+    q: [B, Kv, G, Dh] (replicated); k, v: [B, S, Kv, Dh] sharded P(None,
+    'model') over seq; kv_len: i32[B]. Returns [B, Kv, G, Dh].
+    """
+    B, Kv, G, Dh = q.shape
+    S = k.shape[1]
+    n = mesh.shape[MODEL_AXIS]
+    assert S % n == 0, (S, n)
+    S_loc = S // n
+
+    def local(qb, kb, vb, kl):
+        idx = jax.lax.axis_index(MODEL_AXIS)
+        pos = idx * S_loc + jnp.arange(S_loc)
+        s = jnp.einsum("bkgd,bskd->bkgs",
+                       qb * jnp.asarray(Dh ** -0.5, qb.dtype), kb,
+                       preferred_element_type=jnp.float32)
+        bias = jnp.where(pos[None, :] < kl[:, None], 0.0, NEG_INF)
+        s = s + bias[:, None, None, :]
+        m_loc = jnp.max(s, axis=-1)                       # [B, Kv, G]
+        m = jax.lax.pmax(m_loc, MODEL_AXIS)               # global max
+        alive = m > NEG_INF / 2
+        p = jnp.exp(s - jnp.where(alive, m, 0.0)[..., None])
+        p = jnp.where(alive[..., None], p, 0.0)
+        l = jax.lax.psum(jnp.sum(p, axis=-1), MODEL_AXIS)
+        o = jnp.einsum("bkgs,bskd->bkgd", p.astype(vb.dtype), vb,
+                       preferred_element_type=jnp.float32)
+        o = jax.lax.psum(o, MODEL_AXIS)
+        return (o / jnp.maximum(l, 1e-30)[..., None]).astype(qb.dtype)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(), P(None, MODEL_AXIS), P(None, MODEL_AXIS),
+                             P()),
+                   out_specs=P(), check_rep=False)
+    return fn(q, k, v, kv_len)
+
+
+def hierarchical_grad_allreduce(mesh: Mesh, grads, compress=None):
+    """Gradient all-reduce across the batch axes: reduce over the fast
+    intra-pod 'data' axis first, then over the slow cross-pod 'pod' axis —
+    optionally through a (encode, decode) compression pair so only the
+    compressed representation crosses the pod interconnect."""
+    inner = tuple(a for a in ("data",) if a in mesh.axis_names)
+    enc, dec = compress if compress is not None else (None, None)
+
+    def one(x):
+        if inner:
+            x = jax.lax.psum(x, inner)
+        if "pod" in mesh.axis_names:
+            if enc is not None:
+                x = dec(jax.lax.psum(enc(x), "pod"))
+            else:
+                x = jax.lax.psum(x, "pod")
+        return x
+
+    def local(g):
+        return jax.tree.map(one, g)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                   check_rep=False)
+    return fn(grads)

@@ -1,0 +1,73 @@
+"""Blockwise int8 codec for optimizer moments and cross-pod gradient
+compression (bitsandbytes-style: per-256-element absmax scales).
+
+Layout: a tensor of ``size`` elements flattens to ``(nb, BLOCK)`` int8 with
+an f32 scale per block — the fixed 2D layout keeps the quantized state
+shardable along the block axis regardless of the source tensor's shape
+(see loop._opt_shardings).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def encode_int8(x):
+    """x: any-shape float -> (q i8[nb, BLOCK], scale f32[nb, 1])."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    nb = (n + BLOCK - 1) // BLOCK
+    pad = nb * BLOCK - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    blocks = flat.reshape(nb, BLOCK)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def decode_int8(q, scale, shape, size):
+    """Inverse of encode_int8: back to f32[shape] (first ``size`` elements)."""
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return flat[:size].reshape(shape)
+
+
+def compress_roundtrip(x):
+    """Quantize-dequantize through the wire format (error injection)."""
+    q, s = encode_int8(x)
+    return decode_int8(q, s, x.shape, x.size).astype(x.dtype)
+
+
+def compression_ratio(x) -> float:
+    """Wire bytes / fp32 bytes for one tensor (int8 payload + f32 scales)."""
+    nb = (x.size + BLOCK - 1) // BLOCK
+    return (nb * BLOCK + nb * 4) / (x.size * 4)
+
+
+# --- error-feedback compression (cross-pod int8_ef gradients) --------------
+
+
+def init_residuals(tree):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+
+
+def ef_compress_tree(tree, residuals):
+    """int8-compress a gradient tree with error feedback: the quantization
+    error is carried into the next step instead of being dropped, so tiny
+    gradients survive on average (1-bit-Adam-style residual accumulation).
+    Returns (compressed_tree, new_residuals)."""
+
+    def one(g, r):
+        y = g.astype(jnp.float32) + r
+        c = compress_roundtrip(y)
+        return c.astype(g.dtype), y - c
+
+    flat_g, tdef = jax.tree.flatten(tree)
+    flat_r = jax.tree.leaves(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([c for c, _ in out]),
+            tdef.unflatten([r for _, r in out]))

@@ -1,0 +1,26 @@
+"""Elastic mesh handling: reshard a param tree onto a (possibly degraded)
+mesh, and compute the degraded mesh shape after replica loss. Values are
+preserved exactly — resharding is pure data movement (device_put between
+NamedShardings)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.dist import sharding as shd
+
+
+def degrade_mesh(shape: Tuple[int, ...], n_failed: int) -> Tuple[int, ...]:
+    """Drop ``n_failed`` replicas from the outermost (replicated batch)
+    axis; the model axis is load-bearing and never shrinks."""
+    return (max(1, shape[0] - n_failed),) + tuple(shape[1:])
+
+
+def reshard_params(params, cfg, mesh, policy=None):
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    sh = shd.params_shardings(shapes, cfg, mesh,
+                              policy or shd.ShardingPolicy(fsdp=True))
+    return jax.tree.map(jax.device_put, params, sh)

@@ -1,0 +1,197 @@
+"""Mesh shardings + activation-sharding constraints.
+
+Axis convention (launch.mesh): ``pod`` and ``data`` are batch axes,
+``model`` is the tensor/sequence-parallel axis. Policy knobs:
+
+  * fsdp           — shard params across the data axis too (ZeRO-3-style)
+  * seq_shard      — Megatron-SP: residuals sharded over seq on 'model'
+  * pod_param_shard— extend fsdp across the pod axis (400B-class models)
+  * shard_kv_seq   — decode KV cache sharded over seq on 'model'
+
+``constrain_*`` are identity unless an ``activation_sharding_scope`` is
+active, so model code calls them unconditionally; single-device tests and
+the serving engine pay nothing.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+BATCH_AXIS_NAMES = ("pod", "data")
+MODEL_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = False
+    seq_shard: bool = False
+    pod_param_shard: bool = False
+    shard_kv_seq: bool = False
+
+
+def _batch_axes(mesh: Mesh, batch: int) -> Tuple[str, ...]:
+    """The batch axes of ``mesh`` whose combined size divides ``batch``."""
+    axes, n = [], 1
+    for a in BATCH_AXIS_NAMES:
+        if a in mesh.axis_names and batch % (n * mesh.shape[a]) == 0:
+            axes.append(a)
+            n *= mesh.shape[a]
+    return tuple(axes)
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape[MODEL_AXIS] if MODEL_AXIS in mesh.axis_names else 1
+
+
+# ---------------------------------------------------------------------------
+# Parameter / input / cache shardings
+
+
+def _param_spec(shape, mesh: Mesh, policy: ShardingPolicy):
+    """Tensor-parallel on 'model' over the largest divisible trailing dim;
+    fsdp shards one remaining dim over the data (and optionally pod) axes.
+    Stacked-unit leaves keep axis 0 (the unit axis) replicated — it is the
+    scan axis."""
+    spec = [None] * len(shape)
+    msize = _model_size(mesh)
+    lo = 1 if len(shape) >= 3 else 0  # skip the [U, ...] stack axis
+    if msize > 1 and len(shape) >= 2:
+        cands = sorted(range(lo, len(shape)),
+                       key=lambda i: shape[i], reverse=True)
+        for i in cands:
+            if shape[i] % msize == 0 and shape[i] >= msize:
+                spec[i] = MODEL_AXIS
+                break
+    if policy.fsdp:
+        axes = tuple(a for a in BATCH_AXIS_NAMES if a in mesh.axis_names)
+        if not policy.pod_param_shard:
+            axes = axes[-1:]
+        dsize = 1
+        for a in axes:
+            dsize *= mesh.shape[a]
+        if dsize > 1:
+            for i in range(lo, len(shape)):
+                if spec[i] is None and shape[i] % dsize == 0 \
+                        and shape[i] >= dsize:
+                    spec[i] = axes if len(axes) > 1 else axes[0]
+                    break
+    return P(*spec)
+
+
+def params_shardings(params_shapes, cfg, mesh: Mesh,
+                     policy: Optional[ShardingPolicy] = None):
+    """NamedSharding tree for a param tree (arrays or ShapeDtypeStructs)."""
+    policy = policy or ShardingPolicy()
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, _param_spec(l.shape, mesh, policy)),
+        params_shapes)
+
+
+def batch_shardings(cfg, mesh: Mesh, b: int, s: int, kind: str,
+                    policy: Optional[ShardingPolicy] = None):
+    """Shardings for every possible model-input key (callers filter)."""
+    bt = _batch_axes(mesh, b)
+    lead = NamedSharding(mesh, P(bt) if bt else P())
+    return {
+        "tokens": lead,
+        "labels": lead,
+        "mask": lead,
+        "vision_embeds": lead,
+        "audio_embeds": lead,
+        "mrope_positions": NamedSharding(mesh, P(None, bt) if bt else P()),
+    }
+
+
+def cache_shardings(cfg, mesh: Mesh, batch: int,
+                    policy: Optional[ShardingPolicy] = None):
+    """Returns fn(path, leaf) -> NamedSharding for tree_map_with_path over a
+    decode cache ({"lens": [B], "units": {bj: leaf [U, B, ...]}})."""
+    bt = _batch_axes(mesh, batch)
+    kv_seq = bool(policy and policy.shard_kv_seq) and _model_size(mesh) > 1
+
+    def fn(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        if names and names[-1] in ("lens", "block_tables"):
+            return NamedSharding(mesh, P(bt) if bt else P())
+        if leaf.ndim >= 2 and bt:
+            spec = [None] * leaf.ndim
+            spec[1] = bt
+            if kv_seq and leaf.ndim >= 3 and names[-1] in ("k", "v") \
+                    and leaf.shape[2] % _model_size(mesh) == 0:
+                spec[2] = MODEL_AXIS
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding scope (used by dryrun lowering; identity otherwise)
+
+_SCOPE: Optional[Tuple[Mesh, ShardingPolicy]] = None
+
+
+@contextlib.contextmanager
+def activation_sharding_scope(mesh: Mesh, policy: ShardingPolicy):
+    global _SCOPE
+    prev = _SCOPE
+    _SCOPE = (mesh, policy)
+    try:
+        yield
+    finally:
+        _SCOPE = prev
+
+
+def _constrain(x, spec_fn):
+    if _SCOPE is None:
+        return x
+    mesh, policy = _SCOPE
+    spec = spec_fn(mesh, policy, x)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_residual(x):
+    """[B, S, d] residual: batch-sharded; seq-sharded over 'model' when the
+    policy asks for Megatron-SP residuals (saves the scan-boundary HBM)."""
+
+    def spec(mesh, policy, x):
+        bt = _batch_axes(mesh, x.shape[0])
+        seq = None
+        if policy.seq_shard and x.ndim >= 3 \
+                and x.shape[1] % _model_size(mesh) == 0 \
+                and x.shape[1] >= _model_size(mesh) > 1:
+            seq = MODEL_AXIS
+        if not bt and seq is None:
+            return None
+        return P(bt if bt else None, seq)
+
+    return _constrain(x, spec)
+
+
+def constrain_seq_gathered(x):
+    """[B, S, d] activation entering a tensor-parallel matmul: sequence must
+    be gathered (replicated over 'model'); batch stays sharded."""
+
+    def spec(mesh, policy, x):
+        bt = _batch_axes(mesh, x.shape[0])
+        return P(bt) if bt else None
+
+    return _constrain(x, spec)
+
+
+def constrain_moe_dispatch(t):
+    """[E, cap, ...] expert-parallel dispatch: experts over 'model'."""
+
+    def spec(mesh, policy, t):
+        if _model_size(mesh) > 1 and t.shape[0] % _model_size(mesh) == 0:
+            return P(MODEL_AXIS)
+        return None
+
+    return _constrain(t, spec)

@@ -19,6 +19,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.5 names it TPUCompilerParams; newer jax renamed it CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -99,7 +102,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                             pltpu.VMEM((Kv, G, Dh), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((B, Kv, G, Dh), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(kv_len.astype(jnp.int32), qg, k, v)

@@ -28,6 +28,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.5 names it TPUCompilerParams; newer jax renamed it CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 from repro.core import quant
 
 DEFAULT_BLOCK_N = 256
@@ -110,7 +113,7 @@ def nmce_matmul(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
         out_specs=pl.BlockSpec((M, bn), lambda n, k: (0, n)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((M, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x_q, w_q, x_scale, w_scale)

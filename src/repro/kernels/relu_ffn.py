@@ -24,6 +24,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.5 names it TPUCompilerParams; newer jax renamed it CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _relu_ffn_kernel(x_ref, wup_ref, wdn_ref, o_ref, acc_ref, *, n_f: int):
     j = pl.program_id(0)
@@ -73,7 +76,7 @@ def relu_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array, *,
         out_specs=pl.BlockSpec((M, d), lambda j: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((M, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((M, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x, w_up, w_down)

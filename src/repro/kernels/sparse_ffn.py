@@ -24,6 +24,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.5 names it TPUCompilerParams; newer jax renamed it CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _sparse_kernel(idx_ref, h_ref, w_row_ref, o_ref, acc_ref, *, n_j: int,
                    row_block: int):
@@ -92,7 +95,7 @@ def sparse_gather_matvec(h: jax.Array, idx: jax.Array, w_down: jax.Array,
         functools.partial(_sparse_kernel, n_j=n_j, row_block=row_block),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(idx, h, wpad)

@@ -14,7 +14,15 @@ from __future__ import annotations
 import numpy as np
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4; meshes are Auto-typed either way
+    from jax.sharding import AxisType
+
+    def _axis_kw(n):
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:
+    def _axis_kw(n):
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,16 +30,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
     devices = np.asarray(jax.devices()[:n]).reshape(shape)
-    return jax.sharding.Mesh(devices, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.sharding.Mesh(devices, axes, **_axis_kw(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh over the first prod(shape) devices (tests, examples)."""
     n = int(np.prod(shape))
     devices = np.asarray(jax.devices()[:n]).reshape(shape)
-    return jax.sharding.Mesh(devices, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.sharding.Mesh(devices, axes, **_axis_kw(len(axes)))
 
 
 def mesh_info(mesh) -> dict:

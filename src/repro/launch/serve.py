@@ -31,6 +31,13 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--dense", action="store_true",
                     help="disable the sparse decode path (ablation)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-KV scheduler engine (chunked prefill, "
+                         "preemption; see repro.serve.scheduler)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--policy", default="fifo",
+                    choices=("fifo", "priority"))
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -45,7 +52,10 @@ def main():
             print(f"[serve] loaded checkpoint step {latest}")
 
     scfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
-                       sparse_decode=not args.dense)
+                       sparse_decode=not args.dense, paged=args.paged,
+                       block_size=args.block_size,
+                       prefill_chunk=args.prefill_chunk,
+                       policy=args.policy)
     eng = Engine(cfg, params, scfg)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
@@ -61,12 +71,18 @@ def main():
     savings = sum(s.sparse_savings_bytes for s in eng.stats)
     total_w = sum(s.weight_bytes + s.sparse_savings_bytes
                   for s in eng.stats)
-    print(json.dumps({
+    out = {
         "requests": len(done),
         "tokens": n_tok,
         "tok_per_s_cpu": n_tok / dt,
         "weight_bytes_saved_frac": savings / max(total_w, 1),
-    }, indent=1))
+    }
+    if args.paged:
+        s = eng.metrics.summary()
+        out.update({"ttft_p99_ms": s["ttft_p99_ms"],
+                    "tpot_p50_ms": s["tpot_p50_ms"],
+                    "evictions": s["evictions"]})
+    print(json.dumps(out, indent=1))
 
 
 if __name__ == "__main__":

@@ -51,6 +51,25 @@ class Model:
         return transformer.decode_step(params, self.cfg, tokens, cache,
                                        batch_extra=batch_extra)
 
+    # --- paged serving (block-table KV; see repro.serve.paged_kv) ---
+    def init_paged_cache(self, batch: int, n_blocks: int, block_size: int,
+                         max_blocks_per_seq: int, dtype=jnp.bfloat16):
+        return transformer.init_paged_cache(self.cfg, batch, n_blocks,
+                                            block_size, max_blocks_per_seq,
+                                            dtype)
+
+    def decode_step_paged(self, params, tokens, cache, active,
+                          block_size: int):
+        return transformer.decode_step_paged(params, self.cfg, tokens,
+                                             cache, active, block_size)
+
+    def prefill_chunk(self, params, tokens, cache, slot, pos, valid_len,
+                      block_size: int):
+        """Chunked prefill: fixed-shape [1, C] chunk -> one jit for all
+        prompt lengths; returns (last-valid-position logits, new cache)."""
+        return transformer.prefill_chunk(params, self.cfg, tokens, cache,
+                                         slot, pos, valid_len, block_size)
+
     # --- sampling helper (greedy; serving engine adds temperature) ---
     def greedy_token(self, logits):
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)

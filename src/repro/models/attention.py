@@ -39,6 +39,16 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def init_paged_kv_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                        dtype):
+    """Block-pool KV storage: requests own scattered fixed-size token
+    blocks instead of a contiguous [B, max_seq] row (vLLM-style paged
+    attention). Block index ``n_blocks`` is the invalid sentinel — writes
+    through it drop, reads through it fill zeros."""
+    shape = (n_blocks, block_size, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
 def _qkv(p, cfg: ModelConfig, x):
     B, S, _ = x.shape
     q = x @ p["wq"]
@@ -121,4 +131,91 @@ def attn_decode(p, cfg: ModelConfig, x, cos, sin, cache: dict,
     # flash-decode kernel covers the on-chip version (kernels/decode_attn).
     o = reference_attention(qg, ck, cv, causal=False, kv_len=lens + 1)
     o = o.reshape(B, 1, cfg.n_heads * cfg.d_head)
+    return o @ p["wo"], {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Paged attention: decode + chunked prefill read/write through block tables
+
+
+def _gather_paged(cache_leaf, tables, n_blocks: int):
+    """[n_blocks, bs, Kv, Dh] gathered via tables i32[B, MB] ->
+    [B, MB*bs, Kv, Dh]. Sentinel entries (== n_blocks) fill zeros; those
+    positions are >= kv_len and masked out of the softmax anyway."""
+    B, MB = tables.shape
+    bs = cache_leaf.shape[1]
+    g = jnp.take(cache_leaf, tables.reshape(-1), axis=0, mode="fill",
+                 fill_value=0)
+    return g.reshape(B, MB * bs, *cache_leaf.shape[2:])
+
+
+def attn_decode_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
+                      lens: jax.Array, tables: jax.Array, block_size: int):
+    """One-token decode through block tables: the new KV scatters into
+    physical block ``tables[b, lens[b]//bs]`` at offset ``lens[b]%bs``; the
+    read path gathers each row's blocks back into a logical sequence and
+    masks to lens+1. Token-identical to attn_decode on a contiguous cache
+    (same reference_attention, same masking).
+
+    cache: {"k","v"} [n_blocks, bs, Kv, Dh]; tables: i32[B, MB] with
+    ``n_blocks`` as the invalid sentinel (rows of inactive slots are all
+    sentinel, so their writes drop instead of corrupting recycled blocks).
+    """
+    B = x.shape[0]
+    n_blocks = cache["k"].shape[0]
+    MB = tables.shape[1]
+    q, k, v = _qkv(p, cfg, x)
+    q = rope.apply_rope(q, cos, sin)
+    k = rope.apply_rope(k, cos, sin)
+    rows = jnp.arange(B)
+    col = jnp.minimum(lens // block_size, MB - 1)
+    blk = tables[rows, col]                      # [B]; sentinel for inactive
+    off = lens % block_size
+    ck = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype),
+                                     mode="drop")
+    cv = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype),
+                                     mode="drop")
+    kg = _gather_paged(ck, tables, n_blocks)
+    vg = _gather_paged(cv, tables, n_blocks)
+    qg = q.reshape(B, 1, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
+    o = reference_attention(qg, kg, vg, causal=False, kv_len=lens + 1)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.d_head)
+    return o @ p["wo"], {"k": ck, "v": cv}
+
+
+def attn_prefill_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
+                       table_row: jax.Array, pos: jax.Array,
+                       valid_len: jax.Array, block_size: int,
+                       block_kv: int = 512):
+    """One chunked-prefill step for a single request (batch 1, fixed chunk
+    shape -> one jit for every prompt length). Writes the chunk's KV at
+    global positions [pos, pos+valid_len) through ``table_row`` and attends
+    causally against everything written so far (earlier chunks included).
+
+    x: [1, C, d]; table_row: i32[MB]; pos/valid_len: scalar i32. Positions
+    past valid_len are padding: their KV writes drop (sentinel index) and
+    their outputs are discarded by the caller.
+    """
+    _, C, _ = x.shape
+    n_blocks = cache["k"].shape[0]
+    q, k, v = _qkv(p, cfg, x)
+    q = rope.apply_rope(q, cos, sin)
+    k = rope.apply_rope(k, cos, sin)
+    j = jnp.arange(C)
+    gpos = pos + j
+    blk = jnp.take(table_row, gpos // block_size, mode="fill",
+                   fill_value=n_blocks)
+    blk = jnp.where(j < valid_len, blk, n_blocks)       # pad writes drop
+    off = gpos % block_size
+    ck = cache["k"].at[blk, off].set(k[0].astype(cache["k"].dtype),
+                                     mode="drop")
+    cv = cache["v"].at[blk, off].set(v[0].astype(cache["v"].dtype),
+                                     mode="drop")
+    kg = _gather_paged(ck, table_row[None], n_blocks)
+    vg = _gather_paged(cv, table_row[None], n_blocks)
+    qg = q.reshape(1, C, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
+    o = blockwise_attention(qg, kg, vg, causal=True, block_kv=block_kv,
+                            q_offset=jnp.asarray(pos)[None],
+                            kv_len=jnp.asarray(pos + valid_len)[None])
+    o = o.reshape(1, C, cfg.n_heads * cfg.d_head)
     return o @ p["wo"], {"k": ck, "v": cv}

@@ -105,8 +105,7 @@ def _bwd_pass(q, k, v, o, lse, do, *, causal: bool, block_kv: int,
     return dq, dk.astype(k.dtype), dv.astype(v.dtype)
 
 
-@partial(jax.custom_vjp,
-         nondiff_argnames=("causal", "block_kv", "unroll", "has_kv_len"))
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
 def _flash(q, k, v, kv_len, causal, block_kv, unroll, has_kv_len):
     out, _ = _flash_fwd_impl(q, k, v, kv_len, causal, block_kv, unroll,
                              has_kv_len)

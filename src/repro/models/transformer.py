@@ -96,6 +96,46 @@ def block_forward(kind, p, cfg: ModelConfig, x, ctx,
     raise ValueError(kind)
 
 
+def block_decode_paged(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
+    """Decode through block tables. Only attention-family blocks carry a
+    paged cache; recurrent blocks (O(1) state) have nothing to page."""
+    if kind == "shared_attn":
+        p = ctx["shared_params"]
+    if kind in ("attn", "shared_attn", "moe"):
+        h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+        a, new_cache = attention.attn_decode_paged(
+            p["attn"], cfg, h, ctx["cos"], ctx["sin"], cache, ctx["lens"],
+            ctx["tables"], ctx["block_size"])
+        x = x + a
+        h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            y, _ = moe.moe_forward(p["moe"], cfg, h)
+        else:
+            y = ffn.ffn_decode(p["ffn"], cfg, h)
+        return x + y, new_cache
+    raise ValueError(f"paged decode requires attention blocks, got {kind!r}")
+
+
+def block_prefill_paged(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
+    """One chunked-prefill step (batch-1 chunk) through block tables."""
+    if kind == "shared_attn":
+        p = ctx["shared_params"]
+    if kind in ("attn", "shared_attn", "moe"):
+        h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+        a, new_cache = attention.attn_prefill_paged(
+            p["attn"], cfg, h, ctx["cos"], ctx["sin"], cache,
+            ctx["table_row"], ctx["pos"], ctx["valid_len"],
+            ctx["block_size"])
+        x = x + a
+        h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            y, _ = moe.moe_forward(p["moe"], cfg, h)
+        else:
+            y = ffn.ffn_forward(p["ffn"], cfg, h)
+        return x + y, new_cache
+    raise ValueError(f"paged prefill requires attention blocks, got {kind!r}")
+
+
 def block_decode(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
     if kind == "shared_attn":
         p = ctx["shared_params"]
@@ -173,6 +213,31 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     # per-row context lengths (continuous batching: slots advance
     # independently)
     return {"lens": jnp.zeros((batch,), jnp.int32), "units": stacked}
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_blocks: int,
+                     block_size: int, max_blocks_per_seq: int, dtype):
+    """Paged decode cache: one shared block pool per attention layer plus
+    per-slot block tables (sentinel-filled; serve.paged_kv assigns blocks).
+    Requires an attention-only pattern — recurrent blocks keep O(1) state
+    and are served through the contiguous engine instead."""
+    unit = cfg.pattern_unit()
+    bad = [k for k in unit if k not in ("attn", "shared_attn", "moe")]
+    if bad:
+        raise ValueError(
+            f"{cfg.name}: paged KV needs an attention-only pattern "
+            f"(found {bad}); serve this family with ServeConfig(paged=False)")
+
+    def one_unit():
+        return {f"b{j}": attention.init_paged_kv_cache(
+                    cfg, n_blocks, block_size, dtype)
+                for j, kind in enumerate(unit)}
+
+    units = [one_unit() for _ in range(cfg.n_units)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+    tables = jnp.full((batch, max_blocks_per_seq), n_blocks, jnp.int32)
+    return {"lens": jnp.zeros((batch,), jnp.int32),
+            "block_tables": tables, "units": stacked}
 
 
 def _embed_inputs(params, cfg: ModelConfig, batch: dict):
@@ -344,6 +409,100 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, batch_extra=None):
     x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = project_logits(params, cfg, x)
     return logits, {"lens": lens + 1, "units": new_units}
+
+
+def decode_step_paged(params, cfg: ModelConfig, tokens, cache, active,
+                      block_size: int, batch_extra=None):
+    """decode_step through block tables. cache additionally carries
+    ``block_tables`` i32[B, MB]; storage leaves are block pools.
+
+    ``active`` i32[B] masks decoding rows: chunked prefill interleaves
+    with decode, so a slot mid-prefill shares the batch — its table row is
+    masked to the sentinel (no KV write) and its ``lens`` does not
+    advance. Inactive rows produce garbage logits the engine ignores."""
+    batch = {"tokens": tokens}
+    if batch_extra:
+        batch.update(batch_extra)
+    x = _embed_inputs(params, cfg, batch)
+    B = x.shape[0]
+    lens = cache["lens"]
+    positions = lens[:, None] if not cfg.mrope \
+        else jnp.broadcast_to(lens[None, :, None], (3, B, 1))
+    cos, sin = _rope_tables(cfg, positions)
+    if cfg.pos_emb == "sin":
+        p1 = positions[0] if cfg.mrope else positions
+        x = x + layers.sinusoidal_positions(p1, cfg.d_model).astype(x.dtype)
+
+    n_blocks = jax.tree.leaves(cache["units"])[0].shape[1]
+    tables = jnp.where(active[:, None] > 0, cache["block_tables"], n_blocks)
+    ctx = {"cos": cos, "sin": sin, "lens": lens,
+           "tables": tables, "block_size": block_size,
+           "shared_params": params.get("shared")}
+    unit = cfg.pattern_unit()
+
+    def unit_body(x, xs):
+        unit_p, unit_cache = xs
+        new_caches = {}
+        for j, kind in enumerate(unit):
+            bp = unit_p.get(f"b{j}")
+            x, nc = block_decode_paged(kind, bp, cfg, x, ctx,
+                                       unit_cache[f"b{j}"])
+            x = constrain_residual(x)
+            new_caches[f"b{j}"] = nc
+        return x, new_caches
+
+    x, new_units = jax.lax.scan(unit_body, x,
+                                (params["units"], cache["units"]))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = project_logits(params, cfg, x)
+    return logits, {"lens": jnp.where(active > 0, lens + 1, lens),
+                    "block_tables": cache["block_tables"],
+                    "units": new_units}
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, cache, slot, pos,
+                  valid_len, block_size: int):
+    """One chunked-prefill step for the request in ``slot``: process the
+    fixed-shape chunk ``tokens`` [1, C] (padded past ``valid_len``), write
+    its KV through the slot's block table at [pos, pos+valid_len), and
+    return the logits of the last valid position. One compilation serves
+    every prompt length — the seed engine re-jitted prefill per length.
+
+    Returns (logits [1, 1, V], new_cache); new lens[slot] = pos+valid_len.
+    """
+    x = _embed_inputs(params, cfg, {"tokens": tokens})
+    _, C, _ = x.shape
+    positions = _positions(cfg, {"tokens": tokens}, 1, C, offset=pos)
+    cos, sin = _rope_tables(cfg, positions)
+    if cfg.pos_emb == "sin":
+        p1 = positions[0] if cfg.mrope else positions
+        x = x + layers.sinusoidal_positions(p1, cfg.d_model).astype(x.dtype)
+
+    ctx = {"cos": cos, "sin": sin, "pos": pos, "valid_len": valid_len,
+           "table_row": cache["block_tables"][slot],
+           "block_size": block_size,
+           "shared_params": params.get("shared")}
+    unit = cfg.pattern_unit()
+
+    def unit_body(x, xs):
+        unit_p, unit_cache = xs
+        new_caches = {}
+        for j, kind in enumerate(unit):
+            bp = unit_p.get(f"b{j}")
+            x, nc = block_prefill_paged(kind, bp, cfg, x, ctx,
+                                        unit_cache[f"b{j}"])
+            x = constrain_residual(x)
+            new_caches[f"b{j}"] = nc
+        return x, new_caches
+
+    x, new_units = jax.lax.scan(unit_body, x,
+                                (params["units"], cache["units"]))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = jnp.take(x, jnp.maximum(valid_len - 1, 0)[None], axis=1)
+    logits = project_logits(params, cfg, last)
+    lens = cache["lens"].at[slot].set(pos + valid_len)
+    return logits, {"lens": lens, "block_tables": cache["block_tables"],
+                    "units": new_units}
 
 
 def project_logits(params, cfg: ModelConfig, x):

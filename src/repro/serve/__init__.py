@@ -1,1 +1,2 @@
-from repro.serve import engine, kv_cache  # noqa: F401
+from repro.serve import (api, engine, kv_cache, metrics,  # noqa: F401
+                         paged_kv, scheduler)

@@ -1,0 +1,113 @@
+"""Streaming request API over the engine.
+
+``generate()`` yields tokens as the scheduler produces them — the engine
+keeps multiplexing every other in-flight request between yields, so a
+stream is just a cursor over one request's ``tokens_out`` while the whole
+batch makes progress. ``StreamingServer`` is the multi-client front door:
+submit returns immediately, ``poll()`` advances the engine one tick and
+reports per-request deltas, ``drain()`` runs to completion.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.serve.engine import Engine
+from repro.serve.scheduler import Request
+
+
+class StreamingServer:
+    """Non-blocking serving loop: one tick per poll, streamed deltas."""
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self._cursors: Dict[int, int] = {}
+        self._finished: Dict[int, Request] = {}
+        self._backlog: List[Request] = []
+
+    def submit(self, prompt, max_new: int = 16, priority: int = 0,
+               rid: Optional[int] = None) -> int:
+        """Queue a request; returns its rid immediately. Requests the
+        engine's admission control rejects (queue full) wait in a local
+        backlog and re-submit as capacity frees. rids come from the
+        engine's counter so concurrent servers/streams never collide."""
+        rid = self.engine.new_rid() if rid is None else rid
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                      max_new=max_new, priority=priority)
+        if not self.engine.can_serve(req):
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens cannot fit "
+                f"max_seq={self.engine.scfg.max_seq}")
+        self._cursors[rid] = 0
+        if not self.engine.add_request(req):
+            self._backlog.append(req)
+        return rid
+
+    def poll(self) -> Dict[int, List]:
+        """One engine tick. Returns {rid: [new tokens]} for every request
+        that made progress; finished requests appear with their final
+        tokens and are retrievable via ``result()``."""
+        while self._backlog and self.engine.add_request(self._backlog[0]):
+            self._backlog.pop(0)
+        if self._backlog and not self.engine._busy():
+            # the engine is idle yet still refuses the head request: it is
+            # unservable (not a transient queue-full) — shed it so the
+            # backlog can't wedge the server
+            req = self._backlog.pop(0)
+            self._cursors.pop(req.rid, None)
+            self._finished[req.rid] = req
+        for rid in self.engine.step():
+            self._finished[rid] = self.engine._requests[rid]
+        out: Dict[int, List] = {}
+        for rid, cur in list(self._cursors.items()):
+            req = self.engine._requests.get(rid)
+            if req is None:
+                continue
+            if len(req.tokens_out) > cur:
+                out[rid] = req.tokens_out[cur:]
+                self._cursors[rid] = len(req.tokens_out)
+            if req.done:
+                del self._cursors[rid]
+        return out
+
+    def result(self, rid: int, forget: bool = False) -> Optional[Request]:
+        """Finished request by id. ``forget=True`` releases the engine's
+        and server's record on pickup — long-running servers should use it
+        so per-request state (tokens, metrics entries) doesn't grow
+        without bound; summaries then cover only unforgotten requests."""
+        req = self._finished.get(rid)
+        if forget and req is not None:
+            del self._finished[rid]
+            self.engine.forget(rid)
+        return req
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._backlog) or self.engine._busy() \
+            or bool(self._cursors)
+
+    def drain(self, max_steps: int = 10000) -> Dict[int, Request]:
+        for _ in range(max_steps):
+            if not self.busy:
+                break
+            self.poll()
+        return dict(self._finished)
+
+
+def generate(engine: Engine, prompt, max_new: int = 16,
+             priority: int = 0, max_steps: int = 10000) -> Iterator:
+    """Streaming greedy generation: yields each new token as soon as its
+    decode step lands, while the engine keeps serving concurrent
+    requests. The first yield's wall time is the request's TTFT."""
+    server = StreamingServer(engine)
+    rid = server.submit(prompt, max_new=max_new, priority=priority)
+    for _ in range(max_steps):
+        delta = server.poll().get(rid, [])
+        yield from delta
+        req = engine._requests.get(rid)
+        if req is not None and req.done:
+            return
+        if not server.busy:
+            return

@@ -1,17 +1,26 @@
-"""Inference engine: prefill + decode with the NeCTAr heterogeneous paths.
+"""Inference engine: a thin facade over the serving subsystem.
 
-The engine is where the paper's system shows up end-to-end:
-  * decode FFNs run the activation-sparse gather path (relu_sparse),
-  * decode matmuls can run int8 NMCE-contract weights (int8_decode),
-  * requests share a fixed-slot batch (continuous batching-lite),
-  * per-step byte accounting reports the off-chip-traffic the paper argues
-    about (weight bytes, KV bytes, sparsity savings).
+Two modes, selected by ``ServeConfig.paged``:
+
+  * paged (production): block-table paged KV (serve.paged_kv), chunked
+    prefill interleaved with decode, FIFO/priority scheduling and
+    preemption-by-eviction (serve.scheduler), per-request TTFT/TPOT and
+    Table-II traffic metrics (serve.metrics). One jit for decode and one
+    for the fixed-shape prefill chunk serve every request — the legacy
+    path re-jitted prefill per prompt length.
+  * legacy slots (baseline/ablation): the seed's fixed-slot contiguous
+    cache, kept for the paged-vs-contiguous equivalence guarantee and as
+    the benchmark baseline. Recurrent-state families (ssm/hybrid) serve
+    through this path — their O(1) decode state has nothing to page.
+
+Both modes keep the paper's decode story end-to-end: sparse FFN gather
+(relu_sparse), int8 NMCE weights (int8_decode), and per-step off-chip
+byte accounting.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
+import itertools
 from typing import Dict, List, Optional
 
 import jax
@@ -19,26 +28,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
-from repro.core import quant, sparsity
 from repro.models import Model
-from repro.serve import kv_cache
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # i32[S] (or [S, nc])
-    max_new: int = 16
-    tokens_out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-@dataclasses.dataclass
-class StepStats:
-    weight_bytes: float
-    kv_bytes: float
-    sparse_savings_bytes: float
-    tokens: int
+from repro.serve import kv_cache, metrics as metrics_mod, paged_kv
+from repro.serve.metrics import StepStats  # noqa: F401  (compat re-export)
+from repro.serve.scheduler import Request, SchedEntry, Scheduler, State
 
 
 class Engine:
@@ -47,19 +40,253 @@ class Engine:
         self.scfg = scfg
         self.model = Model(cfg)
         self.params = params
+        self.metrics = metrics_mod.MetricsCollector(cfg, scfg)
+        self._requests: Dict[int, Request] = {}
+        self._rids = itertools.count()
+        if scfg.paged:
+            self._init_paged()
+        else:
+            self._init_slots()
+
+    def new_rid(self) -> int:
+        """Engine-global request id: every front-end (StreamingServer,
+        generate) must draw from here — scheduler state is keyed by rid,
+        so two independently numbered clients would silently overwrite
+        each other's in-flight requests."""
+        rid = next(self._rids)
+        while rid in self._requests:
+            rid = next(self._rids)
+        return rid
+
+    @property
+    def stats(self) -> List[StepStats]:
+        return self.metrics.step_stats
+
+    # ------------------------------------------------------------------
+    # shared driver
+
+    def run(self, requests: List[Request], max_steps: int = 256
+            ) -> Dict[int, Request]:
+        """Continuous batching driver: admit whenever capacity frees, one
+        scheduler tick (or legacy decode step) per iteration."""
+        pending = list(requests)
+        done: Dict[int, Request] = {}
+        steps = 0
+        while (pending or self._busy()) and steps < max_steps:
+            while pending and self.add_request(pending[0]):
+                pending.pop(0)
+            if pending and not self._busy():
+                pending.pop(0)        # structurally unservable (too long)
+            for rid in self.step():
+                done[rid] = self._requests[rid]
+            steps += 1
+        return done
+
+    def _busy(self) -> bool:
+        if self.scfg.paged:
+            return not self.sched.idle
+        return bool(self._active) or bool(self._done_at_admit)
+
+    def can_serve(self, req: Request) -> bool:
+        """Structural admissibility: False means no amount of waiting will
+        ever let this request in (front-ends must shed it, not retry)."""
+        return len(np.asarray(req.prompt)) + 1 <= self.scfg.max_seq
+
+    def add_request(self, req: Request) -> bool:
+        prev = self._requests.get(req.rid)
+        if prev is not None and prev is not req and not prev.done:
+            raise ValueError(
+                f"request id {req.rid} is already in flight; use "
+                f"Engine.new_rid() to allocate ids")
+        if not self.can_serve(req):
+            return False
+        if self.scfg.paged:
+            return self._submit_paged(req)
+        return self._add_request_slots(req)
+
+    def forget(self, rid: int) -> None:
+        """Drop a finished request's record (and its metrics entry).
+        Long-running servers call this after consuming the result so
+        per-request state doesn't grow without bound; in-flight requests
+        cannot be forgotten."""
+        req = self._requests.get(rid)
+        if req is not None and req.done:
+            del self._requests[rid]
+            self.metrics.requests.pop(rid, None)
+
+    def step(self) -> List[int]:
+        """One engine tick; returns the rids that finished this tick."""
+        if self.scfg.paged:
+            return self._tick_paged()
+        return self._step_slots()
+
+    # ------------------------------------------------------------------
+    # paged mode: scheduler + block-table KV
+
+    def _init_paged(self):
+        scfg = self.scfg
+        bs = scfg.block_size
+        self.pool = paged_kv.PagedKVCache(
+            self.cfg, n_blocks=scfg.pool_blocks, block_size=bs,
+            max_batch=scfg.max_batch,
+            max_blocks_per_seq=scfg.blocks_per_seq,
+            int8_kv=scfg.kv_quant)
+        self.sched = Scheduler(scfg, self.pool)
+        self.cache = self.model.init_paged_cache(
+            scfg.max_batch, scfg.pool_blocks, bs, scfg.blocks_per_seq,
+            jnp.float32)
+        mdl = self.model
+        self._decode_paged = jax.jit(
+            lambda p, t, c, a: mdl.decode_step_paged(p, t, c, a, bs))
+        self._chunk = jax.jit(
+            lambda p, t, c, s, pos, v: mdl.prefill_chunk(p, t, c, s, pos,
+                                                         v, bs))
+        self._kv_per_tok = paged_kv.kv_bytes_per_token(self.cfg,
+                                                       scfg.kv_quant)
+
+    def _submit_paged(self, req: Request) -> bool:
+        if not self.sched.submit(req):
+            return False                       # queue full: shed load
+        self._requests[req.rid] = req
+        self.metrics.on_arrival(req.rid, len(np.asarray(req.prompt)))
+        return True
+
+    def _push_tables(self):
+        self.cache["block_tables"] = jnp.asarray(self.pool.tables())
+
+    def _ensure_blocks(self, e: SchedEntry, upto_len: int) -> bool:
+        """Grow e's block list to cover [0, upto_len), evicting victims
+        (lowest priority, newest) until it fits. False when upto_len can
+        never fit a table row."""
+        if self.pool.blocks_for(upto_len) > self.pool.max_blocks_per_seq:
+            return False
+        while not self.pool.allocate(e.slot, upto_len):
+            victim = self.sched.pick_victim(exclude_rid=e.req.rid)
+            if victim is None:
+                raise RuntimeError(
+                    f"KV pool too small: {self.pool.n_blocks} blocks of "
+                    f"{self.pool.block_size} cannot hold one request of "
+                    f"{upto_len} tokens")
+            self.metrics.on_preemption(victim.req.rid)
+            self.sched.preempt(victim)
+        return True
+
+    def _greedy_scalar(self, logits, row: int = 0):
+        nxt = self.model.greedy_token(logits)
+        if self.cfg.n_codebooks:
+            return np.asarray(nxt[row, 0])
+        return int(nxt[row, 0])
+
+    def _token_batch(self, pairs):
+        """[(slot, last_token)] -> i32[B, 1(, nc)] decode input."""
+        B = self.scfg.max_batch
+        shape = (B, 1, self.cfg.n_codebooks) if self.cfg.n_codebooks \
+            else (B, 1)
+        tok = np.zeros(shape, np.int32)
+        for slot, last in pairs:
+            tok[slot, 0] = last
+        return tok
+
+    def _extract_token(self, nxt: np.ndarray, slot: int):
+        if self.cfg.n_codebooks:
+            return np.asarray(nxt[slot, 0])
+        return int(nxt[slot, 0])
+
+    def _tick_paged(self) -> List[int]:
+        finished: List[int] = []
+        self.sched.admit()
+
+        # 1) at most one fixed-shape prefill chunk (keeps decode cadence)
+        pf = self.sched.next_prefill()
+        if pf is not None:
+            e, pos, valid = pf
+            if not self._ensure_blocks(e, pos + valid):
+                self._finish(e, finished)      # prompt can't fit: give up
+            else:
+                toks = e.prefill_tokens()
+                C = self.scfg.prefill_chunk
+                chunk = np.zeros((1, C) + toks.shape[1:], np.int32)
+                chunk[0, :valid] = toks[pos:pos + valid]
+                self._push_tables()
+                logits, self.cache = self._chunk(
+                    self.params, jnp.asarray(chunk), self.cache,
+                    jnp.int32(e.slot), jnp.int32(pos), jnp.int32(valid))
+                e.pos = pos + valid
+                self.metrics.on_prefill_chunk(valid)
+                if e.pos >= len(toks):
+                    e.ctx_len = e.pos
+                    e.state = State.RUNNING
+                    if e.replay:
+                        e.replay = False       # next token already known
+                    else:
+                        e.req.tokens_out.append(self._greedy_scalar(logits))
+                        self.metrics.on_first_token(e.req.rid)
+                        if len(e.req.tokens_out) >= e.req.max_new:
+                            self._finish(e, finished)
+
+        # 2) one batched decode step across RUNNING rows
+        for e in list(self.sched.decode_entries()):
+            if e.req.rid not in self.sched.active:
+                continue                       # evicted making room above
+            if not self._ensure_blocks(e, e.ctx_len + 1):
+                self._finish(e, finished)      # context ceiling reached
+        rows = self.sched.decode_entries()
+        if rows:
+            tok = self._token_batch([(e.slot, e.req.tokens_out[-1])
+                                     for e in rows])
+            active = np.zeros((self.scfg.max_batch,), np.int32)
+            for e in rows:
+                active[e.slot] = 1
+            self._push_tables()
+            logits, self.cache = self._decode_paged(
+                self.params, jnp.asarray(tok), self.cache,
+                jnp.asarray(active))
+            nxt = np.asarray(self.model.greedy_token(logits))
+            kv_read = sum(e.ctx_len for e in rows) * self._kv_per_tok
+            for e in rows:
+                e.req.tokens_out.append(self._extract_token(nxt, e.slot))
+                e.ctx_len += 1
+                self.metrics.on_token(e.req.rid)
+                if len(e.req.tokens_out) >= e.req.max_new \
+                        or e.ctx_len + 1 > self.scfg.max_seq:
+                    self._finish(e, finished)
+            self.metrics.on_decode_step(len(rows), kv_bytes=kv_read)
+        return finished
+
+    def _finish(self, e: SchedEntry, finished: List[int]):
+        self.metrics.on_finish(e.req.rid)
+        self.sched.finish(e)
+        finished.append(e.req.rid)
+
+    def defrag(self):
+        """Compact the block pool (host bookkeeping + device gather)."""
+        perm = self.pool.defrag()
+        if perm is not None:
+            p = jnp.asarray(perm)
+            self.cache["units"] = jax.tree.map(
+                lambda a: jnp.take(a, p, axis=1), self.cache["units"])
+            self._push_tables()
+        return perm
+
+    # ------------------------------------------------------------------
+    # legacy fixed-slot mode (baseline / recurrent families)
+
+    def _init_slots(self):
+        scfg = self.scfg
         self.alloc = kv_cache.SlotAllocator(scfg.max_batch)
         self.cache = self.model.init_cache(scfg.max_batch, scfg.max_seq,
                                            jnp.float32)
         self._decode = jax.jit(self.model.decode_step)
-        self._requests: Dict[int, Request] = {}
-        self.stats: List[StepStats] = []
+        self._active: Dict[int, Request] = {}
+        self._done_at_admit: List[int] = []    # max_new hit during prefill
 
-    # --- request lifecycle -------------------------------------------------
-    def add_request(self, req: Request) -> bool:
+    def _add_request_slots(self, req: Request) -> bool:
         slot = self.alloc.alloc(req.rid)
         if slot is None:
             return False
         self._requests[req.rid] = req
+        self._active[req.rid] = req
+        self.metrics.on_arrival(req.rid, len(np.asarray(req.prompt)))
         # prefill into a batch-1 temp cache, then splice that row into the
         # live cache at ``slot`` (slots advance independently via lens[b])
         prompt = jnp.asarray(req.prompt)[None]
@@ -68,10 +295,14 @@ class Engine:
         logits, tmp = self.model.prefill(self.params, {"tokens": prompt},
                                          tmp)
         self.cache = self._merge_slot(self.cache, tmp, slot, S)
-        nxt = int(self.model.greedy_token(logits)[0, 0]) \
-            if not self.cfg.n_codebooks else \
-            np.asarray(self.model.greedy_token(logits)[0, 0])
-        req.tokens_out.append(nxt)
+        req.tokens_out.append(self._greedy_scalar(logits))
+        self.metrics.on_first_token(req.rid)
+        if len(req.tokens_out) >= req.max_new:   # same check the paged
+            req.done = True                      # path makes after prefill
+            self.alloc.release(req.rid)
+            del self._active[req.rid]
+            self.metrics.on_finish(req.rid)
+            self._done_at_admit.append(req.rid)
         return True
 
     def _merge_slot(self, cache, tmp, slot: int, prompt_len: int):
@@ -84,83 +315,31 @@ class Engine:
         lens = cache["lens"].at[slot].set(prompt_len)
         return {"lens": lens, "units": units}
 
-    # --- decode ------------------------------------------------------------
-    def step(self) -> int:
+    def _step_slots(self) -> List[int]:
         """One batched decode step across all active slots."""
-        if not self._requests:
-            return 0
-        B = self.scfg.max_batch
-        if self.cfg.n_codebooks:
-            tok = np.zeros((B, 1, self.cfg.n_codebooks), np.int32)
-        else:
-            tok = np.zeros((B, 1), np.int32)
-        for req in self._requests.values():
-            slot = self.alloc.active[req.rid]
-            tok[slot, 0] = req.tokens_out[-1]
+        finished = self._done_at_admit
+        self._done_at_admit = []
+        if not self._active:
+            return finished
+        tok = self._token_batch(
+            [(self.alloc.active[req.rid], req.tokens_out[-1])
+             for req in self._active.values()])
         logits, self.cache = self._decode(self.params, jnp.asarray(tok),
                                           self.cache)
         nxt = np.asarray(self.model.greedy_token(logits))
-        finished = []
         n = 0
-        for req in self._requests.values():
+        decoded_done = []
+        for req in self._active.values():
             slot = self.alloc.active[req.rid]
-            req.tokens_out.append(
-                nxt[slot, 0] if not self.cfg.n_codebooks else nxt[slot, 0])
+            req.tokens_out.append(self._extract_token(nxt, slot))
+            self.metrics.on_token(req.rid)
             n += 1
             if len(req.tokens_out) >= req.max_new:
                 req.done = True
-                finished.append(req.rid)
-        for rid in finished:
+                decoded_done.append(req.rid)
+        for rid in decoded_done:
             self.alloc.release(rid)
-            del self._requests[rid]
-        self.stats.append(self._account(n))
-        return n
-
-    def run(self, requests: List[Request], max_steps: int = 256
-            ) -> Dict[int, Request]:
-        """Continuous batching driver: admit whenever a slot frees."""
-        pending = list(requests)
-        done: Dict[int, Request] = {}
-        steps = 0
-        while (pending or self._requests) and steps < max_steps:
-            while pending and self.alloc.free:
-                if self.add_request(pending[0]):
-                    pending.pop(0)
-            self.step()
-            for req in requests:
-                if req.done and req.rid not in done:
-                    done[req.rid] = req
-            steps += 1
-        return done
-
-    # --- traffic accounting (paper Table II units) ---------------------------
-    def _account(self, n_tokens: int) -> StepStats:
-        cfg = self.cfg
-        bpe = 1 if self.scfg.int8_decode else 2
-        kinds = cfg.layer_kinds()
-        w_bytes = 0.0
-        savings = 0.0
-        for k in kinds:
-            if k in ("attn", "shared_attn", "moe"):
-                attn = 2 * cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) \
-                    * cfg.d_head * bpe / 2
-                w_bytes += attn
-                if k == "moe":
-                    act_experts = cfg.top_k + cfg.n_shared_experts
-                    per_e = (3 if cfg.glu else 2) * cfg.d_model * cfg.d_ff
-                    dense = act_experts * per_e * bpe
-                else:
-                    dense = (3 if cfg.glu else 2) * cfg.d_model * cfg.d_ff \
-                        * bpe
-                if cfg.relu_sparse and self.scfg.sparse_decode:
-                    frac = cfg.sparse_k_frac
-                    glu_f = 2.0 if cfg.glu else 1.0
-                    total = dense
-                    sparse = dense * (glu_f + frac) / (glu_f + 1)
-                    savings += (total - sparse)
-                    w_bytes += sparse
-                else:
-                    w_bytes += dense
-        kvb = kv_cache.kv_bytes(cfg, n_tokens, self.scfg.max_seq, 2)
-        return StepStats(weight_bytes=w_bytes, kv_bytes=kvb,
-                         sparse_savings_bytes=savings, tokens=n_tokens)
+            del self._active[rid]
+            self.metrics.on_finish(rid)
+        self.metrics.on_decode_step(n)
+        return finished + decoded_done

@@ -40,8 +40,8 @@ def dequantize_kv(kq, scale, dtype=jnp.bfloat16):
 @dataclasses.dataclass
 class SlotAllocator:
     """Fixed-slot continuous batching: requests claim a batch row; freed on
-    completion. (Paged-attention block tables are out of scope — slots are
-    whole rows, which matches the fixed-shape jit'd decode step.)"""
+    completion. Slots are whole [max_seq] rows; the block-granular variant
+    lives in serve.paged_kv (both modes share this slot bookkeeping)."""
 
     n_slots: int
 
@@ -57,8 +57,11 @@ class SlotAllocator:
         return slot
 
     def release(self, request_id) -> None:
-        slot = self.active.pop(request_id)
-        self.free.append(slot)
+        """Idempotent: releasing an unknown/already-released id is a no-op
+        (finish and preemption paths may race on the same request)."""
+        slot = self.active.pop(request_id, None)
+        if slot is not None:
+            self.free.append(slot)
 
     @property
     def n_active(self) -> int:

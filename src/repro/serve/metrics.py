@@ -1,0 +1,185 @@
+"""Serving metrics: per-request TTFT/TPOT, percentile latency, tokens/s,
+and the paper's Table-II off-chip traffic counters (weight bytes, KV
+bytes, sparsity savings) — lifted out of the engine so both the legacy
+slot path and the paged scheduler path report identically."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.serve import kv_cache
+
+
+@dataclasses.dataclass
+class StepStats:
+    """One decode step's off-chip traffic (paper Table II units)."""
+    weight_bytes: float
+    kv_bytes: float
+    sparse_savings_bytes: float
+    tokens: int
+
+
+def weight_traffic(cfg: ModelConfig, scfg: ServeConfig):
+    """(weight_bytes, sparse_savings_bytes) streamed per decode step: the
+    paper's argument that ReLU sparsity ~halves FFN weight reads and int8
+    NMCE weights halve bytes/element again."""
+    bpe = 1 if scfg.int8_decode else 2
+    w_bytes = 0.0
+    savings = 0.0
+    for k in cfg.layer_kinds():
+        if k not in ("attn", "shared_attn", "moe"):
+            continue
+        attn = 2 * cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) \
+            * cfg.d_head * bpe / 2
+        w_bytes += attn
+        if k == "moe":
+            act_experts = cfg.top_k + cfg.n_shared_experts
+            per_e = (3 if cfg.glu else 2) * cfg.d_model * cfg.d_ff
+            dense = act_experts * per_e * bpe
+        else:
+            dense = (3 if cfg.glu else 2) * cfg.d_model * cfg.d_ff * bpe
+        if cfg.relu_sparse and scfg.sparse_decode:
+            frac = cfg.sparse_k_frac
+            glu_f = 2.0 if cfg.glu else 1.0
+            sparse = dense * (glu_f + frac) / (glu_f + 1)
+            savings += dense - sparse
+            w_bytes += sparse
+        else:
+            w_bytes += dense
+    return w_bytes, savings
+
+
+def traffic_step(cfg: ModelConfig, scfg: ServeConfig, n_tokens: int,
+                 kv_bytes: Optional[float] = None) -> StepStats:
+    """Traffic of one decode step serving ``n_tokens`` rows. ``kv_bytes``
+    overrides the contiguous worst-case estimate (the paged cache reports
+    actually-allocated bytes instead)."""
+    w_bytes, savings = weight_traffic(cfg, scfg)
+    if kv_bytes is None:
+        kv_bytes = kv_cache.kv_bytes(cfg, n_tokens, scfg.max_seq, 2)
+    return StepStats(weight_bytes=w_bytes, kv_bytes=kv_bytes,
+                     sparse_savings_bytes=savings, tokens=n_tokens)
+
+
+# ---------------------------------------------------------------------------
+# Request latency tracking
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    rid: int
+    arrival: float
+    prompt_len: int = 0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    n_generated: int = 0
+    preemptions: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.arrival
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Time per output token after the first (decode cadence)."""
+        if self.finished_at is None or self.first_token_at is None \
+                or self.n_generated <= 1:
+            return None
+        return (self.finished_at - self.first_token_at) \
+            / (self.n_generated - 1)
+
+
+def percentile(values: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(values), p)) if values else 0.0
+
+
+class MetricsCollector:
+    """Accumulates per-request and per-step serving metrics."""
+
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig,
+                 clock=time.monotonic):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.clock = clock
+        self.requests: Dict[int, RequestMetrics] = {}
+        self.step_stats: List[StepStats] = []
+        self.decode_steps = 0
+        self.prefill_chunks = 0
+        self.evictions = 0
+        self._t0: Optional[float] = None
+
+    # --- request lifecycle events ---
+    def on_arrival(self, rid: int, prompt_len: int,
+                   at: Optional[float] = None):
+        at = self.clock() if at is None else at
+        if self._t0 is None:
+            self._t0 = at
+        self.requests[rid] = RequestMetrics(rid=rid, arrival=at,
+                                            prompt_len=prompt_len)
+
+    def on_first_token(self, rid: int):
+        r = self.requests[rid]
+        if r.first_token_at is None:
+            r.first_token_at = self.clock()
+        r.n_generated += 1
+
+    def on_token(self, rid: int):
+        self.requests[rid].n_generated += 1
+
+    def on_finish(self, rid: int):
+        self.requests[rid].finished_at = self.clock()
+
+    def on_preemption(self, rid: int):
+        self.requests[rid].preemptions += 1
+        self.evictions += 1
+
+    # --- step events ---
+    def on_decode_step(self, n_tokens: int,
+                       kv_bytes: Optional[float] = None):
+        self.decode_steps += 1
+        self.step_stats.append(
+            traffic_step(self.cfg, self.scfg, n_tokens, kv_bytes=kv_bytes))
+
+    def on_prefill_chunk(self, n_tokens: int):
+        self.prefill_chunks += 1
+
+    # --- summary ---
+    def summary(self) -> dict:
+        done = [r for r in self.requests.values()
+                if r.finished_at is not None]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        lats = [r.latency for r in done]
+        tpots = [r.tpot for r in done if r.tpot is not None]
+        n_tok = sum(r.n_generated for r in done)
+        wall = (max(r.finished_at for r in done) - self._t0) \
+            if done and self._t0 is not None else 0.0
+        return {
+            "n_finished": len(done),
+            "generated_tokens": n_tok,
+            "tokens_per_s": n_tok / wall if wall > 0 else 0.0,
+            "ttft_p50_ms": percentile(ttfts, 50) * 1e3,
+            "ttft_p99_ms": percentile(ttfts, 99) * 1e3,
+            "latency_p50_ms": percentile(lats, 50) * 1e3,
+            "latency_p99_ms": percentile(lats, 99) * 1e3,
+            "tpot_p50_ms": percentile(tpots, 50) * 1e3,
+            "decode_steps": self.decode_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "evictions": self.evictions,
+            "weight_bytes": sum(s.weight_bytes for s in self.step_stats),
+            "kv_bytes": sum(s.kv_bytes for s in self.step_stats),
+            "sparse_savings_bytes": sum(s.sparse_savings_bytes
+                                        for s in self.step_stats),
+        }

@@ -1,0 +1,148 @@
+"""Block-table paged KV cache management (vLLM-style).
+
+The decode-time KV stream is the second half of the paper's off-chip
+traffic argument (Table II): weight bytes are fixed per token, KV bytes
+grow with context. A contiguous [B, max_seq] cache reserves worst-case
+bytes per slot; paging allocates fixed-size token blocks on demand, so
+memory scales with *actual* context lengths and short requests no longer
+pay for long ones.
+
+Host-side bookkeeping lives here (free list, per-slot block lists,
+eviction, defrag, byte accounting); the device-side storage and the
+gather/scatter decode path live in models.attention (attn_decode_paged).
+Block index ``n_blocks`` is the invalid sentinel understood by the device
+path: writes through it drop, reads through it fill zeros.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def kv_bytes_per_token(cfg: ModelConfig, int8_kv: bool = False) -> float:
+    """Off-chip KV bytes one token adds across all attention layers.
+    int8 KV (kv_cache.quantize_kv) stores 1 byte/element plus one f32
+    scale per (token, head) for each of K and V."""
+    n_attn = sum(1 for k in cfg.layer_kinds()
+                 if k in ("attn", "shared_attn", "moe"))
+    per_el = 1 if int8_kv else 2
+    el = 2 * n_attn * cfg.n_kv_heads * cfg.d_head * per_el
+    scales = 2 * n_attn * cfg.n_kv_heads * 4 if int8_kv else 0
+    return float(el + scales)
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Free-list block allocator + per-slot block tables.
+
+    Slots are batch rows of the jit'd decode step; each active slot owns an
+    ordered list of physical blocks covering its logical positions
+    [0, len). ``tables()`` materializes the i32[B, MB] array the device
+    path reads through (sentinel-padded).
+    """
+
+    cfg: ModelConfig
+    n_blocks: int
+    block_size: int
+    max_batch: int
+    max_blocks_per_seq: int
+    int8_kv: bool = False
+
+    def __post_init__(self):
+        self.free: List[int] = list(range(self.n_blocks))
+        self.owned: Dict[int, List[int]] = {}      # slot -> physical blocks
+        self._tables = np.full((self.max_batch, self.max_blocks_per_seq),
+                               self.n_blocks, np.int32)
+        self.alloc_count = 0
+        self.free_count = 0
+
+    # --- capacity ---------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_blocks - len(self.free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def can_allocate(self, slot: int, upto_len: int) -> bool:
+        have = len(self.owned.get(slot, ()))
+        return self.blocks_for(upto_len) - have <= self.n_free
+
+    # --- alloc / free -----------------------------------------------------
+    def allocate(self, slot: int, upto_len: int) -> bool:
+        """Grow ``slot`` to cover logical positions [0, upto_len).
+        All-or-nothing; returns False (state unchanged) when the pool or
+        the slot's table row can't cover it."""
+        need = self.blocks_for(upto_len)
+        if need > self.max_blocks_per_seq:
+            return False
+        blocks = self.owned.setdefault(slot, [])
+        grow = need - len(blocks)
+        if grow <= 0:
+            return True
+        if grow > len(self.free):
+            return False
+        for _ in range(grow):
+            b = self.free.pop(0)
+            self._tables[slot, len(blocks)] = b
+            blocks.append(b)
+            self.alloc_count += 1
+        return True
+
+    def free_slot(self, slot: int) -> int:
+        """Return every block owned by ``slot`` to the pool (idempotent)."""
+        blocks = self.owned.pop(slot, [])
+        self.free.extend(blocks)
+        self._tables[slot, :] = self.n_blocks
+        self.free_count += len(blocks)
+        return len(blocks)
+
+    def tables(self) -> np.ndarray:
+        return self._tables
+
+    # --- defrag -----------------------------------------------------------
+    def defrag(self) -> Optional[np.ndarray]:
+        """Compact live blocks into the lowest physical ids. Returns the
+        i32[n_blocks] gather permutation ``perm`` (new storage row i =
+        old row perm[i]) for the engine to apply to the device pools, or
+        None if already compact. With block indirection defrag is never
+        needed for correctness — it restores locality for the streaming
+        prefetcher after heavy churn (paper's best-offset prefetcher
+        expects near-sequential block reads)."""
+        live = sorted(b for blocks in self.owned.values() for b in blocks)
+        if live == list(range(len(live))):
+            return None
+        remap = {old: new for new, old in enumerate(live)}
+        perm = np.arange(self.n_blocks, dtype=np.int32)
+        for old, new in remap.items():
+            perm[new] = old
+        for slot, blocks in self.owned.items():
+            self.owned[slot] = [remap[b] for b in blocks]
+            self._tables[slot, :len(blocks)] = self.owned[slot]
+        self.free = list(range(len(live), self.n_blocks))
+        return perm
+
+    # --- byte accounting (paper Table II currency) ------------------------
+    def bytes_per_block(self) -> float:
+        return self.block_size * kv_bytes_per_token(self.cfg, self.int8_kv)
+
+    def used_bytes(self) -> float:
+        return self.n_used * self.bytes_per_block()
+
+    def capacity_bytes(self) -> float:
+        return self.n_blocks * self.bytes_per_block()
+
+    def stats(self) -> dict:
+        return {"n_blocks": self.n_blocks, "n_free": self.n_free,
+                "n_used": self.n_used, "used_bytes": self.used_bytes(),
+                "capacity_bytes": self.capacity_bytes(),
+                "allocs": self.alloc_count, "frees": self.free_count}

@@ -1,0 +1,182 @@
+"""Request scheduler: admission control, chunked prefill interleaved with
+decode, FIFO/priority ordering, preemption-by-eviction.
+
+Why chunked prefill: the seed engine ran a whole prompt's prefill inside
+``add_request`` — one long prompt head-of-line-blocked every decoding
+request for the full prefill (and re-jitted the batch-1 prefill for every
+new prompt length). Here prefill is split into fixed-shape chunks and the
+engine alternates one chunk of prefill with one batched decode step, so
+decode latency (the paper's TPOT/bandwidth currency) stays flat while
+long prompts stream in; the fixed chunk shape compiles exactly once.
+
+The scheduler is pure host-side policy over (slots, block pool); the
+engine executes the jit'd work it picks. Preemption is vLLM-style
+recompute: the victim's blocks are freed and its prompt *plus already
+generated tokens* replay through chunked prefill when capacity returns —
+decode state is fully reconstructible from tokens, so nothing is copied
+out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.serve.kv_cache import SlotAllocator
+from repro.serve.paged_kv import PagedKVCache
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (moved from engine; engine re-exports)."""
+    rid: int
+    prompt: np.ndarray          # i32[S] (or [S, nc])
+    max_new: int = 16
+    tokens_out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    priority: int = 0           # larger = more urgent (policy="priority")
+
+
+class State(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    RUNNING = "running"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class SchedEntry:
+    req: Request
+    seq: int                    # admission-order tiebreak
+    state: State = State.WAITING
+    slot: Optional[int] = None
+    pos: int = 0                # prefill frontier (tokens written)
+    ctx_len: int = 0            # device lens[slot] mirror once RUNNING
+    replay: bool = False        # re-prefill after eviction
+
+    def prefill_tokens(self) -> np.ndarray:
+        """What chunked prefill must process: the prompt, plus — after an
+        eviction — every generated token except the last (whose KV is
+        written by the next decode step, same as the steady-state
+        invariant)."""
+        prompt = np.asarray(self.req.prompt)
+        if not self.replay or len(self.req.tokens_out) <= 1:
+            return prompt
+        gen = np.asarray(self.req.tokens_out[:-1], dtype=prompt.dtype)
+        return np.concatenate([prompt, gen], axis=0)
+
+
+class Scheduler:
+    """Decides, per tick, which prefill chunk runs and which rows decode."""
+
+    def __init__(self, scfg: ServeConfig, pool: PagedKVCache):
+        if scfg.policy not in ("fifo", "priority"):
+            raise ValueError(f"unknown scheduling policy {scfg.policy!r}")
+        self.scfg = scfg
+        self.pool = pool
+        self.slots = SlotAllocator(scfg.max_batch)
+        self.waiting: List[SchedEntry] = []
+        self.active: Dict[int, SchedEntry] = {}     # rid -> PREFILL/RUNNING
+        self._seq = 0
+        self.n_preemptions = 0
+        self.n_rejected = 0
+
+    # --- ordering ---------------------------------------------------------
+    def _key(self, e: SchedEntry):
+        if self.scfg.policy == "priority":
+            return (-e.req.priority, e.seq)
+        return (e.seq,)
+
+    # --- admission --------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        """Admission control: bounded queue; beyond it, shed load at the
+        door instead of growing tail latency unboundedly."""
+        if len(self.waiting) >= self.scfg.max_queue:
+            self.n_rejected += 1
+            return False
+        e = SchedEntry(req=req, seq=self._seq)
+        self._seq += 1
+        self.waiting.append(e)
+        self.waiting.sort(key=self._key)
+        return True
+
+    def admit(self) -> List[SchedEntry]:
+        """Move waiting requests into slots while a slot AND enough free
+        blocks for at least the first prefill chunk exist."""
+        admitted = []
+        while self.waiting and self.slots.free:
+            e = self.waiting[0]
+            first = min(self.scfg.prefill_chunk, len(e.prefill_tokens()))
+            if self.pool.blocks_for(first) > self.pool.n_free:
+                break
+            slot = self.slots.alloc(e.req.rid)
+            e.slot = slot
+            e.state = State.PREFILL
+            e.pos = 0
+            self.waiting.pop(0)
+            self.active[e.req.rid] = e
+            admitted.append(e)
+        return admitted
+
+    # --- per-tick picks ---------------------------------------------------
+    def next_prefill(self) -> Optional[Tuple[SchedEntry, int, int]]:
+        """(entry, pos, valid_len) of the next prefill chunk, or None."""
+        cands = [e for e in self.active.values() if e.state == State.PREFILL]
+        if not cands:
+            return None
+        e = min(cands, key=self._key)
+        total = len(e.prefill_tokens())
+        valid = min(self.scfg.prefill_chunk, total - e.pos)
+        return e, e.pos, valid
+
+    def decode_entries(self) -> List[SchedEntry]:
+        return sorted((e for e in self.active.values()
+                       if e.state == State.RUNNING), key=lambda e: e.slot)
+
+    # --- preemption -------------------------------------------------------
+    def pick_victim(self, exclude_rid: int) -> Optional[SchedEntry]:
+        """Lowest-priority, latest-admitted active request (never the one
+        we are trying to serve)."""
+        cands = [e for e in self.active.values()
+                 if e.req.rid != exclude_rid]
+        if not cands:
+            return None
+        return max(cands, key=self._key)
+
+    def preempt(self, e: SchedEntry) -> None:
+        """Evict: free blocks + slot, requeue for recompute."""
+        self.pool.free_slot(e.slot)
+        self.slots.release(e.req.rid)
+        del self.active[e.req.rid]
+        e.slot = None
+        e.pos = 0
+        e.ctx_len = 0
+        e.state = State.WAITING
+        e.replay = bool(e.req.tokens_out)
+        self.waiting.append(e)
+        self.waiting.sort(key=self._key)
+        self.n_preemptions += 1
+
+    def finish(self, e: SchedEntry) -> None:
+        e.state = State.DONE
+        e.req.done = True
+        self.pool.free_slot(e.slot)
+        self.slots.release(e.req.rid)
+        del self.active[e.req.rid]
+
+    # --- introspection ----------------------------------------------------
+    @property
+    def n_waiting(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and not self.active

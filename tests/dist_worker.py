@@ -15,19 +15,19 @@ import dataclasses  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
 from repro.configs.base import TrainConfig  # noqa: E402
 from repro.dist import collectives, compression, elastic  # noqa: E402
 from repro.dist import sharding as shd  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.models import Model, flash  # noqa: E402
 from repro.train import loop, optimizer as opt  # noqa: E402
 
 
 def mesh2(shape, names):
-    return jax.make_mesh(shape, names,
-                         axis_types=(AxisType.Auto,) * len(names))
+    return make_mesh(shape, names)
 
 
 def check_lse_combine():

@@ -84,6 +84,21 @@ def test_slot_allocator():
     assert a.alloc("r3") == 0
 
 
+def test_slot_allocator_double_release_is_idempotent():
+    """Regression: release() of an unknown/already-released id must be a
+    no-op (finish and preemption paths may both release), and must not
+    duplicate the slot in the free list."""
+    a = kv_cache.SlotAllocator(2)
+    a.alloc("r1")
+    a.release("r1")
+    a.release("r1")            # second release: no KeyError, no dup slot
+    a.release("never-seen")    # unknown id: no-op
+    assert sorted(a.free) == [0, 1]
+    assert a.n_active == 0
+    assert {a.alloc("r2"), a.alloc("r3")} == {0, 1}
+    assert a.alloc("r4") is None  # free list was not corrupted
+
+
 def test_engine_serves_multicodebook_audio():
     """musicgen-style decoding: tokens are [B, 1, nc] per step."""
     cfg, eng = _engine("musicgen-smoke", max_batch=2, max_seq=32)
