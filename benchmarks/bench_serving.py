@@ -29,8 +29,9 @@ from repro.models import Model
 from repro.serve.engine import Engine
 from repro.serve.scheduler import Request
 
-ART = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                   "BENCH_serving.json")
+_DIR = os.path.dirname(os.path.abspath(__file__))
+ART = os.path.join(_DIR, "BENCH_serving.json")
+ART_QUICK = os.path.join(_DIR, "BENCH_serving_quick.json")
 
 N_REQUESTS = 16
 MAX_NEW = 16
@@ -38,22 +39,22 @@ ARRIVAL_RATE = 6.0          # requests/s (Poisson)
 LONG_FRAC = 0.3
 
 
-def make_trace(cfg, seed=0):
+def make_trace(cfg, seed=0, n_requests=N_REQUESTS, max_new=MAX_NEW):
     """(arrival_s, Request) pairs: 70% short prompts (4-12 tokens), 30%
     long (48-64) — every long prompt also gets a unique length, which is
     exactly the shape of traffic that re-jits the seed prefill."""
     rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / ARRIVAL_RATE, N_REQUESTS)
+    gaps = rng.exponential(1.0 / ARRIVAL_RATE, n_requests)
     arrivals = np.cumsum(gaps)
     trace = []
-    for i in range(N_REQUESTS):
+    for i in range(n_requests):
         if rng.random() < LONG_FRAC:
             n = int(rng.integers(48, 65))
         else:
             n = int(rng.integers(4, 13))
         prompt = rng.integers(0, cfg.vocab, size=n, dtype=np.int32)
         trace.append((float(arrivals[i]),
-                      Request(rid=i, prompt=prompt, max_new=MAX_NEW)))
+                      Request(rid=i, prompt=prompt, max_new=max_new)))
     return trace
 
 
@@ -82,7 +83,8 @@ def run_trace(eng: Engine, trace):
     return s
 
 
-def bench_engine(cfg, params, paged: bool, seed=0):
+def bench_engine(cfg, params, paged: bool, seed=0, n_requests=N_REQUESTS,
+                 max_new=MAX_NEW):
     scfg = ServeConfig(max_batch=4, max_seq=96, paged=paged, block_size=8,
                        prefill_chunk=16)
     eng = Engine(cfg, params, scfg)
@@ -92,27 +94,34 @@ def bench_engine(cfg, params, paged: bool, seed=0):
     warm = Request(rid=-1, prompt=np.arange(4, dtype=np.int32), max_new=2)
     eng.run([warm], max_steps=50)
     eng.metrics = type(eng.metrics)(cfg, scfg)
-    return run_trace(eng, make_trace(cfg, seed))
+    return run_trace(eng, make_trace(cfg, seed, n_requests=n_requests,
+                                     max_new=max_new))
 
 
-def run():
+def run(quick: bool = False):
+    n_requests = 6 if quick else N_REQUESTS
+    max_new = 8 if quick else MAX_NEW
     cfg = get_config("nectar-relu-llama-1.7m")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    seed_s = bench_engine(cfg, params, paged=False)
-    paged_s = bench_engine(cfg, params, paged=True)
+    seed_s = bench_engine(cfg, params, paged=False, n_requests=n_requests,
+                          max_new=max_new)
+    paged_s = bench_engine(cfg, params, paged=True, n_requests=n_requests,
+                           max_new=max_new)
     speedup = paged_s["tokens_per_s"] / max(seed_s["tokens_per_s"], 1e-9)
 
     report = {
-        "trace": {"n_requests": N_REQUESTS, "max_new": MAX_NEW,
+        "trace": {"n_requests": n_requests, "max_new": max_new,
                   "arrival_rate_per_s": ARRIVAL_RATE,
-                  "long_prompt_frac": LONG_FRAC},
+                  "long_prompt_frac": LONG_FRAC, "quick": quick},
         "seed_engine": seed_s,
         "paged_engine": paged_s,
         "tokens_per_s_speedup": speedup,
     }
-    with open(ART, "w") as f:
+    # quick (CI smoke) runs must not clobber the committed full-trace
+    # artifact the README cites
+    with open(ART_QUICK if quick else ART, "w") as f:
         json.dump(report, f, indent=1)
 
     rows = []

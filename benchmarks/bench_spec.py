@@ -1,0 +1,141 @@
+"""Speculative decoding benchmark: decode tokens/s of the paged engine
+with and without an n-gram (prompt-lookup) drafter on a repetitive-text
+trace.
+
+Repetitive text (templated output, code, retrieval-grounded answers) is
+the n-gram drafter's home turf: acceptance approaches 1, so each verify
+pass commits ~K+1 tokens for ONE weight-stream read — exactly the
+bytes-per-emitted-token currency the paper's Table II argues decode is
+bound by. Acceptance target: >= 1.5x decode tokens/s over the PR 1 paged
+baseline; also reports acceptance rate and tokens-per-verify-step.
+
+Emits CSV rows for benchmarks.run and writes BENCH_spec.json.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_spec [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ServeConfig, SpecConfig
+from repro.models import Model
+from repro.serve.engine import Engine
+from repro.serve.scheduler import Request
+
+_DIR = os.path.dirname(os.path.abspath(__file__))
+ART = os.path.join(_DIR, "BENCH_spec.json")
+ART_QUICK = os.path.join(_DIR, "BENCH_spec_quick.json")
+
+N_REQUESTS = 4
+MAX_NEW = 192
+REPEATS = 3              # best-of (wall-clock noise on shared CPU hosts)
+PATTERN_LEN = 7          # repeating motif length (> ngram, so lookups hit)
+PROMPT_REPEATS = 6
+
+
+def make_trace(cfg, n_requests, max_new, seed=0):
+    """Repetitive prompts: each request's prompt is a random motif tiled
+    several times — generation keeps extending the loop, which prompt
+    lookup predicts almost perfectly."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        motif = rng.integers(0, cfg.vocab, size=PATTERN_LEN, dtype=np.int32)
+        prompt = np.tile(motif, PROMPT_REPEATS)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=max_new))
+    return reqs
+
+
+def bench_engine(cfg, params, spec, reqs, scfg_kw, repeats: int = 1):
+    """Run the trace ``repeats`` times on one warmed engine config and
+    keep the fastest run (tokens/s is wall-clock and shared CPU hosts are
+    noisy; acceptance counters are deterministic across repeats)."""
+    scfg = ServeConfig(spec=spec, **scfg_kw)
+    best = None
+    for _ in range(max(repeats, 1)):
+        eng = Engine(cfg, params, scfg)
+        warm = Request(rid=-1, prompt=np.arange(8, dtype=np.int32),
+                       max_new=4)
+        eng.run([warm], max_steps=100)           # compile outside the clock
+        eng.metrics = type(eng.metrics)(cfg, scfg)
+        run_reqs = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+                    for r in reqs]
+        t0 = time.monotonic()
+        done = eng.run(run_reqs, max_steps=100000)
+        wall = time.monotonic() - t0
+        assert len(done) == len(run_reqs), "trace did not complete"
+        s = eng.metrics.summary()
+        s["wall_s"] = wall
+        s["decode_tokens_per_s"] = s["generated_tokens"] / wall
+        if best is None or s["decode_tokens_per_s"] \
+                > best["decode_tokens_per_s"]:
+            best = s
+    return best
+
+
+def run(quick: bool = False):
+    n_req = 2 if quick else N_REQUESTS
+    max_new = 24 if quick else MAX_NEW
+    repeats = 1 if quick else REPEATS
+    cfg = get_config("nectar-relu-llama-1.7m")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    scfg_kw = dict(max_batch=4, max_seq=384, paged=True, block_size=16,
+                   prefill_chunk=32)
+    reqs = make_trace(cfg, n_req, max_new)
+
+    base = bench_engine(cfg, params, None, reqs, scfg_kw, repeats=repeats)
+    spec = bench_engine(
+        cfg, params,
+        SpecConfig(drafter="ngram", k=6, k_max=6, ngram=3), reqs, scfg_kw,
+        repeats=repeats)
+    speedup = spec["decode_tokens_per_s"] / max(base["decode_tokens_per_s"],
+                                                1e-9)
+
+    report = {
+        "trace": {"n_requests": n_req, "max_new": max_new,
+                  "pattern_len": PATTERN_LEN,
+                  "prompt_repeats": PROMPT_REPEATS, "quick": quick},
+        "paged_baseline": base,
+        "spec_ngram": spec,
+        "acceptance_rate": spec["spec_acceptance_rate"],
+        "tokens_per_verify_step": spec["spec_tokens_per_verify"],
+        "decode_tokens_per_s_speedup": speedup,
+    }
+    # quick (CI smoke) runs must not clobber the committed full-trace
+    # artifact
+    with open(ART_QUICK if quick else ART, "w") as f:
+        json.dump(report, f, indent=1)
+
+    rows = []
+    for name, s in (("paged_baseline", base), ("ngram", spec)):
+        rows.append((f"spec_{name}",
+                     s["wall_s"] / max(s["generated_tokens"], 1) * 1e6,
+                     f"tok_s={s['decode_tokens_per_s']:.1f};"
+                     f"verify_steps={s['spec_steps']};"
+                     f"accept={s['spec_acceptance_rate']:.2f};"
+                     f"tok_per_verify={s['spec_tokens_per_verify']:.2f}"))
+    rows.append(("spec_ngram_speedup", 0.0,
+                 f"tokens_per_s_ratio={speedup:.2f}x;target>=1.5x"))
+    return rows
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    for name, us, derived in run(quick=args.quick):
+        print(f"{name},{us:.1f},{derived}")
+    print(f"wrote {ART_QUICK if args.quick else ART}")
+
+
+if __name__ == "__main__":
+    main()

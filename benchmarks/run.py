@@ -5,10 +5,15 @@
   Fig. 7 sparse accelerator            -> bench_sparsity
   Fig. 7 best-offset prefetcher        -> bench_prefetch
   Table II end-to-end 1.7M ReLU-Llama  -> bench_e2e
+  serving + speculative decode         -> bench_serving, bench_spec
   Fig. 10 / roofline terms             -> roofline_report (needs dry-run
                                           artifacts; rows skipped if absent)
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only <name>]
+Run: PYTHONPATH=src python -m benchmarks.run [--only <name>] [--quick]
+
+``--quick`` is the CI smoke mode: it runs only the serving-path suites
+(bench_serving, bench_spec) on tiny traces — fast enough for the tier-1
+workflow, so the benchmark scripts themselves can't silently rot.
 """
 
 import argparse
@@ -16,23 +21,34 @@ import sys
 import traceback
 
 SUITES = ["bench_matmul", "bench_sparsity", "bench_prefetch", "bench_e2e",
-          "bench_serving", "roofline_report"]
+          "bench_serving", "bench_spec", "roofline_report"]
+QUICK_SUITES = ["bench_serving", "bench_spec"]   # accept a quick=... kwarg
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: serving suites only, tiny traces")
     args = ap.parse_args()
 
+    if args.only:
+        if args.only not in SUITES:
+            raise SystemExit(f"unknown suite {args.only!r}; known: {SUITES}")
+        suites = [args.only]          # --only wins over the --quick subset
+    else:
+        suites = QUICK_SUITES if args.quick else SUITES
     print("name,us_per_call,derived")
     failed = []
-    for mod_name in SUITES:
-        if args.only and args.only != mod_name:
-            continue
+    for mod_name in suites:
         try:
             mod = __import__(f"benchmarks.{mod_name}",
                              fromlist=["run"])
-            for name, us, derived in mod.run():
+            if args.quick and mod_name in QUICK_SUITES:
+                rows = mod.run(quick=True)
+            else:
+                rows = mod.run()
+            for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}")
                 sys.stdout.flush()
         except Exception:  # noqa: BLE001 — report and continue

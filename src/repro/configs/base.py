@@ -170,6 +170,29 @@ class TrainConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative decoding (repro.spec): draft K tokens cheaply, verify
+    them in ONE batched forward pass of the target model — amortizing one
+    weight-stream read (the paper's decode bottleneck, Table II) over up
+    to K+1 emitted tokens."""
+
+    drafter: str = "ngram"          # ngram | model | selfspec
+    k: int = 4                      # initial draft length per verify step
+    k_min: int = 1                  # adaptive-K floor
+    k_max: int = 8                  # adaptive-K ceiling (fixed verify shape)
+    adaptive: bool = True           # back off K when acceptance drops
+    accept_low: float = 0.4         # EMA acceptance below this shrinks K
+    accept_high: float = 0.7        # EMA acceptance above this grows K
+    ema_decay: float = 0.9          # acceptance-rate EMA decay
+    temperature: float = 0.0        # 0 = greedy accept; >0 rejection sampling
+    ngram: int = 3                  # prompt-lookup: longest suffix match
+    draft_name: str = ""            # registry config for drafter="model"
+    draft_frac: float = 0.0625      # selfspec: sparse active fraction
+    predictor_rank: int = 16        # selfspec: Deja-Vu predictor rank
+    seed: int = 0                   # acceptance/draft sampling RNG
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_batch: int = 8
     max_seq: int = 2048
@@ -184,6 +207,7 @@ class ServeConfig:
     prefill_chunk: int = 32         # chunked-prefill tokens per tick
     policy: str = "fifo"            # request ordering: fifo | priority
     max_queue: int = 256            # admission control: queue depth bound
+    spec: Optional[SpecConfig] = None   # speculative decode (paged only)
 
     @property
     def blocks_per_seq(self) -> int:

@@ -30,3 +30,16 @@ CONFIG = ModelConfig(
 )
 
 SMOKE = dataclasses.replace(CONFIG, name="nectar-relu-llama-smoke")
+
+# Scaled-down draft model for speculative decoding (repro.spec): same
+# vocab/tokenizer as the target, ~8x fewer parameters — cheap enough that
+# K draft steps cost less than the one verify pass they save.
+DRAFT = dataclasses.replace(
+    CONFIG,
+    name="nectar-relu-llama-draft",
+    n_layers=2,
+    d_model=64,
+    n_heads=2,
+    n_kv_heads=2,
+    d_ff=256,
+)

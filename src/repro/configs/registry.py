@@ -25,8 +25,10 @@ REGISTRY: Dict[str, ModelConfig] = {}
 for _m in _ARCH_MODULES:
     _mod = importlib.import_module(f"repro.configs.{_m}")
     REGISTRY[_mod.CONFIG.name] = _mod.CONFIG
-    if hasattr(_mod, "SMOKE"):
-        REGISTRY[_mod.SMOKE.name] = _mod.SMOKE
+    for _alt in ("SMOKE", "DRAFT"):
+        if hasattr(_mod, _alt):
+            _cfg = getattr(_mod, _alt)
+            REGISTRY[_cfg.name] = _cfg
 
 
 def get_config(name: str) -> ModelConfig:

@@ -38,6 +38,12 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--policy", default="fifo",
                     choices=("fifo", "priority"))
+    ap.add_argument("--spec", default=None,
+                    choices=("ngram", "selfspec"),
+                    help="speculative decode drafter (paged engine only; "
+                         "the 'model' drafter needs trained draft weights "
+                         "— use the API)")
+    ap.add_argument("--spec-k", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -51,11 +57,17 @@ def main():
             params = restored["params"]
             print(f"[serve] loaded checkpoint step {latest}")
 
+    spec = None
+    if args.spec:
+        from repro.configs.base import SpecConfig
+        spec = SpecConfig(drafter=args.spec, k=args.spec_k,
+                          k_max=args.spec_k)   # user cap: adaptive K can
+        #                                        shrink below it, never exceed
     scfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
                        sparse_decode=not args.dense, paged=args.paged,
                        block_size=args.block_size,
                        prefill_chunk=args.prefill_chunk,
-                       policy=args.policy)
+                       policy=args.policy, spec=spec)
     eng = Engine(cfg, params, scfg)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
@@ -82,6 +94,11 @@ def main():
         out.update({"ttft_p99_ms": s["ttft_p99_ms"],
                     "tpot_p50_ms": s["tpot_p50_ms"],
                     "evictions": s["evictions"]})
+        if args.spec:
+            out.update({
+                "spec_steps": s["spec_steps"],
+                "spec_acceptance_rate": s["spec_acceptance_rate"],
+                "spec_tokens_per_verify": s["spec_tokens_per_verify"]})
     print(json.dumps(out, indent=1))
 
 

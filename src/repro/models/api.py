@@ -53,15 +53,24 @@ class Model:
 
     # --- paged serving (block-table KV; see repro.serve.paged_kv) ---
     def init_paged_cache(self, batch: int, n_blocks: int, block_size: int,
-                         max_blocks_per_seq: int, dtype=jnp.bfloat16):
+                         max_blocks_per_seq: int, dtype=jnp.bfloat16,
+                         int8_kv: bool = False):
         return transformer.init_paged_cache(self.cfg, batch, n_blocks,
                                             block_size, max_blocks_per_seq,
-                                            dtype)
+                                            dtype, int8_kv=int8_kv)
 
     def decode_step_paged(self, params, tokens, cache, active,
                           block_size: int):
         return transformer.decode_step_paged(params, self.cfg, tokens,
                                              cache, active, block_size)
+
+    def verify_step_paged(self, params, tokens, cache, active, n_valid,
+                          block_size: int):
+        """Speculative verify: score K+1 positions per row in one
+        fixed-shape step through block tables (see repro.spec)."""
+        return transformer.verify_step_paged(params, self.cfg, tokens,
+                                             cache, active, n_valid,
+                                             block_size)
 
     def prefill_chunk(self, params, tokens, cache, slot, pos, valid_len,
                       block_size: int):

@@ -9,7 +9,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers, rope
-from repro.models.flash import (block_causal_attention,
+from repro.models.flash import (NEG_INF, _gqa_out, _gqa_scores,
+                                block_causal_attention,
                                 blockwise_attention,
                                 reference_attention)
 
@@ -40,13 +41,24 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
 
 
 def init_paged_kv_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
-                        dtype):
+                        dtype, int8_kv: bool = False):
     """Block-pool KV storage: requests own scattered fixed-size token
     blocks instead of a contiguous [B, max_seq] row (vLLM-style paged
     attention). Block index ``n_blocks`` is the invalid sentinel — writes
-    through it drop, reads through it fill zeros."""
+    through it drop, reads through it fill zeros.
+
+    ``int8_kv``: store 1 byte/element plus one f32 scale per (token, head)
+    for each of K and V (kv_cache.quantize_kv layout) — halves the decode
+    KV stream on top of the paper's weight-side savings. Byte accounting
+    in serve.paged_kv.kv_bytes_per_token matches this layout exactly."""
     shape = (n_blocks, block_size, cfg.n_kv_heads, cfg.d_head)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if not int8_kv:
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    sshape = shape[:-1] + (1,)
+    return {"k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(sshape, jnp.float32),
+            "v_scale": jnp.zeros(sshape, jnp.float32)}
 
 
 def _qkv(p, cfg: ModelConfig, x):
@@ -149,6 +161,31 @@ def _gather_paged(cache_leaf, tables, n_blocks: int):
     return g.reshape(B, MB * bs, *cache_leaf.shape[2:])
 
 
+def _store_paged(cache: dict, name: str, blk, off, val):
+    """Scatter ``val`` into pool leaf ``name`` at (blk, off); sentinel
+    indices drop. int8 pools (leaf has a ``{name}_scale`` sibling) route
+    through kv_cache.quantize_kv: 1 byte/element + f32 per-(token, head)
+    scales. Returns the updated leaves as a dict fragment."""
+    if f"{name}_scale" not in cache:
+        return {name: cache[name].at[blk, off].set(
+            val.astype(cache[name].dtype), mode="drop")}
+    from repro.serve.kv_cache import quantize_kv  # lazy: avoids cycle
+    (q8, scale), _ = quantize_kv(val, val)
+    return {name: cache[name].at[blk, off].set(q8, mode="drop"),
+            f"{name}_scale": cache[f"{name}_scale"].at[blk, off].set(
+                scale, mode="drop")}
+
+
+def _read_paged(cache: dict, name: str, tables, n_blocks: int):
+    """Gather pool leaf ``name`` through block tables, dequantizing int8
+    pools back to f32 (sentinel blocks gather zero scales -> zeros)."""
+    g = _gather_paged(cache[name], tables, n_blocks)
+    if f"{name}_scale" not in cache:
+        return g
+    s = _gather_paged(cache[f"{name}_scale"], tables, n_blocks)
+    return g.astype(jnp.float32) * s
+
+
 def attn_decode_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
                       lens: jax.Array, tables: jax.Array, block_size: int):
     """One-token decode through block tables: the new KV scatters into
@@ -171,16 +208,14 @@ def attn_decode_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
     col = jnp.minimum(lens // block_size, MB - 1)
     blk = tables[rows, col]                      # [B]; sentinel for inactive
     off = lens % block_size
-    ck = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype),
-                                     mode="drop")
-    cv = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype),
-                                     mode="drop")
-    kg = _gather_paged(ck, tables, n_blocks)
-    vg = _gather_paged(cv, tables, n_blocks)
+    new_cache = {**_store_paged(cache, "k", blk, off, k[:, 0]),
+                 **_store_paged(cache, "v", blk, off, v[:, 0])}
+    kg = _read_paged(new_cache, "k", tables, n_blocks)
+    vg = _read_paged(new_cache, "v", tables, n_blocks)
     qg = q.reshape(B, 1, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
     o = reference_attention(qg, kg, vg, causal=False, kv_len=lens + 1)
     o = o.reshape(B, 1, cfg.n_heads * cfg.d_head)
-    return o @ p["wo"], {"k": ck, "v": cv}
+    return o @ p["wo"], new_cache
 
 
 def attn_prefill_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
@@ -207,15 +242,61 @@ def attn_prefill_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
                    fill_value=n_blocks)
     blk = jnp.where(j < valid_len, blk, n_blocks)       # pad writes drop
     off = gpos % block_size
-    ck = cache["k"].at[blk, off].set(k[0].astype(cache["k"].dtype),
-                                     mode="drop")
-    cv = cache["v"].at[blk, off].set(v[0].astype(cache["v"].dtype),
-                                     mode="drop")
-    kg = _gather_paged(ck, table_row[None], n_blocks)
-    vg = _gather_paged(cv, table_row[None], n_blocks)
+    new_cache = {**_store_paged(cache, "k", blk, off, k[0]),
+                 **_store_paged(cache, "v", blk, off, v[0])}
+    kg = _read_paged(new_cache, "k", table_row[None], n_blocks)
+    vg = _read_paged(new_cache, "v", table_row[None], n_blocks)
     qg = q.reshape(1, C, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
     o = blockwise_attention(qg, kg, vg, causal=True, block_kv=block_kv,
                             q_offset=jnp.asarray(pos)[None],
                             kv_len=jnp.asarray(pos + valid_len)[None])
     o = o.reshape(1, C, cfg.n_heads * cfg.d_head)
-    return o @ p["wo"], {"k": ck, "v": cv}
+    return o @ p["wo"], new_cache
+
+
+def attn_verify_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
+                      lens: jax.Array, n_valid: jax.Array,
+                      tables: jax.Array, block_size: int):
+    """Speculative-verify attention: score S = K+1 positions per row in ONE
+    step through block tables. Row b's queries sit at absolute positions
+    lens[b]+j for j in [0, S); their KV scatters through the row's block
+    table (positions j >= n_valid[b] are padding: sentinel writes drop) and
+    each query attends causally to [0, lens[b]+j] — prior context plus the
+    draft prefix before it. This is how one weight-stream read serves K+1
+    token scores (the whole point of speculative decode on a memory-bound
+    target, paper Table II).
+
+    x: [B, S, d]; lens/n_valid: i32[B]; tables: i32[B, MB] (inactive rows
+    all-sentinel). Returns (out [B, S, n_heads*d_head] @ wo, new_cache).
+    """
+    B, S, _ = x.shape
+    n_blocks = cache["k"].shape[0]
+    MB = tables.shape[1]
+    q, k, v = _qkv(p, cfg, x)
+    q = rope.apply_rope(q, cos, sin)
+    k = rope.apply_rope(k, cos, sin)
+    j = jnp.arange(S)
+    gpos = lens[:, None] + j[None, :]                     # [B, S]
+    col = jnp.minimum(gpos // block_size, MB - 1)
+    blk = jnp.take_along_axis(tables, col, axis=1)        # [B, S]
+    blk = jnp.where((j[None, :] < n_valid[:, None])
+                    & (gpos // block_size < MB), blk, n_blocks)
+    off = gpos % block_size
+    new_cache = {**_store_paged(cache, "k", blk, off, k),
+                 **_store_paged(cache, "v", blk, off, v)}
+    kg = _read_paged(new_cache, "k", tables, n_blocks)    # [B, MBbs, Kv, Dh]
+    vg = _read_paged(new_cache, "v", tables, n_blocks)
+    qg = q.reshape(B, S, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
+    # per-(row, position) causal mask: kv position t visible to query j of
+    # row b iff t <= lens[b]+j. S is small (k_max+1), so full scores are
+    # [B, Kv, G, S, MB*bs] — same order as the decode step's reference path.
+    scale = jnp.asarray(cfg.d_head ** -0.5, qg.dtype)
+    s = _gqa_scores(qg * scale, kg)
+    Skv = kg.shape[1]
+    vis = jnp.arange(Skv)[None, None, :] <= gpos[:, :, None]   # [B, S, Skv]
+    s = jnp.where(vis[:, None, None], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    o = _gqa_out(probs, vg)
+    o = jnp.moveaxis(o, -2, 1).astype(x.dtype)
+    o = o.reshape(B, S, cfg.n_heads * cfg.d_head)
+    return o @ p["wo"], new_cache

@@ -116,6 +116,31 @@ def block_decode_paged(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
     raise ValueError(f"paged decode requires attention blocks, got {kind!r}")
 
 
+def block_verify_paged(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
+    """One speculative-verify step: K+1 positions per row through block
+    tables (attention in attention.attn_verify_paged)."""
+    if kind == "shared_attn":
+        p = ctx["shared_params"]
+    if kind in ("attn", "shared_attn", "moe"):
+        h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+        a, new_cache = attention.attn_verify_paged(
+            p["attn"], cfg, h, ctx["cos"], ctx["sin"], cache, ctx["lens"],
+            ctx["n_valid"], ctx["tables"], ctx["block_size"])
+        x = x + a
+        h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            y, _ = moe.moe_forward(p["moe"], cfg, h)
+        else:
+            # ffn_decode, not ffn_forward: verify must score each position
+            # with EXACTLY the decode-step math (sparse gather under
+            # relu_sparse) or greedy spec output would drift from the
+            # non-speculative engine. gathered_sparse_ffn is per-position,
+            # so it applies unchanged to the K+1-token verify batch.
+            y = ffn.ffn_decode(p["ffn"], cfg, h)
+        return x + y, new_cache
+    raise ValueError(f"paged verify requires attention blocks, got {kind!r}")
+
+
 def block_prefill_paged(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
     """One chunked-prefill step (batch-1 chunk) through block tables."""
     if kind == "shared_attn":
@@ -216,7 +241,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, n_blocks: int,
-                     block_size: int, max_blocks_per_seq: int, dtype):
+                     block_size: int, max_blocks_per_seq: int, dtype,
+                     int8_kv: bool = False):
     """Paged decode cache: one shared block pool per attention layer plus
     per-slot block tables (sentinel-filled; serve.paged_kv assigns blocks).
     Requires an attention-only pattern — recurrent blocks keep O(1) state
@@ -230,7 +256,7 @@ def init_paged_cache(cfg: ModelConfig, batch: int, n_blocks: int,
 
     def one_unit():
         return {f"b{j}": attention.init_paged_kv_cache(
-                    cfg, n_blocks, block_size, dtype)
+                    cfg, n_blocks, block_size, dtype, int8_kv=int8_kv)
                 for j, kind in enumerate(unit)}
 
     units = [one_unit() for _ in range(cfg.n_units)]
@@ -456,6 +482,61 @@ def decode_step_paged(params, cfg: ModelConfig, tokens, cache, active,
     x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = project_logits(params, cfg, x)
     return logits, {"lens": jnp.where(active > 0, lens + 1, lens),
+                    "block_tables": cache["block_tables"],
+                    "units": new_units}
+
+
+def verify_step_paged(params, cfg: ModelConfig, tokens, cache, active,
+                      n_valid, block_size: int):
+    """Speculative verification: score S = K+1 positions per row in ONE
+    fixed-shape step through block tables. Row b's tokens are [last
+    committed token, draft_1 .. draft_K, pad...]; logits[b, j] is the
+    target distribution for the token FOLLOWING tokens[b, j], so the
+    engine can accept a draft prefix and take the first-divergence
+    correction (or the bonus token) from the same pass.
+
+    tokens: i32[B, S]; active/n_valid: i32[B] (n_valid = 1 + drafts
+    proposed for the row; positions past it are padding — their KV writes
+    drop). ``lens`` does NOT advance here: only the engine knows how many
+    drafts were accepted, so it commits lens (and truncates the block
+    tables) host-side after acceptance. Returns (logits [B, S, V],
+    new_cache)."""
+    if cfg.n_codebooks or cfg.mrope:
+        raise ValueError(
+            f"{cfg.name}: speculative verify supports plain token streams "
+            f"only (no codebooks / M-RoPE)")
+    x = _embed_inputs(params, cfg, {"tokens": tokens})
+    B, S, _ = x.shape
+    lens = cache["lens"]
+    positions = lens[:, None] + jnp.arange(S)[None, :]
+    cos, sin = _rope_tables(cfg, positions)
+    if cfg.pos_emb == "sin":
+        x = x + layers.sinusoidal_positions(positions,
+                                            cfg.d_model).astype(x.dtype)
+
+    n_blocks = jax.tree.leaves(cache["units"])[0].shape[1]
+    tables = jnp.where(active[:, None] > 0, cache["block_tables"], n_blocks)
+    ctx = {"cos": cos, "sin": sin, "lens": lens, "n_valid": n_valid,
+           "tables": tables, "block_size": block_size,
+           "shared_params": params.get("shared")}
+    unit = cfg.pattern_unit()
+
+    def unit_body(x, xs):
+        unit_p, unit_cache = xs
+        new_caches = {}
+        for j, kind in enumerate(unit):
+            bp = unit_p.get(f"b{j}")
+            x, nc = block_verify_paged(kind, bp, cfg, x, ctx,
+                                       unit_cache[f"b{j}"])
+            x = constrain_residual(x)
+            new_caches[f"b{j}"] = nc
+        return x, new_caches
+
+    x, new_units = jax.lax.scan(unit_body, x,
+                                (params["units"], cache["units"]))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = project_logits(params, cfg, x)
+    return logits, {"lens": lens,
                     "block_tables": cache["block_tables"],
                     "units": new_units}
 

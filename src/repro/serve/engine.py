@@ -35,7 +35,12 @@ from repro.serve.scheduler import Request, SchedEntry, Scheduler, State
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 drafter=None, draft_params=None):
+        """``scfg.spec`` turns on speculative decode (paged mode only).
+        ``drafter`` injects a ready-made repro.spec.Drafter; otherwise one
+        is built from the spec config (``draft_params`` supplies the
+        small-model weights for spec.drafter='model')."""
         self.cfg = cfg
         self.scfg = scfg
         self.model = Model(cfg)
@@ -43,8 +48,17 @@ class Engine:
         self.metrics = metrics_mod.MetricsCollector(cfg, scfg)
         self._requests: Dict[int, Request] = {}
         self._rids = itertools.count()
+        self.spec = scfg.spec
+        self.drafter = None
+        if self.spec is not None and not scfg.paged:
+            raise ValueError("speculative decode (ServeConfig.spec) "
+                             "requires the paged engine (paged=True)")
+        if self.spec is not None and (cfg.n_codebooks or cfg.mrope):
+            raise ValueError(
+                f"{cfg.name}: speculative decode supports plain token "
+                f"streams only (no codebooks / M-RoPE)")
         if scfg.paged:
-            self._init_paged()
+            self._init_paged(drafter, draft_params)
         else:
             self._init_slots()
 
@@ -123,7 +137,7 @@ class Engine:
     # ------------------------------------------------------------------
     # paged mode: scheduler + block-table KV
 
-    def _init_paged(self):
+    def _init_paged(self, drafter=None, draft_params=None):
         scfg = self.scfg
         bs = scfg.block_size
         self.pool = paged_kv.PagedKVCache(
@@ -134,7 +148,7 @@ class Engine:
         self.sched = Scheduler(scfg, self.pool)
         self.cache = self.model.init_paged_cache(
             scfg.max_batch, scfg.pool_blocks, bs, scfg.blocks_per_seq,
-            jnp.float32)
+            jnp.float32, int8_kv=scfg.kv_quant)
         mdl = self.model
         self._decode_paged = jax.jit(
             lambda p, t, c, a: mdl.decode_step_paged(p, t, c, a, bs))
@@ -143,6 +157,25 @@ class Engine:
                                                          v, bs))
         self._kv_per_tok = paged_kv.kv_bytes_per_token(self.cfg,
                                                        scfg.kv_quant)
+        if self.spec is not None:
+            from repro import spec as spec_mod
+            self.drafter = drafter if drafter is not None else \
+                spec_mod.make_drafter(self.spec, self.cfg, self.params,
+                                      scfg, draft_params=draft_params)
+            self.kctl = spec_mod.AdaptiveK.from_config(self.spec)
+            # acceptance RNG must be independent of the drafter's sampling
+            # RNG (both derive from spec.seed): correlated uniforms would
+            # couple accept tests to draft identities and break the
+            # rejection-sampling distribution guarantee
+            self._spec_rng = np.random.default_rng(
+                np.random.SeedSequence(self.spec.seed).spawn(1)[0])
+            self._draft_w_per_step = self.drafter.weight_bytes_per_step(
+                scfg) if hasattr(self.drafter, "weight_bytes_per_step") \
+                else 0.0
+            self._draft_steps_seen = 0
+            self._verify = jax.jit(
+                lambda p, t, c, a, nv: mdl.verify_step_paged(p, t, c, a,
+                                                             nv, bs))
 
     def _submit_paged(self, req: Request) -> bool:
         if not self.sched.submit(req):
@@ -154,28 +187,42 @@ class Engine:
     def _push_tables(self):
         self.cache["block_tables"] = jnp.asarray(self.pool.tables())
 
-    def _ensure_blocks(self, e: SchedEntry, upto_len: int) -> bool:
-        """Grow e's block list to cover [0, upto_len), evicting victims
-        (lowest priority, newest) until it fits. False when upto_len can
-        never fit a table row."""
+    def _ensure_blocks(self, e: SchedEntry, upto_len: int) -> str:
+        """Grow e's block list to cover [0, upto_len), evicting only
+        victims that rank strictly below e until it fits. Returns "ok",
+        "defer" (capacity held by higher-precedence requests — retry next
+        tick), or "never" (upto_len can never fit a table row)."""
         if self.pool.blocks_for(upto_len) > self.pool.max_blocks_per_seq:
-            return False
+            return "never"
         while not self.pool.allocate(e.slot, upto_len):
-            victim = self.sched.pick_victim(exclude_rid=e.req.rid)
+            victim = self.sched.pick_victim(e)
             if victim is None:
-                raise RuntimeError(
-                    f"KV pool too small: {self.pool.n_blocks} blocks of "
-                    f"{self.pool.block_size} cannot hold one request of "
-                    f"{upto_len} tokens")
+                if self.sched.n_active <= 1:
+                    raise RuntimeError(
+                        f"KV pool too small: {self.pool.n_blocks} blocks "
+                        f"of {self.pool.block_size} cannot hold one "
+                        f"request of {upto_len} tokens")
+                return "defer"
             self.metrics.on_preemption(victim.req.rid)
             self.sched.preempt(victim)
-        return True
+        return "ok"
 
     def _greedy_scalar(self, logits, row: int = 0):
         nxt = self.model.greedy_token(logits)
         if self.cfg.n_codebooks:
             return np.asarray(nxt[row, 0])
         return int(nxt[row, 0])
+
+    def _first_token(self, logits, row: int = 0):
+        """Token emitted from prefill logits. Under spec temperature
+        sampling this must be a temperature sample too — every emitted
+        token of the stream is distributed as the target, not just the
+        verify-phase ones."""
+        if self.spec is not None and self.spec.temperature > 0:
+            from repro.spec.accept import softmax
+            p = softmax(np.asarray(logits)[row, 0], self.spec.temperature)
+            return int(self._spec_rng.choice(len(p), p=p))
+        return self._greedy_scalar(logits, row)
 
     def _token_batch(self, pairs):
         """[(slot, last_token)] -> i32[B, 1(, nc)] decode input."""
@@ -200,9 +247,10 @@ class Engine:
         pf = self.sched.next_prefill()
         if pf is not None:
             e, pos, valid = pf
-            if not self._ensure_blocks(e, pos + valid):
+            st = self._ensure_blocks(e, pos + valid)
+            if st == "never":
                 self._finish(e, finished)      # prompt can't fit: give up
-            else:
+            elif st == "ok":
                 toks = e.prefill_tokens()
                 C = self.scfg.prefill_chunk
                 chunk = np.zeros((1, C) + toks.shape[1:], np.int32)
@@ -218,44 +266,191 @@ class Engine:
                     e.state = State.RUNNING
                     if e.replay:
                         e.replay = False       # next token already known
+                        if e.resync_replay:
+                            # prompt KV restored; generated KV re-derives
+                            # through verify steps (bit-identical to how
+                            # it was first written) before drafting resumes
+                            e.resync = [int(t) for t
+                                        in e.req.tokens_out[:-1]]
+                            e.resync_replay = False
                     else:
-                        e.req.tokens_out.append(self._greedy_scalar(logits))
+                        e.req.tokens_out.append(self._first_token(logits))
                         self.metrics.on_first_token(e.req.rid)
                         if len(e.req.tokens_out) >= e.req.max_new:
                             self._finish(e, finished)
 
-        # 2) one batched decode step across RUNNING rows
+        # 2) one batched decode (or draft->verify) step across RUNNING rows
+        if self.spec is not None:
+            self._spec_phase(finished)
+        else:
+            self._decode_phase(finished)
+        return finished
+
+    def _decode_phase(self, finished: List[int]):
+        """One batched single-token decode step (non-speculative path)."""
+        deferred = set()
         for e in list(self.sched.decode_entries()):
             if e.req.rid not in self.sched.active:
                 continue                       # evicted making room above
-            if not self._ensure_blocks(e, e.ctx_len + 1):
+            st = self._ensure_blocks(e, e.ctx_len + 1)
+            if st == "never":
                 self._finish(e, finished)      # context ceiling reached
-        rows = self.sched.decode_entries()
-        if rows:
-            tok = self._token_batch([(e.slot, e.req.tokens_out[-1])
-                                     for e in rows])
-            active = np.zeros((self.scfg.max_batch,), np.int32)
-            for e in rows:
-                active[e.slot] = 1
-            self._push_tables()
-            logits, self.cache = self._decode_paged(
-                self.params, jnp.asarray(tok), self.cache,
-                jnp.asarray(active))
-            nxt = np.asarray(self.model.greedy_token(logits))
-            kv_read = sum(e.ctx_len for e in rows) * self._kv_per_tok
-            for e in rows:
-                e.req.tokens_out.append(self._extract_token(nxt, e.slot))
-                e.ctx_len += 1
+            elif st == "defer":
+                deferred.add(e.req.rid)        # wait for capacity
+        rows = [e for e in self.sched.decode_entries()
+                if e.req.rid not in deferred]
+        if not rows:
+            return
+        tok = self._token_batch([(e.slot, e.req.tokens_out[-1])
+                                 for e in rows])
+        active = np.zeros((self.scfg.max_batch,), np.int32)
+        for e in rows:
+            active[e.slot] = 1
+        self._push_tables()
+        logits, self.cache = self._decode_paged(
+            self.params, jnp.asarray(tok), self.cache,
+            jnp.asarray(active))
+        nxt = np.asarray(self.model.greedy_token(logits))
+        kv_read = sum(e.ctx_len for e in rows) * self._kv_per_tok
+        for e in rows:
+            e.req.tokens_out.append(self._extract_token(nxt, e.slot))
+            e.ctx_len += 1
+            self.metrics.on_token(e.req.rid)
+            if len(e.req.tokens_out) >= e.req.max_new \
+                    or e.ctx_len + 1 > self.scfg.max_seq:
+                self._finish(e, finished)
+        self.metrics.on_decode_step(len(rows), kv_bytes=kv_read)
+
+    def _spec_phase(self, finished: List[int]):
+        """Draft -> batched verify -> accept/rollback, one pass per tick.
+
+        Each RUNNING row gets up to K draft tokens from the drafter; the
+        target scores all of them (plus the pending last token) in ONE
+        fixed-shape verify step through the block tables; acceptance
+        commits the longest correct prefix + one free target token, and
+        the pool rolls the rejected tail's blocks back (truncate). Slots
+        are pinned across the verify so a concurrent defrag can't move
+        blocks the in-flight step has captured."""
+        from repro.spec import greedy_accept, rejection_accept
+
+        spec = self.spec
+        K = self.kctl.k if spec.adaptive else min(spec.k, spec.k_max)
+        S = spec.k_max + 1                      # fixed verify shape
+        # grow each row's block list to cover its worst-case speculative
+        # or resync tail FIRST (evicting strictly-lower-precedence victims
+        # if needed — exactly the decode path's policy): drafting is K
+        # draft-model steps per row, so rows that end up deferred or
+        # evicted must not burn that work. Over-reservation for short
+        # proposals is returned by the post-commit truncate below.
+        deferred = set()
+        for e in list(self.sched.decode_entries()):
+            if e.req.rid not in self.sched.active:
+                continue
+            need = min(len(e.resync), S) if e.resync \
+                else min(K, max(self.scfg.max_seq - e.ctx_len - 2, 0)) + 1
+            st = self._ensure_blocks(e, e.ctx_len + need)
+            if st == "never":
+                self._finish(e, finished)
+            elif st == "defer":
+                deferred.add(e.req.rid)
+        rows = [e for e in self.sched.decode_entries()
+                if e.req.rid not in deferred]
+        if not rows:
+            return
+
+        # rows replaying after eviction re-feed committed tokens through
+        # the SAME verify math that originally wrote their KV ("resync":
+        # forced acceptance, no emission) — a dense-prefill recompute of
+        # those positions would differ from the sparse-FFN decode path
+        # and could flip a later greedy argmax.
+        proposals: Dict[int, tuple] = {}
+        for e in rows:
+            if e.resync:
+                chunk = np.asarray(e.resync[:S], np.int32)
+                proposals[e.req.rid] = ("resync", chunk, None)
+                continue
+            budget = min(K, self.scfg.max_seq - e.ctx_len - 2)
+            ctx = np.concatenate([
+                np.asarray(e.req.prompt, np.int32),
+                np.asarray(e.req.tokens_out, np.int32)])
+            toks, qd = self.drafter.propose(e.req.rid, ctx, max(budget, 0))
+            proposals[e.req.rid] = ("draft", np.asarray(toks, np.int32), qd)
+
+        tok = np.zeros((self.scfg.max_batch, S), np.int32)
+        n_valid = np.zeros((self.scfg.max_batch,), np.int32)
+        active = np.zeros((self.scfg.max_batch,), np.int32)
+        for e in rows:
+            kind, toks, _ = proposals[e.req.rid]
+            if kind == "resync":
+                tok[e.slot, :len(toks)] = toks
+                n_valid[e.slot] = len(toks)
+            else:
+                tok[e.slot, 0] = e.req.tokens_out[-1]
+                tok[e.slot, 1:1 + len(toks)] = toks
+                n_valid[e.slot] = 1 + len(toks)
+            active[e.slot] = 1
+            self.pool.pin(e.slot)
+        self._push_tables()
+        logits, self.cache = self._verify(
+            self.params, jnp.asarray(tok), self.cache, jnp.asarray(active),
+            jnp.asarray(n_valid))
+        log = np.asarray(logits)
+        lens_np = np.asarray(self.cache["lens"]).copy()
+
+        kv_read = 0.0
+        drafted = accepted = emitted_total = 0
+        for e in rows:
+            kind, toks, qd = proposals[e.req.rid]
+            m = len(toks)
+            nv = int(n_valid[e.slot])           # query j reads ctx+j keys
+            kv_read += (nv * e.ctx_len
+                        + nv * (nv - 1) / 2) * self._kv_per_tok
+            if kind == "resync":
+                # committed history: KV now re-written, nothing to emit
+                e.ctx_len += m
+                del e.resync[:m]
+                lens_np[e.slot] = e.ctx_len
+                self.pool.unpin(e.slot)
+                continue
+            row_logits = log[e.slot, :m + 1]
+            if spec.temperature <= 0:
+                emitted, a = greedy_accept(
+                    toks, row_logits.argmax(axis=-1).astype(np.int32))
+            else:
+                emitted, a = rejection_accept(
+                    self._spec_rng, toks, qd, row_logits, spec.temperature)
+            drafted += m
+            accepted += a
+            space = e.req.max_new - len(e.req.tokens_out)
+            emitted = emitted[:space]
+            e.req.tokens_out.extend(emitted)
+            for _ in emitted:
                 self.metrics.on_token(e.req.rid)
-                if len(e.req.tokens_out) >= e.req.max_new \
-                        or e.ctx_len + 1 > self.scfg.max_seq:
-                    self._finish(e, finished)
-            self.metrics.on_decode_step(len(rows), kv_bytes=kv_read)
-        return finished
+            emitted_total += len(emitted)
+            e.ctx_len += len(emitted)
+            lens_np[e.slot] = e.ctx_len
+            # rollback: free whole blocks past the committed frontier
+            self.pool.truncate(e.slot, e.ctx_len)
+            self.pool.unpin(e.slot)
+            if len(e.req.tokens_out) >= e.req.max_new \
+                    or e.ctx_len + 1 > self.scfg.max_seq:
+                self._finish(e, finished)
+        self.cache["lens"] = jnp.asarray(lens_np)
+        draft_steps = getattr(self.drafter, "steps", 0)
+        draft_w = (draft_steps - self._draft_steps_seen) \
+            * self._draft_w_per_step
+        self._draft_steps_seen = draft_steps
+        self.metrics.on_spec_step(len(rows), drafted, accepted,
+                                  emitted_total, kv_bytes=kv_read,
+                                  draft_weight_bytes=draft_w)
+        if spec.adaptive and drafted:
+            self.kctl.update(accepted / drafted)
 
     def _finish(self, e: SchedEntry, finished: List[int]):
         self.metrics.on_finish(e.req.rid)
         self.sched.finish(e)
+        if self.drafter is not None:
+            self.drafter.forget(e.req.rid)
         finished.append(e.req.rid)
 
     def defrag(self):

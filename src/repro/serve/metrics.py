@@ -119,6 +119,11 @@ class MetricsCollector:
         self.decode_steps = 0
         self.prefill_chunks = 0
         self.evictions = 0
+        # --- speculative decode (repro.spec) ---
+        self.spec_steps = 0          # verify passes
+        self.spec_drafted = 0        # draft tokens proposed
+        self.spec_accepted = 0       # draft tokens accepted
+        self.spec_emitted = 0        # tokens committed via verify passes
         self._t0: Optional[float] = None
 
     # --- request lifecycle events ---
@@ -156,6 +161,23 @@ class MetricsCollector:
     def on_prefill_chunk(self, n_tokens: int):
         self.prefill_chunks += 1
 
+    def on_spec_step(self, n_rows: int, drafted: int, accepted: int,
+                     emitted: int, kv_bytes: Optional[float] = None,
+                     draft_weight_bytes: float = 0.0):
+        """One draft->verify pass: ``emitted`` tokens committed for one
+        target weight-stream read (the amortization speculative decode
+        buys on a memory-bound target). ``draft_weight_bytes`` adds the
+        drafter's own weight stream (0 for n-gram, the draft model's
+        stream for model/selfspec) so Table-II totals stay honest."""
+        self.spec_steps += 1
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        self.spec_emitted += emitted
+        stats = traffic_step(self.cfg, self.scfg, emitted,
+                             kv_bytes=kv_bytes)
+        stats.weight_bytes += draft_weight_bytes
+        self.step_stats.append(stats)
+
     # --- summary ---
     def summary(self) -> dict:
         done = [r for r in self.requests.values()
@@ -178,6 +200,11 @@ class MetricsCollector:
             "decode_steps": self.decode_steps,
             "prefill_chunks": self.prefill_chunks,
             "evictions": self.evictions,
+            "spec_steps": self.spec_steps,
+            "spec_acceptance_rate": (self.spec_accepted
+                                     / max(self.spec_drafted, 1)),
+            "spec_tokens_per_verify": (self.spec_emitted
+                                       / max(self.spec_steps, 1)),
             "weight_bytes": sum(s.weight_bytes for s in self.step_stats),
             "kv_bytes": sum(s.kv_bytes for s in self.step_stats),
             "sparse_savings_bytes": sum(s.sparse_savings_bytes

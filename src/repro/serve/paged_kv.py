@@ -17,7 +17,7 @@ path: writes through it drop, reads through it fill zeros.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 import numpy as np
 
@@ -60,6 +60,7 @@ class PagedKVCache:
                                self.n_blocks, np.int32)
         self.alloc_count = 0
         self.free_count = 0
+        self.pinned: Set[int] = set()              # slots mid-verify
 
     # --- capacity ---------------------------------------------------------
     @property
@@ -104,10 +105,41 @@ class PagedKVCache:
         self.free.extend(blocks)
         self._tables[slot, :] = self.n_blocks
         self.free_count += len(blocks)
+        self.pinned.discard(slot)
         return len(blocks)
+
+    def truncate(self, slot: int, new_len: int) -> int:
+        """Speculative rollback: shrink ``slot`` to cover only positions
+        [0, new_len), freeing whole tail blocks. The partial tail block
+        (the one containing position new_len-1) is kept — its stale
+        positions >= new_len are masked by ``lens`` on the read path and
+        overwritten by the next decode/verify write. Idempotent: calling
+        again with the same length frees nothing. Returns blocks freed."""
+        blocks = self.owned.get(slot)
+        if not blocks:
+            return 0
+        keep = self.blocks_for(max(new_len, 0))
+        freed = blocks[keep:]
+        if not freed:
+            return 0
+        del blocks[keep:]
+        self.free.extend(freed)
+        self._tables[slot, keep:] = self.n_blocks
+        self.free_count += len(freed)
+        return len(freed)
 
     def tables(self) -> np.ndarray:
         return self._tables
+
+    # --- pinning (spec decode: slot is mid-verify) ------------------------
+    def pin(self, slot: int) -> None:
+        """Freeze ``slot``'s physical block ids: a verify step in flight
+        has captured them in a device block table, so defrag must not
+        move them until the step commits (unpin)."""
+        self.pinned.add(slot)
+
+    def unpin(self, slot: int) -> None:
+        self.pinned.discard(slot)
 
     # --- defrag -----------------------------------------------------------
     def defrag(self) -> Optional[np.ndarray]:
@@ -117,18 +149,26 @@ class PagedKVCache:
         None if already compact. With block indirection defrag is never
         needed for correctness — it restores locality for the streaming
         prefetcher after heavy churn (paper's best-offset prefetcher
-        expects near-sequential block reads)."""
-        live = sorted(b for blocks in self.owned.values() for b in blocks)
-        if live == list(range(len(live))):
+        expects near-sequential block reads). Blocks of pinned slots
+        (mid-verify) are never moved; the rest compact around them."""
+        keep = {b for s in self.pinned for b in self.owned.get(s, ())}
+        movable = sorted(b for s, blocks in self.owned.items()
+                         if s not in self.pinned for b in blocks)
+        targets = [i for i in range(self.n_blocks) if i not in keep]
+        targets = targets[:len(movable)]
+        if movable == targets:
             return None
-        remap = {old: new for new, old in enumerate(live)}
+        remap = {old: new for old, new in zip(movable, targets)}
         perm = np.arange(self.n_blocks, dtype=np.int32)
         for old, new in remap.items():
             perm[new] = old
         for slot, blocks in self.owned.items():
+            if slot in self.pinned:
+                continue
             self.owned[slot] = [remap[b] for b in blocks]
             self._tables[slot, :len(blocks)] = self.owned[slot]
-        self.free = list(range(len(live), self.n_blocks))
+        live = keep | set(targets)
+        self.free = [i for i in range(self.n_blocks) if i not in live]
         return perm
 
     # --- byte accounting (paper Table II currency) ------------------------

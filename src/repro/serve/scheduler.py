@@ -57,14 +57,26 @@ class SchedEntry:
     pos: int = 0                # prefill frontier (tokens written)
     ctx_len: int = 0            # device lens[slot] mirror once RUNNING
     replay: bool = False        # re-prefill after eviction
+    resync_replay: bool = False  # spec mode: replay prompt only, then
+    #                              re-feed generated KV via verify steps
+    resync: List[int] = dataclasses.field(default_factory=list)
 
     def prefill_tokens(self) -> np.ndarray:
         """What chunked prefill must process: the prompt, plus — after an
         eviction — every generated token except the last (whose KV is
         written by the next decode step, same as the steady-state
-        invariant)."""
+        invariant).
+
+        Speculative engines replay the prompt ONLY (resync_replay): the
+        generated tokens' KV was originally written by verify steps,
+        whose per-position FFN is the lossy sparse-gather decode path —
+        re-deriving it through the dense prefill FFN would produce
+        slightly different KV and can flip a later greedy argmax. The
+        engine re-feeds those tokens through the same verify step instead
+        (``resync``), which is bit-identical."""
         prompt = np.asarray(self.req.prompt)
-        if not self.replay or len(self.req.tokens_out) <= 1:
+        if not self.replay or self.resync_replay \
+                or len(self.req.tokens_out) <= 1:
             return prompt
         gen = np.asarray(self.req.tokens_out[:-1], dtype=prompt.dtype)
         return np.concatenate([prompt, gen], axis=0)
@@ -138,11 +150,17 @@ class Scheduler:
                        if e.state == State.RUNNING), key=lambda e: e.slot)
 
     # --- preemption -------------------------------------------------------
-    def pick_victim(self, exclude_rid: int) -> Optional[SchedEntry]:
-        """Lowest-priority, latest-admitted active request (never the one
-        we are trying to serve)."""
-        cands = [e for e in self.active.values()
-                 if e.req.rid != exclude_rid]
+    def pick_victim(self, e: SchedEntry) -> Optional[SchedEntry]:
+        """Lowest-precedence active request ranking strictly BELOW the
+        requester. The strict ordering matters: if eviction were mutual,
+        two requests too big to coexist would evict each other forever —
+        zero tokens of progress per cycle (observed once speculative
+        resync widened the readmit-to-first-emit window). With it, the
+        highest-precedence request always wins its blocks and runs to
+        completion; the loser defers until capacity returns."""
+        ek = self._key(e)
+        cands = [v for v in self.active.values()
+                 if v.req.rid != e.req.rid and self._key(v) > ek]
         if not cands:
             return None
         return max(cands, key=self._key)
@@ -157,6 +175,8 @@ class Scheduler:
         e.ctx_len = 0
         e.state = State.WAITING
         e.replay = bool(e.req.tokens_out)
+        e.resync_replay = e.replay and self.scfg.spec is not None
+        e.resync = []
         self.waiting.append(e)
         self.waiting.sort(key=self._key)
         self.n_preemptions += 1

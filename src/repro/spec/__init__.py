@@ -1,0 +1,67 @@
+"""Speculative decoding on the paged engine (repro.spec).
+
+The paper's decode path is memory-bound: every emitted token re-streams
+the full weight set (Table II), which is why NeCTAr chases sparsity to
+"halve weight reads". Speculative decoding attacks the same bytes-per-
+token bottleneck from the other side — a cheap *drafter* proposes K
+tokens, the target model scores all K+1 positions in ONE fixed-shape
+verify pass through the block tables, and an acceptance rule commits the
+longest correct prefix. One weight-stream read then serves up to K+1
+emitted tokens.
+
+Pieces:
+  * drafter.py   — ``Drafter`` protocol; prompt-lookup n-gram drafter and
+                   a small-model drafter (scaled-down config, shared vocab)
+  * selfspec.py  — self-speculation: the target drafts for itself through
+                   a cheap sparse-FFN pass gated by the Deja-Vu predictor
+                   (core.sparsity.SparsityPredictor)
+  * accept.py    — greedy acceptance and distribution-correct rejection
+                   sampling (Leviathan et al.)
+  * controller.py— adaptive draft length K (back off when acceptance drops)
+
+Engine integration lives in serve.engine (``ServeConfig(spec=...)``);
+paged-KV fork/rollback is ``serve.paged_kv.PagedKVCache.truncate`` plus
+pin/unpin around the in-flight verify.
+"""
+
+from repro.configs.base import ModelConfig, ServeConfig, SpecConfig
+from repro.spec.accept import greedy_accept, rejection_accept
+from repro.spec.controller import AdaptiveK
+from repro.spec.drafter import Drafter, ModelDrafter, NGramDrafter
+from repro.spec.selfspec import SelfSpecDrafter
+
+__all__ = ["AdaptiveK", "Drafter", "ModelDrafter", "NGramDrafter",
+           "SelfSpecDrafter", "SpecConfig", "greedy_accept", "make_drafter",
+           "rejection_accept"]
+
+
+def make_drafter(spec: SpecConfig, cfg: ModelConfig, params,
+                 scfg: ServeConfig, draft_params=None) -> Drafter:
+    """Build the drafter named by ``spec.drafter`` for a target model.
+
+    ``model`` needs ``draft_params`` (weights for ``spec.draft_name``, a
+    registry config sharing the target's vocab); ``ngram`` and
+    ``selfspec`` need nothing beyond the target itself."""
+    if spec.drafter == "ngram":
+        return NGramDrafter(n=spec.ngram)
+    if spec.drafter == "selfspec":
+        return SelfSpecDrafter(cfg, params, scfg.max_seq,
+                               frac=spec.draft_frac,
+                               rank=spec.predictor_rank,
+                               temperature=spec.temperature, seed=spec.seed)
+    if spec.drafter == "model":
+        if draft_params is None:
+            raise ValueError(
+                "spec.drafter='model' needs draft_params (weights for the "
+                f"draft config {spec.draft_name!r})")
+        from repro.configs import get_config
+        dcfg = get_config(spec.draft_name)
+        if dcfg.vocab != cfg.vocab:
+            raise ValueError(
+                f"draft model {dcfg.name} vocab {dcfg.vocab} != target "
+                f"vocab {cfg.vocab}; drafter and target must share a "
+                f"tokenizer")
+        return ModelDrafter(dcfg, draft_params, scfg.max_seq,
+                            temperature=spec.temperature, seed=spec.seed)
+    raise ValueError(f"unknown drafter {spec.drafter!r} "
+                     f"(ngram | model | selfspec)")

@@ -1,0 +1,89 @@
+"""Acceptance rules for speculative decoding.
+
+Both rules consume the target logits of one verify pass: ``logits[j]``
+is the target's distribution for the token FOLLOWING position j, i.e.
+the position draft ``d_{j+1}`` claims. Greedy acceptance reproduces the
+non-speculative greedy stream token-for-token; rejection-sampling
+acceptance (Leviathan et al., "Fast Inference from Transformers via
+Speculative Decoding") keeps temperature sampling *distribution-
+correct*: the emitted token at every position is marginally distributed
+exactly as if it had been sampled from the target alone.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+def softmax(logits: np.ndarray, temperature: float = 1.0) -> np.ndarray:
+    z = logits.astype(np.float64) / max(temperature, 1e-6)
+    z = z - z.max(axis=-1, keepdims=True)
+    e = np.exp(z)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def greedy_accept(draft: np.ndarray,
+                  target_argmax: np.ndarray) -> Tuple[List[int], int]:
+    """Accept the longest draft prefix matching the target argmax chain.
+
+    draft: i32[m]; target_argmax: i32[m+1] (per-position argmax of the
+    verify logits). Returns (emitted tokens, n_accepted): the accepted
+    prefix plus one token the target supplies for free — the correction
+    at the first divergence, or the bonus token when everything matched.
+    Emits >= 1 token, so a verify step is never slower in tokens than a
+    plain decode step.
+    """
+    a = 0
+    emitted: List[int] = []
+    for j, d in enumerate(np.asarray(draft).tolist()):
+        if d != int(target_argmax[j]):
+            break
+        emitted.append(int(d))
+        a += 1
+    emitted.append(int(target_argmax[a]))
+    return emitted, a
+
+
+def rejection_accept(rng: np.random.Generator, draft: np.ndarray,
+                     qdists: Optional[np.ndarray], logits: np.ndarray,
+                     temperature: float) -> Tuple[List[int], int]:
+    """Distribution-correct acceptance for temperature sampling.
+
+    For each draft token x ~ q: accept with prob min(1, p(x)/q(x)); on
+    the first rejection, emit a sample from the residual
+    ``normalize(max(p - q, 0))`` and stop. If every draft survives, emit
+    a bonus sample from the target's next-position distribution. The
+    marginal of each emitted token is exactly p — so speculative sampling
+    matches non-speculative sampling in distribution, not just greedily.
+
+    draft: i32[m]; qdists: f32[m, V] draft proposal distributions, or
+    None for a deterministic drafter (one-hot q — accept prob becomes
+    p(x), residual becomes p with x's mass removed); logits: f32[m+1, V]
+    target verify logits.
+    """
+    m = len(draft)
+    emitted: List[int] = []
+    for j in range(m):
+        d = int(draft[j])
+        p = softmax(logits[j], temperature)
+        if qdists is None:
+            q_d = 1.0
+            resid = p.copy()
+            resid[d] = 0.0
+        else:
+            q = qdists[j].astype(np.float64)
+            q_d = q[d]
+            resid = np.maximum(p - q, 0.0)
+        if rng.random() < min(1.0, p[d] / max(q_d, 1e-12)):
+            emitted.append(d)
+            continue
+        total = resid.sum()
+        if total <= 0:                      # q == p exactly: resample p
+            resid, total = p, p.sum()
+        emitted.append(int(rng.choice(len(resid), p=resid / total)))
+        return emitted, j
+    p = softmax(logits[m], temperature)
+    emitted.append(int(rng.choice(len(p), p=p)))
+    return emitted, m

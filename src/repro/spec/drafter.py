@@ -1,0 +1,182 @@
+"""Draft proposers behind one ``Drafter`` protocol.
+
+A drafter sees the full committed token stream of a request (prompt +
+generated so far) and proposes up to k continuation tokens, optionally
+with its proposal distributions (needed for distribution-correct
+rejection sampling; None means the proposal is deterministic/one-hot).
+
+Drafters are host-side request-keyed objects, deliberately outside the
+jit'd target path: the scheduler can preempt/replay a request at any
+time and the drafter just re-syncs from the token stream — speculative
+state is never part of the recoverable engine state.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Protocol, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+
+
+class Drafter(Protocol):
+    def propose(self, rid: int, ctx: np.ndarray, k: int
+                ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Propose up to k tokens continuing ``ctx`` (i32[L], prompt +
+        generated). Returns (tokens i32[m<=k], qdists f32[m, V] or None
+        for deterministic proposals)."""
+        ...
+
+    def forget(self, rid: int) -> None:
+        """Drop any per-request state (request finished)."""
+        ...
+
+    def weight_bytes_per_step(self, scfg) -> float:
+        """Off-chip weight bytes one drafter decode step streams (0 for
+        model-free drafters). Folded into the engine's Table-II traffic
+        counters so drafter-vs-drafter byte comparisons stay honest."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Prompt-lookup / n-gram drafter (model-free)
+
+
+class NGramDrafter:
+    """Prompt-lookup decoding: if the last n tokens already occurred
+    earlier in the stream, propose whatever followed them last time.
+    Free to run and devastatingly effective on repetitive text (code,
+    structured output, retrieval-grounded answers) — the memory-bound
+    target then verifies K tokens per weight-stream read."""
+
+    def __init__(self, n: int = 3):
+        self.n = n
+
+    def weight_bytes_per_step(self, scfg) -> float:
+        return 0.0                    # table lookup: no weights streamed
+
+    def propose(self, rid: int, ctx: np.ndarray, k: int
+                ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        ctx = np.asarray(ctx, np.int32)
+        L = len(ctx)
+        empty = np.zeros((0,), np.int32)
+        if k <= 0 or L < 2:
+            return empty, None
+        for n in range(min(self.n, L - 1), 0, -1):
+            suffix = ctx[L - n:]
+            wins = np.lib.stride_tricks.sliding_window_view(ctx, n)
+            hits = np.nonzero((wins == suffix).all(axis=1))[0]
+            hits = hits[hits < L - n]         # strictly before the suffix
+            if hits.size == 0:
+                continue
+            # prefer the most recent occurrence that still has k tokens of
+            # continuation; inside a repeated run the nearest match abuts
+            # the suffix and would cap the draft at one token per step
+            full = hits[hits + n + k <= L]
+            i = int(full[-1]) if full.size else int(hits[0])
+            cont = ctx[i + n:i + n + k]
+            if cont.size:
+                return cont.astype(np.int32), None
+        return empty, None
+
+    def forget(self, rid: int) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Small-model drafter
+
+
+class ModelDrafter:
+    """Draft with a small autoregressive model sharing the target's vocab.
+
+    Keeps one batch-1 contiguous KV cache per in-flight request; the
+    *fork/rollback* story is trivial here because rolling a contiguous
+    cache back is just rewinding ``lens`` — stale KV past the frontier is
+    masked by attention and overwritten by the next write. On every
+    propose() the drafter re-syncs to the committed stream via longest
+    common prefix, so accepted drafts cost nothing to replay and target
+    corrections cost one decode step each.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.model = Model(cfg)
+        self._decode = None          # jit'd lazily (subclasses override)
+        self._caches: Dict[int, dict] = {}
+        self._fed: Dict[int, List[int]] = {}
+        self._rng = np.random.default_rng(seed)
+        self.steps = 0               # decode steps spent drafting
+
+    # -- one drafter decode step: feed token, return next-token logits --
+    def _make_decode(self):
+        import jax
+        return jax.jit(self.model.decode_step)
+
+    def _feed(self, rid: int, tok: int) -> np.ndarray:
+        if self._decode is None:
+            self._decode = self._make_decode()
+        logits, self._caches[rid] = self._decode(
+            self.params, jnp.asarray([[tok]], jnp.int32), self._caches[rid])
+        self.steps += 1
+        return np.asarray(logits)[0, 0]
+
+    def propose(self, rid: int, ctx: np.ndarray, k: int
+                ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        ctx_l = [int(t) for t in np.asarray(ctx).tolist()]
+        empty = np.zeros((0,), np.int32)
+        if k <= 0 or len(ctx_l) + 1 >= self.max_seq:
+            return empty, None
+        if rid not in self._caches:
+            self._caches[rid] = self.model.init_cache(1, self.max_seq,
+                                                      jnp.float32)
+            self._fed[rid] = []
+        fed = self._fed[rid]
+        cp = 0
+        for a, b in zip(fed, ctx_l):
+            if a != b:
+                break
+            cp += 1
+        cp = min(cp, len(ctx_l) - 1)  # always feed >= 1 token for logits
+        del fed[cp:]
+        self._caches[rid]["lens"] = jnp.full_like(
+            self._caches[rid]["lens"], cp)
+        logits = None
+        for t in ctx_l[cp:]:
+            logits = self._feed(rid, t)
+            fed.append(t)
+        toks: List[int] = []
+        qdists: List[np.ndarray] = []
+        for j in range(k):
+            if self.temperature <= 0:
+                d = int(np.argmax(logits))
+            else:
+                from repro.spec.accept import softmax
+                q = softmax(logits, self.temperature)
+                qdists.append(q.astype(np.float32))
+                d = int(self._rng.choice(len(q), p=q))
+            toks.append(d)
+            if j + 1 < k and len(fed) + 1 < self.max_seq:
+                logits = self._feed(rid, d)
+                fed.append(d)
+            elif j + 1 < k:
+                break                 # drafter cache full: stop early
+        qd = np.stack(qdists) if qdists else None   # len(qdists)==len(toks)
+        return np.asarray(toks, np.int32), qd
+
+    def weight_bytes_per_step(self, scfg) -> float:
+        """One draft decode step streams the full draft-model weight set
+        (the draft model is small — that IS the bet)."""
+        from repro.serve.metrics import weight_traffic  # lazy: no cycle
+        return weight_traffic(self.cfg, scfg)[0]
+
+    def forget(self, rid: int) -> None:
+        self._caches.pop(rid, None)
+        self._fed.pop(rid, None)

@@ -1,0 +1,152 @@
+"""Self-speculation: the target model drafts for itself via a cheap pass.
+
+The paper's C2 accelerator exists because ReLU-sparse FFNs only need a
+fraction of their weight rows per token. The Deja-Vu-style predictor
+(core.sparsity.SparsityPredictor) guesses that active set from the FFN
+*input*, which lets a draft pass gather only k of d_ff up-projection
+columns AND down-projection rows — attention runs unchanged, the FFN
+streams ~k/d_ff of its bytes. The resulting model is an approximation of
+the target built from the target's own weights: no second set of weights
+to store, and drafts agree with the target wherever the predictor's
+active set covers the true one (its recall_at_k).
+
+This file provides the predictor-gathered decode step and the drafter
+that wraps it; calibration trains the predictors against the target's
+own FFN activations at build time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import sparsity
+from repro.dist.sharding import constrain_residual
+from repro.models import attention, layers, transformer
+from repro.spec.drafter import ModelDrafter
+
+
+def predicted_sparse_ffn(pffn, cfg: ModelConfig,
+                         pred: sparsity.SparsityPredictor, x, k: int):
+    """FFN where the predictor picks the k active units BEFORE the
+    up-projection, so up columns and down rows are both gathered —
+    byte traffic ~ (2 or 3) * k/d_ff of the dense FFN, plus the low-rank
+    predictor itself. x: [B, S, d]."""
+    act = "relu" if cfg.relu_sparse else cfg.act
+    idx, _ = pred.predict_topk(x, k)                       # [B, S, k]
+    up_sel = jnp.take(pffn["w_up"].T, idx, axis=0)         # [B, S, k, d]
+    h = jnp.einsum("bsd,bskd->bsk", x, up_sel)
+    if "w_gate" in pffn:
+        gate_sel = jnp.take(pffn["w_gate"].T, idx, axis=0)
+        g = sparsity.apply_act(
+            jnp.einsum("bsd,bskd->bsk", x, gate_sel), act)
+        h = g * h
+    else:
+        h = sparsity.apply_act(h, act)
+    down_sel = jnp.take(pffn["w_down"], idx, axis=0)       # [B, S, k, d]
+    return jnp.einsum("bsk,bskd->bsd", h, down_sel)
+
+
+def selfspec_decode_step(params, cfg: ModelConfig, preds, k: int, tokens,
+                         cache):
+    """One draft decode step on a contiguous cache: target attention +
+    predictor-gathered FFN. Same signature as transformer.decode_step
+    (so ModelDrafter's jit'd feed loop is reused unchanged)."""
+    x = transformer._embed_inputs(params, cfg, {"tokens": tokens})
+    lens = cache["lens"]
+    positions = lens[:, None]
+    cos, sin = transformer._rope_tables(cfg, positions)
+    if cfg.pos_emb == "sin":
+        x = x + layers.sinusoidal_positions(positions,
+                                            cfg.d_model).astype(x.dtype)
+
+    def unit_body(x, xs):
+        unit_p, unit_cache, unit_pred = xs
+        p = unit_p["b0"]
+        h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+        a, nc = attention.attn_decode(p["attn"], cfg, h, cos, sin,
+                                      unit_cache["b0"], lens)
+        x = x + a
+        h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + predicted_sparse_ffn(p["ffn"], cfg, unit_pred, h, k)
+        return constrain_residual(x), {"b0": nc}
+
+    x, new_units = jax.lax.scan(
+        unit_body, x, (params["units"], cache["units"], preds))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = transformer.project_logits(params, cfg, x)
+    return logits, {"lens": lens + 1, "units": new_units}
+
+
+def calibrate_predictors(cfg: ModelConfig, params, rank: int,
+                         n_samples: int = 256, steps: int = 120,
+                         seed: int = 0) -> sparsity.SparsityPredictor:
+    """Train one low-rank predictor per unit against the target's own FFN
+    hidden activations on random probe inputs. Returns a stacked-pytree
+    SparsityPredictor (leading axis = units) ready to scan over."""
+    act = "relu" if cfg.relu_sparse else cfg.act
+    key = jax.random.PRNGKey(seed)
+    k_x, k_p = jax.random.split(key)
+    xs = jax.random.normal(k_x, (n_samples, cfg.d_model), jnp.float32)
+    ffn_p = params["units"]["b0"]["ffn"]
+
+    def hidden(w_up, w_gate):
+        h = xs @ w_up
+        if w_gate is not None:
+            return sparsity.apply_act(xs @ w_gate, act) * h
+        return sparsity.apply_act(h, act)
+
+    if "w_gate" in ffn_p:
+        hs = jax.vmap(hidden)(ffn_p["w_up"], ffn_p["w_gate"])
+    else:
+        hs = jax.vmap(lambda wu: hidden(wu, None))(ffn_p["w_up"])
+
+    keys = jax.random.split(k_p, cfg.n_units)
+    preds0 = jax.vmap(
+        lambda kk: sparsity.SparsityPredictor.init(
+            kk, cfg.d_model, cfg.d_ff, rank=rank))(keys)
+    return jax.vmap(
+        lambda p, h: sparsity.train_predictor(p, xs, h, steps=steps)
+    )(preds0, hs)
+
+
+class SelfSpecDrafter(ModelDrafter):
+    """ModelDrafter whose "small model" is the target itself behind the
+    predictor-gathered sparse FFN — zero extra weights, and draft quality
+    tracks the predictor's recall at the chosen active fraction."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int, *,
+                 frac: float = 0.0625, rank: int = 16,
+                 temperature: float = 0.0, seed: int = 0,
+                 calibration_steps: int = 120):
+        if cfg.pattern_unit() != ("attn",):
+            raise ValueError(
+                f"{cfg.name}: self-speculation supports plain attention "
+                f"stacks only (pattern {cfg.pattern_unit()})")
+        super().__init__(cfg, params, max_seq, temperature=temperature,
+                         seed=seed)
+        self.k_active = sparsity.active_fraction_to_k(cfg.d_ff, frac,
+                                                      multiple=16)
+        self.preds = calibrate_predictors(cfg, params, rank, seed=seed,
+                                          steps=calibration_steps)
+
+    def _make_decode(self):
+        preds, k = self.preds, self.k_active
+        cfg = self.cfg
+        return jax.jit(lambda p, t, c: selfspec_decode_step(
+            p, cfg, preds, k, t, c))
+
+    def weight_bytes_per_step(self, scfg) -> float:
+        """One self-spec draft step: full attention weights plus the
+        predictor-gathered FFN (up columns + down rows at k/d_ff, plus
+        the low-rank predictor itself)."""
+        cfg = self.cfg
+        bpe = 1 if scfg.int8_decode else 2
+        attn = cfg.n_layers * 2 * cfg.d_model \
+            * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head * bpe / 2
+        rank = self.preds.w_in.shape[-1]
+        ffn = cfg.n_layers * sparsity.ffn_weight_bytes_predicted(
+            cfg.d_model, cfg.d_ff, bpe, cfg.glu,
+            self.k_active / cfg.d_ff, rank)
+        return attn + ffn
