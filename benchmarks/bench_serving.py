@@ -10,12 +10,16 @@ The paged engine prefills in fixed-shape chunks (one compile, ever)
 interleaved with decode steps.
 
 Emits CSV rows for benchmarks.run and writes BENCH_serving.json.
+``--sweep`` additionally grids (max_batch x block_size) over the same
+trace generator and writes BENCH_sweep.json (ROADMAP open item: find the
+paged engine's throughput knee instead of guessing the defaults).
 
-Run: PYTHONPATH=src python -m benchmarks.bench_serving
+Run: PYTHONPATH=src python -m benchmarks.bench_serving [--sweep] [--quick]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -32,6 +36,8 @@ from repro.serve.scheduler import Request
 _DIR = os.path.dirname(os.path.abspath(__file__))
 ART = os.path.join(_DIR, "BENCH_serving.json")
 ART_QUICK = os.path.join(_DIR, "BENCH_serving_quick.json")
+ART_SWEEP = os.path.join(_DIR, "BENCH_sweep.json")
+ART_SWEEP_QUICK = os.path.join(_DIR, "BENCH_sweep_quick.json")
 
 N_REQUESTS = 16
 MAX_NEW = 16
@@ -98,6 +104,58 @@ def bench_engine(cfg, params, paged: bool, seed=0, n_requests=N_REQUESTS,
                                      max_new=max_new))
 
 
+SWEEP_BATCHES = (2, 4, 8)
+SWEEP_BLOCKS = (4, 8, 16)
+
+
+def run_sweep(quick: bool = False):
+    """(max_batch x block_size) grid on the paged engine, one Poisson
+    trace per cell. Writes the BENCH_sweep.json grid and returns CSV rows
+    (tokens/s per cell + the best cell)."""
+    n_requests = 6 if quick else N_REQUESTS
+    max_new = 8 if quick else MAX_NEW
+    cfg = get_config("nectar-relu-llama-1.7m")
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    grid = []
+    best = None
+    for mb in SWEEP_BATCHES:
+        for bs in SWEEP_BLOCKS:
+            scfg = ServeConfig(max_batch=mb, max_seq=96, paged=True,
+                               block_size=bs, prefill_chunk=16)
+            eng = Engine(cfg, params, scfg)
+            warm = Request(rid=-1, prompt=np.arange(4, dtype=np.int32),
+                           max_new=2)
+            eng.run([warm], max_steps=50)
+            eng.metrics = type(eng.metrics)(cfg, scfg)
+            s = run_trace(eng, make_trace(cfg, n_requests=n_requests,
+                                          max_new=max_new))
+            cell = {"max_batch": mb, "block_size": bs,
+                    "tokens_per_s": s["tokens_per_s"],
+                    "ttft_p99_ms": s["ttft_p99_ms"],
+                    "evictions": s["evictions"],
+                    "pool_blocks": scfg.pool_blocks}
+            grid.append(cell)
+            if best is None or cell["tokens_per_s"] > best["tokens_per_s"]:
+                best = cell
+    report = {"trace": {"n_requests": n_requests, "max_new": max_new,
+                        "arrival_rate_per_s": ARRIVAL_RATE,
+                        "long_prompt_frac": LONG_FRAC, "quick": quick},
+              "grid": grid, "best": best}
+    # quick (CI smoke) runs must not clobber the committed full-grid
+    # artifact the README cites
+    with open(ART_SWEEP_QUICK if quick else ART_SWEEP, "w") as f:
+        json.dump(report, f, indent=1)
+    rows = [(f"serving_sweep_b{c['max_batch']}_bs{c['block_size']}", 0.0,
+             f"tok_s={c['tokens_per_s']:.1f};"
+             f"p99_ttft_ms={c['ttft_p99_ms']:.0f};"
+             f"evictions={c['evictions']}") for c in grid]
+    rows.append(("serving_sweep_best", 0.0,
+                 f"max_batch={best['max_batch']};"
+                 f"block_size={best['block_size']};"
+                 f"tok_s={best['tokens_per_s']:.1f}"))
+    return rows
+
+
 def run(quick: bool = False):
     n_requests = 6 if quick else N_REQUESTS
     max_new = 8 if quick else MAX_NEW
@@ -138,9 +196,19 @@ def run(quick: bool = False):
 
 
 def main():
-    for name, us, derived in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", action="store_true",
+                    help="batch-size x block-size grid -> BENCH_sweep.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny trace (CI smoke)")
+    args = ap.parse_args()
+    rows = run_sweep(quick=args.quick) if args.sweep \
+        else run(quick=args.quick)
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
-    print(f"wrote {ART}")
+    art = (ART_SWEEP_QUICK if args.quick else ART_SWEEP) if args.sweep \
+        else (ART_QUICK if args.quick else ART)
+    print(f"wrote {art}")
 
 
 if __name__ == "__main__":

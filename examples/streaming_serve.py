@@ -1,10 +1,12 @@
-"""Production serving demo: paged KV + chunked-prefill scheduler +
-streaming API.
+"""Production serving demo: unified ModelRunner step + per-request
+SamplingParams + streaming API.
 
 Shows the pieces the fixed-slot demo (sparse_serving.py) can't:
-  * tokens stream out of ``api.generate`` while other requests decode,
-  * a long prompt no longer head-of-line-blocks short requests (chunked
-    prefill interleaves with decode),
+  * tokens stream out of ``api.generate`` while other requests decode —
+    prefill rows, decode rows (and, with spec on, verify rows) share ONE
+    batched device step per tick,
+  * per-request SamplingParams: a greedy request, a temperature/top-k
+    request, and a stop-sequence request multiplex in the same batch,
   * priority scheduling and preemption under a deliberately tiny block
     pool, with TTFT/TPOT/p99 metrics at the end.
 
@@ -20,6 +22,7 @@ from repro.configs.base import ServeConfig
 from repro.models import Model
 from repro.serve import api
 from repro.serve.engine import Engine
+from repro.serve.sampling import SamplingParams
 
 
 def main():
@@ -60,6 +63,26 @@ def main():
         kind = "long " if rid == long_rid else "short"
         print(f"    req {rid} ({kind}): {len(r.prompt)} prompt toks -> "
               f"{len(r.tokens_out)} generated")
+
+    # per-request SamplingParams in one batch: greedy, temperature+top-k
+    # (reproducible via seed), and a stop sequence learned from the
+    # greedy stream — all served by the same unified step
+    prompt = rng.integers(0, cfg.vocab, size=9, dtype=np.int32)
+    g = srv.submit(prompt, max_new=8)
+    t = srv.submit(prompt, max_new=8,
+                   sampling=SamplingParams(temperature=0.8, top_k=32,
+                                           seed=7, logprobs=True))
+    done = srv.drain()
+    greedy_toks = [int(x) for x in done[g].tokens_out]
+    stop = tuple(greedy_toks[2:4])
+    s_rid = srv.submit(prompt, max_new=8,
+                       sampling=SamplingParams(stop=(stop,)))
+    done = srv.drain()
+    print(f"sampling: greedy={greedy_toks}")
+    print(f"          temp0.8/top-k32={[int(x) for x in done[t].tokens_out]}"
+          f" (logprob[0]={done[t].logprobs_out[0]:.2f})")
+    print(f"          stop={stop} -> {[int(x) for x in done[s_rid].tokens_out]}"
+          f" (truncated before the match)")
 
     s = eng.metrics.summary()
     print(f"metrics: {s['tokens_per_s']:.1f} tok/s  "

@@ -208,6 +208,11 @@ class ServeConfig:
     policy: str = "fifo"            # request ordering: fifo | priority
     max_queue: int = 256            # admission control: queue depth bound
     spec: Optional[SpecConfig] = None   # speculative decode (paged only)
+    # attention read path for the unified runner step (serve.runner):
+    # "naive" = reference gather through block tables (shardable);
+    # "flash" = Pallas flash-decode kernel reading the block pools
+    # directly via scalar-prefetched tables (single-token steps)
+    attn_backend: str = "naive"
 
     @property
     def blocks_per_seq(self) -> int:

@@ -119,13 +119,34 @@ def active_fraction_to_k(d_ff: int, frac: float, multiple: int = 128) -> int:
 # Masked-dense and gathered sparse FFN references
 
 
+def ffn_hidden(x, w_up, act="relu", w_gate=None):
+    """The shared hidden activation h of every FFN variant: gate/up
+    matmuls + activation. Split out so the dense and gathered-sparse
+    down-projections (below) can be built from ONE h — the unified
+    serving step selects between them per row without recomputing it."""
+    if w_gate is not None:
+        return apply_act(x @ w_gate, act) * (x @ w_up)
+    return apply_act(x @ w_up, act)
+
+
+def down_dense(h, w_down):
+    """Dense down-projection (train/prefill): streams all of W_down."""
+    return h @ w_down
+
+
+def down_sparse(h, w_down, k):
+    """Gathered down-projection (the paper's C2): contract ONLY the
+    top-k active units' rows of W_down — byte traffic drops by k/d_ff."""
+    idx, valid = topk_indices(h, k)                       # [..., k]
+    hk = jnp.take_along_axis(h, idx, axis=-1)
+    hk = jnp.where(valid, hk, 0.0)
+    wk = jnp.take(w_down, idx, axis=0)                    # [..., k, d]
+    return jnp.einsum("...k,...kd->...d", hk, wk)
+
+
 def dense_ffn(x, w_up, w_down, act="relu", w_gate=None):
     """Plain FFN: (act(x@w_gate) * (x@w_up)) @ w_down, or non-GLU variant."""
-    if w_gate is not None:
-        h = apply_act(x @ w_gate, act) * (x @ w_up)
-    else:
-        h = apply_act(x @ w_up, act)
-    return h @ w_down
+    return down_dense(ffn_hidden(x, w_up, act, w_gate), w_down)
 
 
 def masked_dense_ffn(x, w_up, w_down, act="relu", w_gate=None, tau=0.0):
@@ -147,16 +168,7 @@ def gathered_sparse_ffn(x, w_up, w_down, k, act="relu", w_gate=None):
 
     x: f[..., d], w_up/w_gate: f[d, d_ff], w_down: f[d_ff, d].
     """
-    if w_gate is not None:
-        g = apply_act(x @ w_gate, act)
-        h = g * (x @ w_up)
-    else:
-        h = apply_act(x @ w_up, act)
-    idx, valid = topk_indices(h, k)                       # [..., k]
-    hk = jnp.take_along_axis(h, idx, axis=-1)
-    hk = jnp.where(valid, hk, 0.0)
-    wk = jnp.take(w_down, idx, axis=0)                    # [..., k, d]
-    return jnp.einsum("...k,...kd->...d", hk, wk)
+    return down_sparse(ffn_hidden(x, w_up, act, w_gate), w_down, k)
 
 
 # ---------------------------------------------------------------------------

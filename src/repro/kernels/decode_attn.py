@@ -72,6 +72,110 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
 
 
+def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, n_m: int, block_s: int):
+    """One (b, m) grid step of paged flash-decode: identical online-softmax
+    body to ``_decode_kernel``, but the KV block streamed at step m is the
+    one the BLOCK TABLE names — the index map gathers tbl_ref[b, m] out of
+    the shared pool, so the kernel reads paged storage directly with no
+    [B, MB*bs] host-path gather ever materializing.
+
+    len_ref: i32[B] kv lengths; tbl_ref: i32[B, MB] block tables (sentinel
+    entries clamp to a real block in the index map — they only ever sit at
+    positions >= len_ref[b], which the mask below zeroes out anyway).
+    """
+    b = pl.program_id(0)
+    m = pl.program_id(1)
+
+    @pl.when(m == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # [Kv, G, Dh]
+    k = k_ref[0].astype(jnp.float32)                     # [bs, Kv, Dh]
+    v = v_ref[0].astype(jnp.float32)
+    Dh = q.shape[-1]
+    scores = jnp.einsum("kgd,skd->kgs", q * Dh ** -0.5, k)
+
+    kv_pos = m * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, block_s), 2)
+    mask = kv_pos < len_ref[b]
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(scores, axis=-1))
+    alive = m_new > NEG_INF / 2
+    p = jnp.exp(scores - jnp.where(alive, m_new, 0.0)[..., None])
+    p = jnp.where(alive[..., None], p, 0.0)
+    corr = jnp.where(alive, jnp.exp(m_old - m_new), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + \
+        jnp.einsum("kgs,skd->kgd", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(m == n_m - 1)
+    def _done():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, tables: jax.Array,
+                           kv_len: jax.Array, *, block_size: int,
+                           interpret: bool = True) -> jax.Array:
+    """Flash-decode THROUGH block tables: the serving engine's paged KV
+    pool and per-slot tables go straight to the kernel, whose BlockSpec
+    index map resolves ``tables[b, m]`` per grid step (scalar-prefetched)
+    — the DMA engine streams exactly the blocks the row owns, in table
+    order, with the same VMEM-resident (m, l, o) online softmax as the
+    contiguous kernel.
+
+    q: f[B, Hq, Dh]; k_pool/v_pool: f[n_blocks, bs, Kv, Dh] (the shared
+    pools from init_paged_kv_cache — fp pools only, int8 pools carry
+    scale leaves this kernel does not consume); tables: i32[B, MB] with
+    ``n_blocks`` as the sentinel; kv_len: i32[B]. Returns f32[B, Hq, Dh].
+    """
+    B, Hq, Dh = q.shape
+    n_blocks, bs, Kv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    assert bs == block_size, (bs, block_size)
+    MB = tables.shape[1]
+    G = Hq // Kv
+    qg = q.reshape(B, Kv, G, Dh)
+
+    def kv_index(b, m, len_ref, tbl_ref):
+        # sentinel (== n_blocks) would be OOB: clamp to block 0 — every
+        # sentinel position is >= kv_len[b] and masked out in the kernel
+        blk = tbl_ref[b, m]
+        return (jnp.where(blk >= n_blocks, 0, blk), 0, 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, n_m=MB, block_s=bs),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, MB),
+            in_specs=[
+                pl.BlockSpec((1, Kv, G, Dh),
+                             lambda b, m, lr, tr: (b, 0, 0, 0)),
+                pl.BlockSpec((1, bs, Kv, Dh), kv_index),
+                pl.BlockSpec((1, bs, Kv, Dh), kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, Kv, G, Dh),
+                                   lambda b, m, lr, tr: (b, 0, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((Kv, G), jnp.float32),
+                            pltpu.VMEM((Kv, G), jnp.float32),
+                            pltpu.VMEM((Kv, G, Dh), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, Dh), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), tables.astype(jnp.int32), qg, k_pool,
+      v_pool)
+    return out.reshape(B, Hq, Dh)
+
+
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      kv_len: jax.Array, *, block_s: int = 512,

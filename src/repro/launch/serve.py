@@ -17,7 +17,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ServeConfig
 from repro.models import Model
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import Request
 from repro.train import checkpoint
 
 
@@ -44,6 +46,18 @@ def main():
                          "the 'model' drafter needs trained draft weights "
                          "— use the API)")
     ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--attn-backend", default="naive",
+                    choices=("naive", "flash"),
+                    help="paged attention read path: reference gather vs "
+                         "the Pallas flash-decode kernel through block "
+                         "tables")
+    # --- per-request SamplingParams (applied to every demo request) ---
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples on-device")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--repetition-penalty", type=float, default=1.0)
+    ap.add_argument("--sample-seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -67,14 +81,19 @@ def main():
                        sparse_decode=not args.dense, paged=args.paged,
                        block_size=args.block_size,
                        prefill_chunk=args.prefill_chunk,
-                       policy=args.policy, spec=spec)
+                       policy=args.policy, spec=spec,
+                       attn_backend=args.attn_backend)
     eng = Engine(cfg, params, scfg)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p,
+                        repetition_penalty=args.repetition_penalty,
+                        seed=args.sample_seed)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab,
                                         size=4 + int(rng.integers(0, 8)),
                                         dtype=np.int32),
-                    max_new=args.max_new)
+                    max_new=args.max_new, sampling=sp)
             for i in range(args.requests)]
     t0 = time.time()
     done = eng.run(reqs, max_steps=10000)

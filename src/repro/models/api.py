@@ -59,26 +59,14 @@ class Model:
                                             block_size, max_blocks_per_seq,
                                             dtype, int8_kv=int8_kv)
 
-    def decode_step_paged(self, params, tokens, cache, active,
-                          block_size: int):
-        return transformer.decode_step_paged(params, self.cfg, tokens,
-                                             cache, active, block_size)
-
-    def verify_step_paged(self, params, tokens, cache, active, n_valid,
-                          block_size: int):
-        """Speculative verify: score K+1 positions per row in one
-        fixed-shape step through block tables (see repro.spec)."""
-        return transformer.verify_step_paged(params, self.cfg, tokens,
-                                             cache, active, n_valid,
-                                             block_size)
-
-    def prefill_chunk(self, params, tokens, cache, slot, pos, valid_len,
-                      block_size: int):
-        """Chunked prefill: fixed-shape [1, C] chunk -> one jit for all
-        prompt lengths; returns (last-valid-position logits, new cache)."""
-        return transformer.prefill_chunk(params, self.cfg, tokens, cache,
-                                         slot, pos, valid_len, block_size)
-
-    # --- sampling helper (greedy; serving engine adds temperature) ---
-    def greedy_token(self, logits):
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    def forward_step(self, params, tokens, cache, n_valid, is_prefill,
+                     block_size: int, backend: str = "naive",
+                     has_prefill: bool = True):
+        """THE paged serving entry: one fixed-shape batched step serving
+        prefill, decode, and spec-verify rows together — everything the
+        three per-phase entries (decode_step_paged / verify_step_paged /
+        prefill_chunk) used to do, behind serve.runner.ModelRunner."""
+        return transformer.forward_step(params, self.cfg, tokens, cache,
+                                        n_valid, is_prefill, block_size,
+                                        backend=backend,
+                                        has_prefill=has_prefill)

@@ -186,88 +186,35 @@ def _read_paged(cache: dict, name: str, tables, n_blocks: int):
     return g.astype(jnp.float32) * s
 
 
-def attn_decode_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
-                      lens: jax.Array, tables: jax.Array, block_size: int):
-    """One-token decode through block tables: the new KV scatters into
-    physical block ``tables[b, lens[b]//bs]`` at offset ``lens[b]%bs``; the
-    read path gathers each row's blocks back into a logical sequence and
-    masks to lens+1. Token-identical to attn_decode on a contiguous cache
-    (same reference_attention, same masking).
+def attn_step_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
+                    lens: jax.Array, n_valid: jax.Array,
+                    tables: jax.Array, block_size: int,
+                    backend: str = "naive"):
+    """ONE attention entry for every serving phase, through block tables.
 
-    cache: {"k","v"} [n_blocks, bs, Kv, Dh]; tables: i32[B, MB] with
-    ``n_blocks`` as the invalid sentinel (rows of inactive slots are all
-    sentinel, so their writes drop instead of corrupting recycled blocks).
-    """
-    B = x.shape[0]
-    n_blocks = cache["k"].shape[0]
-    MB = tables.shape[1]
-    q, k, v = _qkv(p, cfg, x)
-    q = rope.apply_rope(q, cos, sin)
-    k = rope.apply_rope(k, cos, sin)
-    rows = jnp.arange(B)
-    col = jnp.minimum(lens // block_size, MB - 1)
-    blk = tables[rows, col]                      # [B]; sentinel for inactive
-    off = lens % block_size
-    new_cache = {**_store_paged(cache, "k", blk, off, k[:, 0]),
-                 **_store_paged(cache, "v", blk, off, v[:, 0])}
-    kg = _read_paged(new_cache, "k", tables, n_blocks)
-    vg = _read_paged(new_cache, "v", tables, n_blocks)
-    qg = q.reshape(B, 1, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
-    o = reference_attention(qg, kg, vg, causal=False, kv_len=lens + 1)
-    o = o.reshape(B, 1, cfg.n_heads * cfg.d_head)
-    return o @ p["wo"], new_cache
+    Row b's queries sit at absolute positions lens[b]+j for j in [0, S);
+    their KV scatters through the row's block table (positions j >=
+    n_valid[b] are padding: sentinel writes drop) and each query attends
+    causally to [0, lens[b]+j] — prior context plus the in-flight prefix
+    before it. The same masking serves all three phases:
 
+      * decode row   (S row slice = 1 valid token): queries at lens[b],
+        attends to lens[b]+1 keys — the classic paged decode step;
+      * verify row   (n_valid = 1 + K drafts): K+1 token scores per
+        target weight-stream read (speculative decode, paper Table II);
+      * prefill row  (n_valid = chunk valid length, lens[b] = chunk pos):
+        chunked prefill attending to earlier chunks plus its own prefix.
 
-def attn_prefill_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
-                       table_row: jax.Array, pos: jax.Array,
-                       valid_len: jax.Array, block_size: int,
-                       block_kv: int = 512):
-    """One chunked-prefill step for a single request (batch 1, fixed chunk
-    shape -> one jit for every prompt length). Writes the chunk's KV at
-    global positions [pos, pos+valid_len) through ``table_row`` and attends
-    causally against everything written so far (earlier chunks included).
-
-    x: [1, C, d]; table_row: i32[MB]; pos/valid_len: scalar i32. Positions
-    past valid_len are padding: their KV writes drop (sentinel index) and
-    their outputs are discarded by the caller.
-    """
-    _, C, _ = x.shape
-    n_blocks = cache["k"].shape[0]
-    q, k, v = _qkv(p, cfg, x)
-    q = rope.apply_rope(q, cos, sin)
-    k = rope.apply_rope(k, cos, sin)
-    j = jnp.arange(C)
-    gpos = pos + j
-    blk = jnp.take(table_row, gpos // block_size, mode="fill",
-                   fill_value=n_blocks)
-    blk = jnp.where(j < valid_len, blk, n_blocks)       # pad writes drop
-    off = gpos % block_size
-    new_cache = {**_store_paged(cache, "k", blk, off, k[0]),
-                 **_store_paged(cache, "v", blk, off, v[0])}
-    kg = _read_paged(new_cache, "k", table_row[None], n_blocks)
-    vg = _read_paged(new_cache, "v", table_row[None], n_blocks)
-    qg = q.reshape(1, C, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
-    o = blockwise_attention(qg, kg, vg, causal=True, block_kv=block_kv,
-                            q_offset=jnp.asarray(pos)[None],
-                            kv_len=jnp.asarray(pos + valid_len)[None])
-    o = o.reshape(1, C, cfg.n_heads * cfg.d_head)
-    return o @ p["wo"], new_cache
-
-
-def attn_verify_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
-                      lens: jax.Array, n_valid: jax.Array,
-                      tables: jax.Array, block_size: int):
-    """Speculative-verify attention: score S = K+1 positions per row in ONE
-    step through block tables. Row b's queries sit at absolute positions
-    lens[b]+j for j in [0, S); their KV scatters through the row's block
-    table (positions j >= n_valid[b] are padding: sentinel writes drop) and
-    each query attends causally to [0, lens[b]+j] — prior context plus the
-    draft prefix before it. This is how one weight-stream read serves K+1
-    token scores (the whole point of speculative decode on a memory-bound
-    target, paper Table II).
+    ``backend`` picks the single-token read path: "naive" gathers each
+    row's blocks into a logical sequence on the host-visible path (the
+    reference, GSPMD-shardable); "flash" hands q + the block pools + the
+    tables straight to the Pallas flash-decode kernel, which DMAs KV
+    blocks via the table (kernels.decode_attn.paged_decode_attention) —
+    no [B, MB*bs] gather materializes. S > 1 always takes the full-score
+    path (S is small: a prefill chunk or k_max+1).
 
     x: [B, S, d]; lens/n_valid: i32[B]; tables: i32[B, MB] (inactive rows
-    all-sentinel). Returns (out [B, S, n_heads*d_head] @ wo, new_cache).
+    all-sentinel). Returns (out [B, S, d], new_cache).
     """
     B, S, _ = x.shape
     n_blocks = cache["k"].shape[0]
@@ -284,19 +231,30 @@ def attn_verify_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
     off = gpos % block_size
     new_cache = {**_store_paged(cache, "k", blk, off, k),
                  **_store_paged(cache, "v", blk, off, v)}
+    qg = q.reshape(B, S, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
+    if S == 1 and backend == "flash":
+        from repro.kernels.decode_attn import paged_decode_attention
+        o = paged_decode_attention(
+            q.reshape(B, cfg.n_heads, cfg.d_head), new_cache["k"],
+            new_cache["v"], tables, lens + 1, block_size=block_size)
+        o = o.reshape(B, 1, cfg.n_heads * cfg.d_head).astype(x.dtype)
+        return o @ p["wo"], new_cache
     kg = _read_paged(new_cache, "k", tables, n_blocks)    # [B, MBbs, Kv, Dh]
     vg = _read_paged(new_cache, "v", tables, n_blocks)
-    qg = q.reshape(B, S, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
-    # per-(row, position) causal mask: kv position t visible to query j of
-    # row b iff t <= lens[b]+j. S is small (k_max+1), so full scores are
-    # [B, Kv, G, S, MB*bs] — same order as the decode step's reference path.
-    scale = jnp.asarray(cfg.d_head ** -0.5, qg.dtype)
-    s = _gqa_scores(qg * scale, kg)
-    Skv = kg.shape[1]
-    vis = jnp.arange(Skv)[None, None, :] <= gpos[:, :, None]   # [B, S, Skv]
-    s = jnp.where(vis[:, None, None], s, NEG_INF)
-    probs = jax.nn.softmax(s, axis=-1)
-    o = _gqa_out(probs, vg)
-    o = jnp.moveaxis(o, -2, 1).astype(x.dtype)
+    if S == 1:
+        # single-token step: reference_attention keeps this bit-identical
+        # to the contiguous-cache decode (and GSPMD-shardable)
+        o = reference_attention(qg, kg, vg, causal=False, kv_len=lens + 1)
+    else:
+        # per-(row, position) causal mask: kv position t visible to query
+        # j of row b iff t <= lens[b]+j. S is small, so full scores are
+        # [B, Kv, G, S, MB*bs] — same order as the reference decode path.
+        scale = jnp.asarray(cfg.d_head ** -0.5, qg.dtype)
+        s = _gqa_scores(qg * scale, kg)
+        Skv = kg.shape[1]
+        vis = jnp.arange(Skv)[None, None, :] <= gpos[:, :, None]  # [B,S,Skv]
+        s = jnp.where(vis[:, None, None], s, NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1)
+        o = jnp.moveaxis(_gqa_out(probs, vg), -2, 1).astype(x.dtype)
     o = o.reshape(B, S, cfg.n_heads * cfg.d_head)
     return o @ p["wo"], new_cache

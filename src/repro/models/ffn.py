@@ -41,3 +41,29 @@ def ffn_decode(p, cfg: ModelConfig, x):
     k = sparsity.active_fraction_to_k(cfg.d_ff, cfg.sparse_k_frac)
     return sparsity.gathered_sparse_ffn(
         x, p["w_up"], p["w_down"], k=k, act="relu", w_gate=p.get("w_gate"))
+
+
+def ffn_step(p, cfg: ModelConfig, x, is_prefill, has_prefill: bool = True):
+    """Per-row FFN select for the unified batched step (ModelRunner):
+    prefill rows take the dense path, decode/verify rows take the sparse
+    decode path — in the SAME batch. x: [B, S, d]; is_prefill: bool[B].
+
+    ``has_prefill`` is STATIC (the runner keys its jit on it): ticks with
+    no prefill row — the serving steady state — compile to the pure
+    sparse decode path and never touch the dense W_down stream, which is
+    the weight traffic the paper's sparsity exists to avoid. Mixed ticks
+    compute both branches from one shared hidden activation ``h`` (the
+    up/gate matmuls are common), so the select costs one extra
+    down-projection, not a second full FFN; each branch's expression is
+    exactly ``dense_ffn`` / ``gathered_sparse_ffn``, which is what keeps
+    unified-step output token-identical to the split per-phase engines.
+    """
+    if not cfg.relu_sparse:
+        return ffn_forward(p, cfg, x)
+    if not has_prefill:
+        return ffn_decode(p, cfg, x)
+    h = sparsity.ffn_hidden(x, p["w_up"], "relu", p.get("w_gate"))
+    k = sparsity.active_fraction_to_k(cfg.d_ff, cfg.sparse_k_frac)
+    return jnp.where(is_prefill[:, None, None],
+                     sparsity.down_dense(h, p["w_down"]),
+                     sparsity.down_sparse(h, p["w_down"], k))

@@ -96,69 +96,33 @@ def block_forward(kind, p, cfg: ModelConfig, x, ctx,
     raise ValueError(kind)
 
 
-def block_decode_paged(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
-    """Decode through block tables. Only attention-family blocks carry a
-    paged cache; recurrent blocks (O(1) state) have nothing to page."""
+def block_step_paged(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
+    """ONE per-block body for every serving phase through block tables
+    (the unified ModelRunner step). Only attention-family blocks carry a
+    paged cache; recurrent blocks (O(1) state) have nothing to page.
+
+    The FFN path is selected PER ROW (ctx["is_prefill"]): prefill rows
+    take the dense path, decode/verify rows the sparse-gather decode path
+    — verify must score each position with EXACTLY the decode-step math
+    (sparse gather under relu_sparse) or greedy spec output would drift
+    from the non-speculative engine."""
     if kind == "shared_attn":
         p = ctx["shared_params"]
     if kind in ("attn", "shared_attn", "moe"):
         h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
-        a, new_cache = attention.attn_decode_paged(
+        a, new_cache = attention.attn_step_paged(
             p["attn"], cfg, h, ctx["cos"], ctx["sin"], cache, ctx["lens"],
-            ctx["tables"], ctx["block_size"])
+            ctx["n_valid"], ctx["tables"], ctx["block_size"],
+            backend=ctx["backend"])
         x = x + a
         h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
         if kind == "moe":
             y, _ = moe.moe_forward(p["moe"], cfg, h)
         else:
-            y = ffn.ffn_decode(p["ffn"], cfg, h)
+            y = ffn.ffn_step(p["ffn"], cfg, h, ctx["is_prefill"],
+                             has_prefill=ctx["has_prefill"])
         return x + y, new_cache
-    raise ValueError(f"paged decode requires attention blocks, got {kind!r}")
-
-
-def block_verify_paged(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
-    """One speculative-verify step: K+1 positions per row through block
-    tables (attention in attention.attn_verify_paged)."""
-    if kind == "shared_attn":
-        p = ctx["shared_params"]
-    if kind in ("attn", "shared_attn", "moe"):
-        h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
-        a, new_cache = attention.attn_verify_paged(
-            p["attn"], cfg, h, ctx["cos"], ctx["sin"], cache, ctx["lens"],
-            ctx["n_valid"], ctx["tables"], ctx["block_size"])
-        x = x + a
-        h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
-        if kind == "moe":
-            y, _ = moe.moe_forward(p["moe"], cfg, h)
-        else:
-            # ffn_decode, not ffn_forward: verify must score each position
-            # with EXACTLY the decode-step math (sparse gather under
-            # relu_sparse) or greedy spec output would drift from the
-            # non-speculative engine. gathered_sparse_ffn is per-position,
-            # so it applies unchanged to the K+1-token verify batch.
-            y = ffn.ffn_decode(p["ffn"], cfg, h)
-        return x + y, new_cache
-    raise ValueError(f"paged verify requires attention blocks, got {kind!r}")
-
-
-def block_prefill_paged(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
-    """One chunked-prefill step (batch-1 chunk) through block tables."""
-    if kind == "shared_attn":
-        p = ctx["shared_params"]
-    if kind in ("attn", "shared_attn", "moe"):
-        h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
-        a, new_cache = attention.attn_prefill_paged(
-            p["attn"], cfg, h, ctx["cos"], ctx["sin"], cache,
-            ctx["table_row"], ctx["pos"], ctx["valid_len"],
-            ctx["block_size"])
-        x = x + a
-        h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
-        if kind == "moe":
-            y, _ = moe.moe_forward(p["moe"], cfg, h)
-        else:
-            y = ffn.ffn_forward(p["ffn"], cfg, h)
-        return x + y, new_cache
-    raise ValueError(f"paged prefill requires attention blocks, got {kind!r}")
+    raise ValueError(f"paged step requires attention blocks, got {kind!r}")
 
 
 def block_decode(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
@@ -437,87 +401,52 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, batch_extra=None):
     return logits, {"lens": lens + 1, "units": new_units}
 
 
-def decode_step_paged(params, cfg: ModelConfig, tokens, cache, active,
-                      block_size: int, batch_extra=None):
-    """decode_step through block tables. cache additionally carries
-    ``block_tables`` i32[B, MB]; storage leaves are block pools.
+def forward_step(params, cfg: ModelConfig, tokens, cache, n_valid,
+                 is_prefill, block_size: int, backend: str = "naive",
+                 has_prefill: bool = True):
+    """THE serving entry point: one fixed-shape batched step through block
+    tables serving chunked-prefill rows, decode rows, and speculative
+    K+1 verify rows in the SAME batch (the ModelRunner contract).
 
-    ``active`` i32[B] masks decoding rows: chunked prefill interleaves
-    with decode, so a slot mid-prefill shares the batch — its table row is
-    masked to the sentinel (no KV write) and its ``lens`` does not
-    advance. Inactive rows produce garbage logits the engine ignores."""
-    batch = {"tokens": tokens}
-    if batch_extra:
-        batch.update(batch_extra)
-    x = _embed_inputs(params, cfg, batch)
-    B = x.shape[0]
+    Row b feeds ``n_valid[b]`` tokens (0 = inactive row) at absolute
+    positions cache["lens"][b] + j; their KV scatters through the row's
+    block table (padding past n_valid drops at the sentinel) and every
+    position's logits come back: logits[b, j] is the model's distribution
+    for the token FOLLOWING tokens[b, j]. So
+
+      * a decode row reads its next-token logits at j = 0,
+      * a prefill row that just finished its prompt reads first-token
+        logits at j = n_valid[b]-1,
+      * a verify row reads the whole [0, K] chain and the engine commits
+        the accepted prefix host-side (``lens`` never advances on device
+        — only the engine knows how much of a row actually committed, so
+        it republishes lens and tables before every step).
+
+    ``is_prefill`` bool[B] routes each row's FFN: dense for prefill rows,
+    sparse-gather decode math for decode/verify rows (ffn.ffn_step);
+    ``has_prefill`` is the STATIC no-prefill-rows fast path (pure sparse
+    decode, no dense W_down stream). ``backend`` selects the attention
+    read path ("naive" | "flash", see attention.attn_step_paged).
+    Returns (logits [B, S, V] — or [B, S, nc, V] for codebook models —
+    and the updated cache).
+    """
+    x = _embed_inputs(params, cfg, {"tokens": tokens})
+    B, S = x.shape[0], x.shape[1]
     lens = cache["lens"]
-    positions = lens[:, None] if not cfg.mrope \
-        else jnp.broadcast_to(lens[None, :, None], (3, B, 1))
+    positions = lens[:, None] + jnp.arange(S)[None, :]
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[None], (3, B, S))
     cos, sin = _rope_tables(cfg, positions)
     if cfg.pos_emb == "sin":
         p1 = positions[0] if cfg.mrope else positions
         x = x + layers.sinusoidal_positions(p1, cfg.d_model).astype(x.dtype)
 
     n_blocks = jax.tree.leaves(cache["units"])[0].shape[1]
-    tables = jnp.where(active[:, None] > 0, cache["block_tables"], n_blocks)
-    ctx = {"cos": cos, "sin": sin, "lens": lens,
-           "tables": tables, "block_size": block_size,
-           "shared_params": params.get("shared")}
-    unit = cfg.pattern_unit()
-
-    def unit_body(x, xs):
-        unit_p, unit_cache = xs
-        new_caches = {}
-        for j, kind in enumerate(unit):
-            bp = unit_p.get(f"b{j}")
-            x, nc = block_decode_paged(kind, bp, cfg, x, ctx,
-                                       unit_cache[f"b{j}"])
-            x = constrain_residual(x)
-            new_caches[f"b{j}"] = nc
-        return x, new_caches
-
-    x, new_units = jax.lax.scan(unit_body, x,
-                                (params["units"], cache["units"]))
-    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = project_logits(params, cfg, x)
-    return logits, {"lens": jnp.where(active > 0, lens + 1, lens),
-                    "block_tables": cache["block_tables"],
-                    "units": new_units}
-
-
-def verify_step_paged(params, cfg: ModelConfig, tokens, cache, active,
-                      n_valid, block_size: int):
-    """Speculative verification: score S = K+1 positions per row in ONE
-    fixed-shape step through block tables. Row b's tokens are [last
-    committed token, draft_1 .. draft_K, pad...]; logits[b, j] is the
-    target distribution for the token FOLLOWING tokens[b, j], so the
-    engine can accept a draft prefix and take the first-divergence
-    correction (or the bonus token) from the same pass.
-
-    tokens: i32[B, S]; active/n_valid: i32[B] (n_valid = 1 + drafts
-    proposed for the row; positions past it are padding — their KV writes
-    drop). ``lens`` does NOT advance here: only the engine knows how many
-    drafts were accepted, so it commits lens (and truncates the block
-    tables) host-side after acceptance. Returns (logits [B, S, V],
-    new_cache)."""
-    if cfg.n_codebooks or cfg.mrope:
-        raise ValueError(
-            f"{cfg.name}: speculative verify supports plain token streams "
-            f"only (no codebooks / M-RoPE)")
-    x = _embed_inputs(params, cfg, {"tokens": tokens})
-    B, S, _ = x.shape
-    lens = cache["lens"]
-    positions = lens[:, None] + jnp.arange(S)[None, :]
-    cos, sin = _rope_tables(cfg, positions)
-    if cfg.pos_emb == "sin":
-        x = x + layers.sinusoidal_positions(positions,
-                                            cfg.d_model).astype(x.dtype)
-
-    n_blocks = jax.tree.leaves(cache["units"])[0].shape[1]
-    tables = jnp.where(active[:, None] > 0, cache["block_tables"], n_blocks)
+    tables = jnp.where(n_valid[:, None] > 0, cache["block_tables"],
+                       n_blocks)
     ctx = {"cos": cos, "sin": sin, "lens": lens, "n_valid": n_valid,
-           "tables": tables, "block_size": block_size,
+           "is_prefill": is_prefill, "has_prefill": has_prefill,
+           "tables": tables, "block_size": block_size, "backend": backend,
            "shared_params": params.get("shared")}
     unit = cfg.pattern_unit()
 
@@ -526,8 +455,8 @@ def verify_step_paged(params, cfg: ModelConfig, tokens, cache, active,
         new_caches = {}
         for j, kind in enumerate(unit):
             bp = unit_p.get(f"b{j}")
-            x, nc = block_verify_paged(kind, bp, cfg, x, ctx,
-                                       unit_cache[f"b{j}"])
+            x, nc = block_step_paged(kind, bp, cfg, x, ctx,
+                                     unit_cache[f"b{j}"])
             x = constrain_residual(x)
             new_caches[f"b{j}"] = nc
         return x, new_caches
@@ -538,51 +467,6 @@ def verify_step_paged(params, cfg: ModelConfig, tokens, cache, active,
     logits = project_logits(params, cfg, x)
     return logits, {"lens": lens,
                     "block_tables": cache["block_tables"],
-                    "units": new_units}
-
-
-def prefill_chunk(params, cfg: ModelConfig, tokens, cache, slot, pos,
-                  valid_len, block_size: int):
-    """One chunked-prefill step for the request in ``slot``: process the
-    fixed-shape chunk ``tokens`` [1, C] (padded past ``valid_len``), write
-    its KV through the slot's block table at [pos, pos+valid_len), and
-    return the logits of the last valid position. One compilation serves
-    every prompt length — the seed engine re-jitted prefill per length.
-
-    Returns (logits [1, 1, V], new_cache); new lens[slot] = pos+valid_len.
-    """
-    x = _embed_inputs(params, cfg, {"tokens": tokens})
-    _, C, _ = x.shape
-    positions = _positions(cfg, {"tokens": tokens}, 1, C, offset=pos)
-    cos, sin = _rope_tables(cfg, positions)
-    if cfg.pos_emb == "sin":
-        p1 = positions[0] if cfg.mrope else positions
-        x = x + layers.sinusoidal_positions(p1, cfg.d_model).astype(x.dtype)
-
-    ctx = {"cos": cos, "sin": sin, "pos": pos, "valid_len": valid_len,
-           "table_row": cache["block_tables"][slot],
-           "block_size": block_size,
-           "shared_params": params.get("shared")}
-    unit = cfg.pattern_unit()
-
-    def unit_body(x, xs):
-        unit_p, unit_cache = xs
-        new_caches = {}
-        for j, kind in enumerate(unit):
-            bp = unit_p.get(f"b{j}")
-            x, nc = block_prefill_paged(kind, bp, cfg, x, ctx,
-                                        unit_cache[f"b{j}"])
-            x = constrain_residual(x)
-            new_caches[f"b{j}"] = nc
-        return x, new_caches
-
-    x, new_units = jax.lax.scan(unit_body, x,
-                                (params["units"], cache["units"]))
-    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    last = jnp.take(x, jnp.maximum(valid_len - 1, 0)[None], axis=1)
-    logits = project_logits(params, cfg, last)
-    lens = cache["lens"].at[slot].set(pos + valid_len)
-    return logits, {"lens": lens, "block_tables": cache["block_tables"],
                     "units": new_units}
 
 

@@ -1,2 +1,5 @@
 from repro.serve import (api, engine, kv_cache, metrics,  # noqa: F401
-                         paged_kv, scheduler)
+                         paged_kv, runner, sampling, scheduler)
+from repro.serve.runner import (ModelRunner, StepBatch,  # noqa: F401
+                                StepOutput)
+from repro.serve.sampling import SamplingParams  # noqa: F401

@@ -15,6 +15,7 @@ from typing import Dict, Iterator, List, Optional
 import numpy as np
 
 from repro.serve.engine import Engine
+from repro.serve.sampling import SamplingParams, stop_holdback
 from repro.serve.scheduler import Request
 
 
@@ -28,14 +29,20 @@ class StreamingServer:
         self._backlog: List[Request] = []
 
     def submit(self, prompt, max_new: int = 16, priority: int = 0,
-               rid: Optional[int] = None) -> int:
-        """Queue a request; returns its rid immediately. Requests the
-        engine's admission control rejects (queue full) wait in a local
-        backlog and re-submit as capacity frees. rids come from the
-        engine's counter so concurrent servers/streams never collide."""
+               rid: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None) -> int:
+        """Queue a request; returns its rid immediately. ``sampling``
+        carries the per-request decoding contract (temperature, top-k/p,
+        repetition penalty, stop sequences, max_tokens, logprobs) all the
+        way through scheduler -> engine -> runner; omitted means greedy.
+        Requests the engine's admission control rejects (queue full) wait
+        in a local backlog and re-submit as capacity frees. rids come
+        from the engine's counter so concurrent servers/streams never
+        collide."""
         rid = self.engine.new_rid() if rid is None else rid
         req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
-                      max_new=max_new, priority=priority)
+                      max_new=max_new, priority=priority,
+                      sampling=sampling or SamplingParams())
         if not self.engine.can_serve(req):
             raise ValueError(
                 f"prompt of {len(req.prompt)} tokens cannot fit "
@@ -65,9 +72,15 @@ class StreamingServer:
             req = self.engine._requests.get(rid)
             if req is None:
                 continue
-            if len(req.tokens_out) > cur:
-                out[rid] = req.tokens_out[cur:]
-                self._cursors[rid] = len(req.tokens_out)
+            upto = len(req.tokens_out)
+            if req.sampling.stop and not req.done:
+                # a suffix that is a partial stop-sequence match may be
+                # retracted when the match completes — a streamed token
+                # cannot be unsent, so hold it back until resolved
+                upto -= stop_holdback(req.tokens_out, req.sampling.stop)
+            if upto > cur:
+                out[rid] = req.tokens_out[cur:upto]
+                self._cursors[rid] = upto
             if req.done:
                 del self._cursors[rid]
         return out
@@ -97,12 +110,15 @@ class StreamingServer:
 
 
 def generate(engine: Engine, prompt, max_new: int = 16,
-             priority: int = 0, max_steps: int = 10000) -> Iterator:
-    """Streaming greedy generation: yields each new token as soon as its
-    decode step lands, while the engine keeps serving concurrent
-    requests. The first yield's wall time is the request's TTFT."""
+             priority: int = 0, max_steps: int = 10000,
+             sampling: Optional[SamplingParams] = None) -> Iterator:
+    """Streaming generation: yields each new token as soon as its decode
+    step lands, while the engine keeps serving concurrent requests.
+    ``sampling`` is the per-request SamplingParams (default greedy). The
+    first yield's wall time is the request's TTFT."""
     server = StreamingServer(engine)
-    rid = server.submit(prompt, max_new=max_new, priority=priority)
+    rid = server.submit(prompt, max_new=max_new, priority=priority,
+                        sampling=sampling)
     for _ in range(max_steps):
         delta = server.poll().get(rid, [])
         yield from delta

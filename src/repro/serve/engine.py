@@ -1,13 +1,15 @@
-"""Inference engine: a thin facade over the serving subsystem.
+"""Inference engine: a host-side scheduler over the unified ModelRunner.
 
 Two modes, selected by ``ServeConfig.paged``:
 
-  * paged (production): block-table paged KV (serve.paged_kv), chunked
-    prefill interleaved with decode, FIFO/priority scheduling and
-    preemption-by-eviction (serve.scheduler), per-request TTFT/TPOT and
-    Table-II traffic metrics (serve.metrics). One jit for decode and one
-    for the fixed-shape prefill chunk serve every request — the legacy
-    path re-jitted prefill per prompt length.
+  * paged (production): every phase of every request — chunked prefill,
+    single-token decode, speculative K+1 verify — is a ROW of one batched
+    ``ModelRunner.step`` call per tick (serve.runner). The engine is pure
+    host policy: admission (serve.scheduler), block accounting
+    (serve.paged_kv), building the per-tick ``StepBatch``, and committing
+    tokens through per-request ``SamplingParams`` (serve.sampling).
+    Decode rows never stall behind prefill ticks, and several prompts
+    prefill concurrently.
   * legacy slots (baseline/ablation): the seed's fixed-slot contiguous
     cache, kept for the paged-vs-contiguous equivalence guarantee and as
     the benchmark baseline. Recurrent-state families (ssm/hybrid) serve
@@ -15,13 +17,14 @@ Two modes, selected by ``ServeConfig.paged``:
 
 Both modes keep the paper's decode story end-to-end: sparse FFN gather
 (relu_sparse), int8 NMCE weights (int8_decode), and per-step off-chip
-byte accounting.
+byte accounting — and both sample through the same SamplingParams
+contract (greedy stays bit-identical to the pre-SamplingParams argmax).
 """
 
 from __future__ import annotations
 
 import itertools
-from typing import Dict, List, Optional
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +32,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models import Model
-from repro.serve import kv_cache, metrics as metrics_mod, paged_kv
+from repro.serve import kv_cache, metrics as metrics_mod, paged_kv, sampling
 from repro.serve.metrics import StepStats  # noqa: F401  (compat re-export)
+from repro.serve.runner import DECODE, PREFILL, VERIFY, ModelRunner
 from repro.serve.scheduler import Request, SchedEntry, Scheduler, State
 
 
@@ -50,6 +54,12 @@ class Engine:
         self._rids = itertools.count()
         self.spec = scfg.spec
         self.drafter = None
+        self.sampler = sampling.Sampler()
+        # per-slot token-id presence for repetition penalty (codebook
+        # streams are greedy-only and skip it)
+        self._presence = None if cfg.n_codebooks else \
+            np.zeros((scfg.max_batch, cfg.vocab), bool)
+        self._draw_ctr: Dict[int, int] = {}    # rid -> sample-draw counter
         if self.spec is not None and not scfg.paged:
             raise ValueError("speculative decode (ServeConfig.spec) "
                              "requires the paged engine (paged=True)")
@@ -114,6 +124,8 @@ class Engine:
                 f"Engine.new_rid() to allocate ids")
         if not self.can_serve(req):
             return False
+        if req.sampling.max_tokens is not None:
+            req.max_new = min(req.max_new, req.sampling.max_tokens)
         if self.scfg.paged:
             return self._submit_paged(req)
         return self._add_request_slots(req)
@@ -127,6 +139,9 @@ class Engine:
         if req is not None and req.done:
             del self._requests[rid]
             self.metrics.requests.pop(rid, None)
+            self._draw_ctr.pop(rid, None)
+            getattr(self, "_host_rngs", {}).pop(rid, None)
+            getattr(self, "_accept_rngs", {}).pop(rid, None)
 
     def step(self) -> List[int]:
         """One engine tick; returns the rids that finished this tick."""
@@ -135,26 +150,82 @@ class Engine:
         return self._step_slots()
 
     # ------------------------------------------------------------------
-    # paged mode: scheduler + block-table KV
+    # sampling plumbing (shared by both modes)
+
+    def _sp(self, req: Request) -> sampling.SamplingParams:
+        """Resolve the request's params; under speculation, requests that
+        don't set a temperature inherit SpecConfig.temperature (the old
+        engine-global knob keeps its meaning as a default)."""
+        fallback = self.spec.temperature if self.spec is not None else 0.0
+        return sampling.effective_params(req.sampling, fallback)
+
+    def _seed_presence(self, slot: int, req: Request) -> None:
+        if self._presence is None:
+            return
+        self._presence[slot, :] = False
+        self._presence[slot, np.asarray(req.prompt, np.int64).reshape(-1)] \
+            = True
+        if req.tokens_out:
+            self._presence[slot, np.asarray(req.tokens_out, np.int64)] = True
+
+    def _sample_rows(self, pairs: List[Tuple[int, Request]], last_logits
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """One batched device sample over the rows in ``pairs``
+        [(slot, req)]; other rows get garbage the caller ignores.
+        Codebook models are greedy-only: a per-codebook argmax."""
+        B = self.scfg.max_batch
+        if self.cfg.n_codebooks:
+            tok = np.argmax(np.asarray(last_logits), axis=-1)
+            return tok.astype(np.int32), np.zeros((B,), np.float32)
+        temp = np.zeros((B,), np.float32)
+        top_k = np.zeros((B,), np.int32)
+        top_p = np.ones((B,), np.float32)
+        rep = np.ones((B,), np.float32)
+        keys = np.zeros((B, 2), np.uint32)
+        for slot, req in pairs:
+            sp = self._sp(req)
+            temp[slot] = sp.temperature
+            top_k[slot] = sp.top_k
+            top_p[slot] = sp.top_p
+            rep[slot] = sp.repetition_penalty
+            ctr = self._draw_ctr.get(req.rid, 0)
+            self._draw_ctr[req.rid] = ctr + 1
+            keys[slot] = sampling.request_key(sp.seed, req.rid, ctr)
+        return self.sampler(last_logits, self._presence, temp, top_k,
+                            top_p, rep, keys)
+
+    def _append_token(self, req: Request, slot: int, tok, lp: float) -> str:
+        """Commit one sampled/accepted token to the request stream.
+        Returns "ok", "stop" (a stop sequence matched — the match is
+        truncated off), or "max" (max_new/max_tokens reached)."""
+        req.tokens_out.append(tok)
+        if req.sampling.logprobs:
+            req.logprobs_out.append(float(lp))
+        if self._presence is not None:
+            self._presence[slot, int(tok)] = True
+        if req.sampling.stop and not self.cfg.n_codebooks:
+            cut = sampling.stop_truncate(req.tokens_out, req.sampling.stop)
+            if cut is not None:
+                del req.tokens_out[cut:]
+                del req.logprobs_out[cut:]
+                return "stop"
+        if len(req.tokens_out) >= req.max_new:
+            return "max"
+        return "ok"
+
+    # ------------------------------------------------------------------
+    # paged mode: scheduler + block-table KV over the unified runner
 
     def _init_paged(self, drafter=None, draft_params=None):
         scfg = self.scfg
-        bs = scfg.block_size
         self.pool = paged_kv.PagedKVCache(
-            self.cfg, n_blocks=scfg.pool_blocks, block_size=bs,
+            self.cfg, n_blocks=scfg.pool_blocks, block_size=scfg.block_size,
             max_batch=scfg.max_batch,
             max_blocks_per_seq=scfg.blocks_per_seq,
             int8_kv=scfg.kv_quant)
         self.sched = Scheduler(scfg, self.pool)
-        self.cache = self.model.init_paged_cache(
-            scfg.max_batch, scfg.pool_blocks, bs, scfg.blocks_per_seq,
-            jnp.float32, int8_kv=scfg.kv_quant)
-        mdl = self.model
-        self._decode_paged = jax.jit(
-            lambda p, t, c, a: mdl.decode_step_paged(p, t, c, a, bs))
-        self._chunk = jax.jit(
-            lambda p, t, c, s, pos, v: mdl.prefill_chunk(p, t, c, s, pos,
-                                                         v, bs))
+        self.runner = ModelRunner(self.model, self.params, scfg,
+                                  dtype=jnp.float32)
         self._kv_per_tok = paged_kv.kv_bytes_per_token(self.cfg,
                                                        scfg.kv_quant)
         if self.spec is not None:
@@ -163,19 +234,19 @@ class Engine:
                 spec_mod.make_drafter(self.spec, self.cfg, self.params,
                                       scfg, draft_params=draft_params)
             self.kctl = spec_mod.AdaptiveK.from_config(self.spec)
-            # acceptance RNG must be independent of the drafter's sampling
-            # RNG (both derive from spec.seed): correlated uniforms would
-            # couple accept tests to draft identities and break the
-            # rejection-sampling distribution guarantee
-            self._spec_rng = np.random.default_rng(
-                np.random.SeedSequence(self.spec.seed).spawn(1)[0])
+            # per-request acceptance RNGs (SamplingParams.seed contract:
+            # a request's accept/resample draws must not depend on batch
+            # composition). The spawn key's second element keeps each
+            # stream independent of the drafter's per-rid sampling RNG
+            # (spawn_key=(rid,)) even when both derive from spec.seed —
+            # correlated uniforms would couple accept tests to draft
+            # identities and break the rejection-sampling distribution
+            # guarantee.
+            self._accept_rngs: Dict[int, np.random.Generator] = {}
             self._draft_w_per_step = self.drafter.weight_bytes_per_step(
                 scfg) if hasattr(self.drafter, "weight_bytes_per_step") \
                 else 0.0
             self._draft_steps_seen = 0
-            self._verify = jax.jit(
-                lambda p, t, c, a, nv: mdl.verify_step_paged(p, t, c, a,
-                                                             nv, bs))
 
     def _submit_paged(self, req: Request) -> bool:
         if not self.sched.submit(req):
@@ -183,9 +254,6 @@ class Engine:
         self._requests[req.rid] = req
         self.metrics.on_arrival(req.rid, len(np.asarray(req.prompt)))
         return True
-
-    def _push_tables(self):
-        self.cache["block_tables"] = jnp.asarray(self.pool.tables())
 
     def _ensure_blocks(self, e: SchedEntry, upto_len: int) -> str:
         """Grow e's block list to cover [0, upto_len), evicting only
@@ -207,235 +275,271 @@ class Engine:
             self.sched.preempt(victim)
         return "ok"
 
-    def _greedy_scalar(self, logits, row: int = 0):
-        nxt = self.model.greedy_token(logits)
-        if self.cfg.n_codebooks:
-            return np.asarray(nxt[row, 0])
-        return int(nxt[row, 0])
+    def _accept_rng(self, rid: int, sp: sampling.SamplingParams
+                    ) -> np.random.Generator:
+        rng = self._accept_rngs.get(rid)
+        if rng is None:
+            ent = self.spec.seed if sp.seed is None else sp.seed
+            rng = self._accept_rngs[rid] = np.random.default_rng(
+                np.random.SeedSequence(entropy=ent,
+                                       spawn_key=(rid & 0xFFFFFFFF,
+                                                  0xACC)))
+        return rng
 
-    def _first_token(self, logits, row: int = 0):
-        """Token emitted from prefill logits. Under spec temperature
-        sampling this must be a temperature sample too — every emitted
-        token of the stream is distributed as the target, not just the
-        verify-phase ones."""
-        if self.spec is not None and self.spec.temperature > 0:
-            from repro.spec.accept import softmax
-            p = softmax(np.asarray(logits)[row, 0], self.spec.temperature)
-            return int(self._spec_rng.choice(len(p), p=p))
-        return self._greedy_scalar(logits, row)
+    def _propose(self, items):
+        """Batched drafting when the drafter supports it (ModelDrafter
+        decodes every slot in one device step per draft token), else a
+        per-row fallback."""
+        batched = getattr(self.drafter, "propose_batch", None)
+        if batched is not None:
+            return batched(items)
+        return [self.drafter.propose(rid, ctx, k) for rid, ctx, k in items]
 
-    def _token_batch(self, pairs):
-        """[(slot, last_token)] -> i32[B, 1(, nc)] decode input."""
-        B = self.scfg.max_batch
-        shape = (B, 1, self.cfg.n_codebooks) if self.cfg.n_codebooks \
-            else (B, 1)
-        tok = np.zeros(shape, np.int32)
-        for slot, last in pairs:
-            tok[slot, 0] = last
-        return tok
-
-    def _extract_token(self, nxt: np.ndarray, slot: int):
-        if self.cfg.n_codebooks:
-            return np.asarray(nxt[slot, 0])
-        return int(nxt[slot, 0])
+    def _commit_emitted(self, e: SchedEntry, tok, lp: float,
+                        finished: List[int], first: bool = False) -> bool:
+        """Commit one token of a paged-mode request; finishes the entry on
+        stop/max. Returns False when the request is done."""
+        status = self._append_token(e.req, e.slot, tok, lp)
+        if status != "stop":
+            if first:
+                self.metrics.on_first_token(e.req.rid)
+            else:
+                self.metrics.on_token(e.req.rid)
+        if status != "ok":
+            self._finish(e, finished)
+            return False
+        return True
 
     def _tick_paged(self) -> List[int]:
-        finished: List[int] = []
-        self.sched.admit()
+        """One tick = one unified ModelRunner.step serving every phase:
 
-        # 1) at most one fixed-shape prefill chunk (keeps decode cadence)
-        pf = self.sched.next_prefill()
-        if pf is not None:
-            e, pos, valid = pf
-            st = self._ensure_blocks(e, pos + valid)
+          1. capacity resolution (block allocation, may evict),
+          2. drafting for speculative rows (host / draft model),
+          3. ONE batched device step over prefill+decode+verify rows,
+          4. one batched sample + host-side commit (acceptance, stops).
+        """
+        finished: List[int] = []
+        for e in self.sched.admit():
+            self._seed_presence(e.slot, e.req)
+        spec = self.spec
+        S_spec = spec.k_max + 1 if spec is not None else 0
+        K = 0
+        if spec is not None:
+            K = self.kctl.k if spec.adaptive else min(spec.k, spec.k_max)
+
+        # ---- 1) capacity resolution -----------------------------------
+        prefill_plan: List[Tuple[SchedEntry, int, int]] = []
+        for e in self.sched.prefill_entries():
+            if e.req.rid not in self.sched.active:
+                continue                       # evicted making room above
+            total = len(e.prefill_tokens())
+            valid = min(self.scfg.prefill_chunk, total - e.pos)
+            st = self._ensure_blocks(e, e.pos + valid)
             if st == "never":
                 self._finish(e, finished)      # prompt can't fit: give up
             elif st == "ok":
-                toks = e.prefill_tokens()
-                C = self.scfg.prefill_chunk
-                chunk = np.zeros((1, C) + toks.shape[1:], np.int32)
-                chunk[0, :valid] = toks[pos:pos + valid]
-                self._push_tables()
-                logits, self.cache = self._chunk(
-                    self.params, jnp.asarray(chunk), self.cache,
-                    jnp.int32(e.slot), jnp.int32(pos), jnp.int32(valid))
-                e.pos = pos + valid
-                self.metrics.on_prefill_chunk(valid)
-                if e.pos >= len(toks):
-                    e.ctx_len = e.pos
-                    e.state = State.RUNNING
-                    if e.replay:
-                        e.replay = False       # next token already known
-                        if e.resync_replay:
-                            # prompt KV restored; generated KV re-derives
-                            # through verify steps (bit-identical to how
-                            # it was first written) before drafting resumes
-                            e.resync = [int(t) for t
-                                        in e.req.tokens_out[:-1]]
-                            e.resync_replay = False
-                    else:
-                        e.req.tokens_out.append(self._first_token(logits))
-                        self.metrics.on_first_token(e.req.rid)
-                        if len(e.req.tokens_out) >= e.req.max_new:
-                            self._finish(e, finished)
-
-        # 2) one batched decode (or draft->verify) step across RUNNING rows
-        if self.spec is not None:
-            self._spec_phase(finished)
-        else:
-            self._decode_phase(finished)
-        return finished
-
-    def _decode_phase(self, finished: List[int]):
-        """One batched single-token decode step (non-speculative path)."""
-        deferred = set()
-        for e in list(self.sched.decode_entries()):
-            if e.req.rid not in self.sched.active:
-                continue                       # evicted making room above
-            st = self._ensure_blocks(e, e.ctx_len + 1)
-            if st == "never":
-                self._finish(e, finished)      # context ceiling reached
-            elif st == "defer":
-                deferred.add(e.req.rid)        # wait for capacity
-        rows = [e for e in self.sched.decode_entries()
-                if e.req.rid not in deferred]
-        if not rows:
-            return
-        tok = self._token_batch([(e.slot, e.req.tokens_out[-1])
-                                 for e in rows])
-        active = np.zeros((self.scfg.max_batch,), np.int32)
-        for e in rows:
-            active[e.slot] = 1
-        self._push_tables()
-        logits, self.cache = self._decode_paged(
-            self.params, jnp.asarray(tok), self.cache,
-            jnp.asarray(active))
-        nxt = np.asarray(self.model.greedy_token(logits))
-        kv_read = sum(e.ctx_len for e in rows) * self._kv_per_tok
-        for e in rows:
-            e.req.tokens_out.append(self._extract_token(nxt, e.slot))
-            e.ctx_len += 1
-            self.metrics.on_token(e.req.rid)
-            if len(e.req.tokens_out) >= e.req.max_new \
-                    or e.ctx_len + 1 > self.scfg.max_seq:
-                self._finish(e, finished)
-        self.metrics.on_decode_step(len(rows), kv_bytes=kv_read)
-
-    def _spec_phase(self, finished: List[int]):
-        """Draft -> batched verify -> accept/rollback, one pass per tick.
-
-        Each RUNNING row gets up to K draft tokens from the drafter; the
-        target scores all of them (plus the pending last token) in ONE
-        fixed-shape verify step through the block tables; acceptance
-        commits the longest correct prefix + one free target token, and
-        the pool rolls the rejected tail's blocks back (truncate). Slots
-        are pinned across the verify so a concurrent defrag can't move
-        blocks the in-flight step has captured."""
-        from repro.spec import greedy_accept, rejection_accept
-
-        spec = self.spec
-        K = self.kctl.k if spec.adaptive else min(spec.k, spec.k_max)
-        S = spec.k_max + 1                      # fixed verify shape
-        # grow each row's block list to cover its worst-case speculative
-        # or resync tail FIRST (evicting strictly-lower-precedence victims
-        # if needed — exactly the decode path's policy): drafting is K
-        # draft-model steps per row, so rows that end up deferred or
-        # evicted must not burn that work. Over-reservation for short
-        # proposals is returned by the post-commit truncate below.
+                prefill_plan.append((e, e.pos, valid))
         deferred = set()
         for e in list(self.sched.decode_entries()):
             if e.req.rid not in self.sched.active:
                 continue
-            need = min(len(e.resync), S) if e.resync \
-                else min(K, max(self.scfg.max_seq - e.ctx_len - 2, 0)) + 1
+            if spec is not None:
+                # cover the worst-case speculative or resync tail FIRST:
+                # drafting costs real work, so rows that end up deferred
+                # must not burn it; over-reservation for short proposals
+                # is returned by the post-commit truncate below
+                need = min(len(e.resync), S_spec) if e.resync \
+                    else min(K, max(self.scfg.max_seq - e.ctx_len - 2,
+                                    0)) + 1
+            else:
+                need = 1
             st = self._ensure_blocks(e, e.ctx_len + need)
             if st == "never":
-                self._finish(e, finished)
+                self._finish(e, finished)      # context ceiling reached
             elif st == "defer":
-                deferred.add(e.req.rid)
-        rows = [e for e in self.sched.decode_entries()
-                if e.req.rid not in deferred]
-        if not rows:
-            return
+                deferred.add(e.req.rid)        # wait for capacity
+        prefill_plan = [(e, pos, v) for e, pos, v in prefill_plan
+                        if e.req.rid in self.sched.active]
+        run_rows = [e for e in self.sched.decode_entries()
+                    if e.req.rid not in deferred]
 
+        # ---- 2) drafting (spec only) ----------------------------------
         # rows replaying after eviction re-feed committed tokens through
         # the SAME verify math that originally wrote their KV ("resync":
         # forced acceptance, no emission) — a dense-prefill recompute of
         # those positions would differ from the sparse-FFN decode path
         # and could flip a later greedy argmax.
         proposals: Dict[int, tuple] = {}
-        for e in rows:
-            if e.resync:
-                chunk = np.asarray(e.resync[:S], np.int32)
-                proposals[e.req.rid] = ("resync", chunk, None)
+        if spec is not None and run_rows:
+            items = []
+            for e in run_rows:
+                if e.resync:
+                    proposals[e.req.rid] = (
+                        "resync", np.asarray(e.resync[:S_spec], np.int32),
+                        None)
+                    continue
+                budget = min(K, self.scfg.max_seq - e.ctx_len - 2)
+                ctx = np.concatenate([
+                    np.asarray(e.req.prompt, np.int32),
+                    np.asarray(e.req.tokens_out, np.int32)])
+                items.append((e.req.rid, ctx, max(budget, 0)))
+            for (rid, _, _), (toks, qd) in zip(items, self._propose(items)):
+                proposals[rid] = ("draft", np.asarray(toks, np.int32), qd)
+
+        if not prefill_plan and not run_rows:
+            return finished
+
+        # ---- 3) one unified batched step ------------------------------
+        rows: List[Tuple[int, int, np.ndarray, int]] = []
+        for e, pos, valid in prefill_plan:
+            toks = e.prefill_tokens()[pos:pos + valid]
+            rows.append((e.slot, PREFILL, np.asarray(toks, np.int32), pos))
+        for e in run_rows:
+            if spec is None:
+                rows.append((e.slot, DECODE,
+                             np.asarray([e.req.tokens_out[-1]], np.int32),
+                             e.ctx_len))
                 continue
-            budget = min(K, self.scfg.max_seq - e.ctx_len - 2)
-            ctx = np.concatenate([
-                np.asarray(e.req.prompt, np.int32),
-                np.asarray(e.req.tokens_out, np.int32)])
-            toks, qd = self.drafter.propose(e.req.rid, ctx, max(budget, 0))
-            proposals[e.req.rid] = ("draft", np.asarray(toks, np.int32), qd)
-
-        tok = np.zeros((self.scfg.max_batch, S), np.int32)
-        n_valid = np.zeros((self.scfg.max_batch,), np.int32)
-        active = np.zeros((self.scfg.max_batch,), np.int32)
-        for e in rows:
             kind, toks, _ = proposals[e.req.rid]
-            if kind == "resync":
-                tok[e.slot, :len(toks)] = toks
-                n_valid[e.slot] = len(toks)
-            else:
-                tok[e.slot, 0] = e.req.tokens_out[-1]
-                tok[e.slot, 1:1 + len(toks)] = toks
-                n_valid[e.slot] = 1 + len(toks)
-            active[e.slot] = 1
+            seq = toks if kind == "resync" else np.concatenate(
+                [np.asarray([e.req.tokens_out[-1]], np.int32), toks])
+            rows.append((e.slot, VERIFY, seq, e.ctx_len))
+            # pin across the step: a concurrent defrag must not move
+            # blocks an in-flight device table has captured
             self.pool.pin(e.slot)
-        self._push_tables()
-        logits, self.cache = self._verify(
-            self.params, jnp.asarray(tok), self.cache, jnp.asarray(active),
-            jnp.asarray(n_valid))
-        log = np.asarray(logits)
-        lens_np = np.asarray(self.cache["lens"]).copy()
+        batch = self.runner.new_batch(max(len(r[2]) for r in rows),
+                                      self.pool.tables())
+        for slot, phase, toks, start in rows:
+            batch.add_row(slot, phase, toks, start)
+        out = self.runner.step(batch)
 
+        # ---- 4) sample + commit ---------------------------------------
+        sample_pairs: List[Tuple[int, Request]] = []
+        completing = set()
+        for e, pos, valid in prefill_plan:
+            if pos + valid >= len(e.prefill_tokens()):
+                completing.add(e.req.rid)
+                if not e.replay:
+                    sample_pairs.append((e.slot, e.req))
+        if spec is None:
+            sample_pairs.extend((e.slot, e.req) for e in run_rows)
+        tok_np = lp_np = None
+        if sample_pairs:
+            tok_np, lp_np = self._sample_rows(sample_pairs,
+                                              out.last_logits)
+
+        # prefill rows: advance the frontier; a completing row emits its
+        # first token (sampled with ITS params — no more greedy-only)
+        for e, pos, valid in prefill_plan:
+            e.pos = pos + valid
+            self.metrics.on_prefill_chunk(valid)
+            if e.req.rid not in completing:
+                continue
+            e.ctx_len = e.pos
+            e.state = State.RUNNING
+            if e.replay:
+                e.replay = False               # next token already known
+                if e.resync_replay:
+                    # prompt KV restored; generated KV re-derives through
+                    # verify steps (bit-identical to how it was first
+                    # written) before drafting resumes
+                    e.resync = [int(t) for t in e.req.tokens_out[:-1]]
+                    e.resync_replay = False
+            else:
+                self._commit_emitted(e, self._one_token(tok_np, e.slot),
+                                     lp_np[e.slot], finished, first=True)
+
+        if spec is None:
+            self._commit_decode(run_rows, tok_np, lp_np, finished)
+        else:
+            self._commit_verify(run_rows, proposals, out, finished)
+        return finished
+
+    def _one_token(self, tok_np: np.ndarray, slot: int):
+        if self.cfg.n_codebooks:
+            return tok_np[slot]
+        return int(tok_np[slot])
+
+    def _commit_decode(self, rows: List[SchedEntry], tok_np, lp_np,
+                       finished: List[int]) -> None:
+        """Commit one sampled token per decode row (non-speculative)."""
+        if not rows:
+            return
+        kv_read = sum(e.ctx_len for e in rows) * self._kv_per_tok
+        for e in rows:
+            alive = self._commit_emitted(e, self._one_token(tok_np, e.slot),
+                                         lp_np[e.slot], finished)
+            e.ctx_len += 1
+            if alive and e.ctx_len + 1 > self.scfg.max_seq:
+                self._finish(e, finished)
+        self.metrics.on_decode_step(len(rows), kv_bytes=kv_read)
+
+    def _commit_verify(self, rows: List[SchedEntry], proposals, out,
+                       finished: List[int]) -> None:
+        """Acceptance + rollback for verify rows: commit the longest
+        correct prefix plus the free target token, truncate the rejected
+        tail's blocks, unpin."""
+        from repro.spec import (filtered_accept, greedy_accept,
+                                rejection_accept)
+
+        if not rows:
+            return
         kv_read = 0.0
         drafted = accepted = emitted_total = 0
         for e in rows:
             kind, toks, qd = proposals[e.req.rid]
             m = len(toks)
-            nv = int(n_valid[e.slot])           # query j reads ctx+j keys
+            nv = m if kind == "resync" else m + 1  # query j reads ctx+j keys
             kv_read += (nv * e.ctx_len
                         + nv * (nv - 1) / 2) * self._kv_per_tok
             if kind == "resync":
                 # committed history: KV now re-written, nothing to emit
                 e.ctx_len += m
                 del e.resync[:m]
-                lens_np[e.slot] = e.ctx_len
                 self.pool.unpin(e.slot)
                 continue
-            row_logits = log[e.slot, :m + 1]
-            if spec.temperature <= 0:
+            row_logits = out.row_logits(e.slot)[:m + 1]
+            sp = self._sp(e.req)
+            if sp.top_k > 0 or sp.top_p < 1.0 \
+                    or sp.repetition_penalty != 1.0:
+                # full per-request filters: acceptance against the same
+                # filtered law the plain sampler draws from
+                seen = list(np.asarray(e.req.prompt, np.int64)) \
+                    + list(e.req.tokens_out)
+                emitted, a = filtered_accept(
+                    self._accept_rng(e.req.rid, sp), toks, qd, row_logits,
+                    sp, seen)
+            elif sp.temperature <= 0:
                 emitted, a = greedy_accept(
                     toks, row_logits.argmax(axis=-1).astype(np.int32))
             else:
                 emitted, a = rejection_accept(
-                    self._spec_rng, toks, qd, row_logits, spec.temperature)
+                    self._accept_rng(e.req.rid, sp), toks, qd, row_logits,
+                    sp.temperature)
             drafted += m
             accepted += a
             space = e.req.max_new - len(e.req.tokens_out)
             emitted = emitted[:space]
-            e.req.tokens_out.extend(emitted)
-            for _ in emitted:
-                self.metrics.on_token(e.req.rid)
-            emitted_total += len(emitted)
-            e.ctx_len += len(emitted)
-            lens_np[e.slot] = e.ctx_len
+            P = len(np.asarray(e.req.prompt))
+            alive = True
+            for j, t in enumerate(emitted):
+                lp = 0.0
+                if sp.logprobs:
+                    p = sampling.softmax(row_logits[j], 1.0)
+                    lp = float(np.log(np.maximum(p[int(t)], 1e-30)))
+                alive = self._commit_emitted(e, int(t), lp, finished)
+                emitted_total += 1
+                if not alive:
+                    break
+            # committed frontier: the last emitted token's KV is written
+            # by the NEXT verify step (steady-state invariant); stop
+            # truncation shrinks tokens_out, so re-derive rather than add
+            e.ctx_len = P + max(len(e.req.tokens_out) - 1, 0)
             # rollback: free whole blocks past the committed frontier
             self.pool.truncate(e.slot, e.ctx_len)
             self.pool.unpin(e.slot)
-            if len(e.req.tokens_out) >= e.req.max_new \
-                    or e.ctx_len + 1 > self.scfg.max_seq:
+            if alive and e.ctx_len + 1 > self.scfg.max_seq:
                 self._finish(e, finished)
-        self.cache["lens"] = jnp.asarray(lens_np)
         draft_steps = getattr(self.drafter, "steps", 0)
         draft_w = (draft_steps - self._draft_steps_seen) \
             * self._draft_w_per_step
@@ -443,7 +547,7 @@ class Engine:
         self.metrics.on_spec_step(len(rows), drafted, accepted,
                                   emitted_total, kv_bytes=kv_read,
                                   draft_weight_bytes=draft_w)
-        if spec.adaptive and drafted:
+        if self.spec.adaptive and drafted:
             self.kctl.update(accepted / drafted)
 
     def _finish(self, e: SchedEntry, finished: List[int]):
@@ -451,16 +555,15 @@ class Engine:
         self.sched.finish(e)
         if self.drafter is not None:
             self.drafter.forget(e.req.rid)
+            self._accept_rngs.pop(e.req.rid, None)
         finished.append(e.req.rid)
 
     def defrag(self):
-        """Compact the block pool (host bookkeeping + device gather)."""
+        """Compact the block pool (host bookkeeping + device gather; the
+        runner republishes tables before its next step)."""
         perm = self.pool.defrag()
         if perm is not None:
-            p = jnp.asarray(perm)
-            self.cache["units"] = jax.tree.map(
-                lambda a: jnp.take(a, p, axis=1), self.cache["units"])
-            self._push_tables()
+            self.runner.apply_perm(perm)
         return perm
 
     # ------------------------------------------------------------------
@@ -473,7 +576,15 @@ class Engine:
                                            jnp.float32)
         self._decode = jax.jit(self.model.decode_step)
         self._active: Dict[int, Request] = {}
-        self._done_at_admit: List[int] = []    # max_new hit during prefill
+        self._done_at_admit: List[int] = []    # finished during prefill
+        self._host_rngs: Dict[int, np.random.Generator] = {}
+
+    def _finish_slot(self, req: Request) -> None:
+        req.done = True
+        self.alloc.release(req.rid)
+        self._active.pop(req.rid, None)
+        self._host_rngs.pop(req.rid, None)
+        self.metrics.on_finish(req.rid)
 
     def _add_request_slots(self, req: Request) -> bool:
         slot = self.alloc.alloc(req.rid)
@@ -490,13 +601,26 @@ class Engine:
         logits, tmp = self.model.prefill(self.params, {"tokens": prompt},
                                          tmp)
         self.cache = self._merge_slot(self.cache, tmp, slot, S)
-        req.tokens_out.append(self._greedy_scalar(logits))
-        self.metrics.on_first_token(req.rid)
-        if len(req.tokens_out) >= req.max_new:   # same check the paged
-            req.done = True                      # path makes after prefill
-            self.alloc.release(req.rid)
-            del self._active[req.rid]
-            self.metrics.on_finish(req.rid)
+        self._seed_presence(slot, req)
+        if self.cfg.n_codebooks:
+            tok = np.asarray(jnp.argmax(logits, axis=-1),
+                             np.int32)[0, 0]
+            lp = 0.0
+        else:
+            sp = self._sp(req)
+            rng = self._host_rngs.setdefault(
+                req.rid, np.random.default_rng(np.random.SeedSequence(
+                    entropy=0 if sp.seed is None else sp.seed,
+                    spawn_key=(req.rid & 0xFFFFFFFF,))))
+            seen = np.asarray(req.prompt, np.int64).reshape(-1) \
+                if sp.repetition_penalty != 1.0 else ()
+            tok, lp = sampling.sample_np(np.asarray(logits)[0, 0], sp,
+                                         rng, seen=seen)
+        status = self._append_token(req, slot, tok, lp)
+        if status != "stop":
+            self.metrics.on_first_token(req.rid)
+        if status != "ok":                     # same checks the paged
+            self._finish_slot(req)             # path makes after prefill
             self._done_at_admit.append(req.rid)
         return True
 
@@ -516,25 +640,28 @@ class Engine:
         self._done_at_admit = []
         if not self._active:
             return finished
-        tok = self._token_batch(
-            [(self.alloc.active[req.rid], req.tokens_out[-1])
-             for req in self._active.values()])
+        reqs = list(self._active.values())
+        slots = {req.rid: self.alloc.active[req.rid] for req in reqs}
+        B = self.scfg.max_batch
+        shape = (B, 1, self.cfg.n_codebooks) if self.cfg.n_codebooks \
+            else (B, 1)
+        tok = np.zeros(shape, np.int32)
+        for req in reqs:
+            tok[slots[req.rid], 0] = req.tokens_out[-1]
         logits, self.cache = self._decode(self.params, jnp.asarray(tok),
                                           self.cache)
-        nxt = np.asarray(self.model.greedy_token(logits))
-        n = 0
-        decoded_done = []
-        for req in self._active.values():
-            slot = self.alloc.active[req.rid]
-            req.tokens_out.append(self._extract_token(nxt, slot))
-            self.metrics.on_token(req.rid)
-            n += 1
-            if len(req.tokens_out) >= req.max_new:
-                req.done = True
-                decoded_done.append(req.rid)
-        for rid in decoded_done:
-            self.alloc.release(rid)
-            del self._active[rid]
-            self.metrics.on_finish(rid)
-        self.metrics.on_decode_step(n)
-        return finished + decoded_done
+        tok_np, lp_np = self._sample_rows(
+            [(slots[req.rid], req) for req in reqs], logits[:, 0])
+        done_now = []
+        for req in reqs:
+            slot = slots[req.rid]
+            status = self._append_token(req, slot,
+                                        self._one_token(tok_np, slot),
+                                        lp_np[slot])
+            if status != "stop":
+                self.metrics.on_token(req.rid)
+            if status != "ok":
+                self._finish_slot(req)
+                done_now.append(req.rid)
+        self.metrics.on_decode_step(len(reqs))
+        return finished + done_now

@@ -1,0 +1,188 @@
+"""ModelRunner: ONE batched ``step(StepBatch) -> StepOutput`` for serving.
+
+The engine used to juggle three separately-jitted model entries (prefill
+chunk, paged decode, spec verify) plus a greedy-only sampling helper —
+every new scenario multiplied code paths. The runner collapses them onto
+the paper's one-matvec-datapath shape: a single jitted function
+(models.transformer.forward_step) serves chunked-prefill rows, decode
+rows, and K+1 verify rows in the same fixed-shape batch, so decode never
+stalls behind prefill ticks (continuous batching) and new phases are a
+new row kind, not a new model entry.
+
+Shape discipline: per-tick token width S is bucketed — {1} for pure
+decode ticks, the prefill chunk width, and k_max+1 under speculation —
+so each bucket compiles exactly once and steady-state decode pays no
+padding. The runner owns the device cache; the engine republishes the
+host-truth ``lens`` and block tables before every step (the device never
+advances them — only the engine knows what actually committed, e.g.
+after speculative acceptance).
+
+The attention read path is pluggable (``ServeConfig.attn_backend``):
+"naive" gathers blocks into a logical sequence (reference, shardable);
+"flash" hands the block pools + tables to the Pallas flash-decode kernel
+(kernels.decode_attn.paged_decode_attention) for single-token steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+
+# row phases (StepBatch.phase values)
+IDLE, PREFILL, DECODE, VERIFY = 0, 1, 2, 3
+
+BACKENDS = ("naive", "flash")
+
+
+@dataclasses.dataclass
+class StepBatch:
+    """Host-side description of one unified step: flat tokens plus a
+    per-row (phase, start, valid-length) descriptor and the block tables.
+
+    tokens: i32[B, S] (or [B, S, nc] for codebook models) — row b's valid
+    tokens occupy [0, n_valid[b]); the rest is padding whose KV writes
+    drop at the sentinel. row_start[b] is the absolute position of the
+    row's first token (its committed context length; the prefill frontier
+    for PREFILL rows). phase[b] routes per-row math: PREFILL rows use the
+    dense FFN, DECODE/VERIFY the sparse decode path; IDLE rows are fully
+    masked (sentinel tables, garbage logits)."""
+
+    tokens: np.ndarray
+    row_start: np.ndarray
+    n_valid: np.ndarray
+    phase: np.ndarray
+    tables: np.ndarray
+
+    @classmethod
+    def empty(cls, max_batch: int, width: int, tables: np.ndarray,
+              n_codebooks: int = 0) -> "StepBatch":
+        shape = (max_batch, width, n_codebooks) if n_codebooks \
+            else (max_batch, width)
+        return cls(tokens=np.zeros(shape, np.int32),
+                   row_start=np.zeros((max_batch,), np.int32),
+                   n_valid=np.zeros((max_batch,), np.int32),
+                   phase=np.full((max_batch,), IDLE, np.int32),
+                   tables=np.asarray(tables, np.int32))
+
+    def add_row(self, slot: int, phase: int, tokens, start: int) -> None:
+        toks = np.asarray(tokens, np.int32)
+        self.tokens[slot, :len(toks)] = toks
+        self.row_start[slot] = start
+        self.n_valid[slot] = len(toks)
+        self.phase[slot] = phase
+
+
+@dataclasses.dataclass
+class StepOutput:
+    """Device results of one step. ``logits[b, j]`` is the distribution
+    for the token FOLLOWING tokens[b, j]; ``last_logits[b]`` is row b's
+    logits at its last valid position (what decode rows and
+    prompt-completing prefill rows sample from). ``row_logits`` pulls one
+    row to host lazily — verify rows need the full chain, everyone else
+    only samples from ``last_logits``."""
+
+    logits: jax.Array          # [B, S, V(, nc x V for codebooks)]
+    last_logits: jax.Array     # [B, V] / [B, nc, V]
+    _np: Optional[np.ndarray] = None
+
+    def row_logits(self, slot: int) -> np.ndarray:
+        if self._np is None:
+            self._np = np.asarray(self.logits)
+        return self._np[slot]
+
+
+class ModelRunner:
+    """Owns the device-side paged cache and the bucketed jit instances of
+    ``Model.forward_step``; the engine (a pure host-side scheduler) builds
+    a StepBatch per tick and calls ``step``."""
+
+    def __init__(self, model, params, scfg: ServeConfig,
+                 dtype=jnp.float32):
+        cfg: ModelConfig = model.cfg
+        if scfg.attn_backend not in BACKENDS:
+            raise ValueError(f"unknown attn_backend "
+                             f"{scfg.attn_backend!r}; known: {BACKENDS}")
+        if scfg.attn_backend == "flash" and scfg.kv_quant:
+            raise ValueError(
+                "attn_backend='flash' reads fp block pools; int8 KV "
+                "(kv_quant) needs the naive dequantizing gather")
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.cache = model.init_paged_cache(
+            scfg.max_batch, scfg.pool_blocks, scfg.block_size,
+            scfg.blocks_per_seq, dtype, int8_kv=scfg.kv_quant)
+        self.buckets = sorted({1, scfg.prefill_chunk}
+                              | ({scfg.spec.k_max + 1}
+                                 if scfg.spec is not None else set()))
+        self._fns: Dict[tuple, callable] = {}
+
+    # --- batch construction ------------------------------------------------
+    def width_for(self, max_valid: int) -> int:
+        """Smallest compiled bucket covering ``max_valid`` tokens/row."""
+        for b in self.buckets:
+            if b >= max_valid:
+                return b
+        self.buckets.append(max_valid)      # rare: register a new bucket
+        self.buckets.sort()
+        return max_valid
+
+    def new_batch(self, max_valid: int, tables: np.ndarray) -> StepBatch:
+        return StepBatch.empty(self.scfg.max_batch,
+                               self.width_for(max_valid), tables,
+                               n_codebooks=self.cfg.n_codebooks)
+
+    # --- the one step ------------------------------------------------------
+    def _fn(self, width: int, has_prefill: bool):
+        """One jit per (width bucket, prefill-present) pair: no-prefill
+        ticks — the serving steady state — compile to the pure sparse
+        decode FFN and never stream the dense W_down."""
+        key = (width, has_prefill)
+        fn = self._fns.get(key)
+        if fn is None:
+            mdl, bs = self.model, self.scfg.block_size
+            backend = self.scfg.attn_backend
+
+            def run(params, tokens, cache, n_valid, is_prefill):
+                logits, cache = mdl.forward_step(
+                    params, tokens, cache, n_valid, is_prefill, bs,
+                    backend=backend, has_prefill=has_prefill)
+                idx = jnp.clip(n_valid - 1, 0, logits.shape[1] - 1)
+                idx = idx.reshape((-1,) + (1,) * (logits.ndim - 1))
+                last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+                return logits, last, cache
+
+            fn = self._fns[key] = jax.jit(run)
+        return fn
+
+    def step(self, batch: StepBatch) -> StepOutput:
+        """Run one unified step: republish host-truth lens/tables, execute
+        the bucketed jit, return per-position and last-valid logits."""
+        width = batch.tokens.shape[1]
+        has_prefill = bool(np.any(batch.phase == PREFILL))
+        self.cache["lens"] = jnp.asarray(batch.row_start)
+        self.cache["block_tables"] = jnp.asarray(batch.tables)
+        logits, last, self.cache = self._fn(width, has_prefill)(
+            self.params, jnp.asarray(batch.tokens), self.cache,
+            jnp.asarray(batch.n_valid),
+            jnp.asarray(batch.phase == PREFILL))
+        return StepOutput(logits=logits, last_logits=last)
+
+    # --- defrag ------------------------------------------------------------
+    def apply_perm(self, perm: np.ndarray) -> None:
+        """Apply a pool defrag permutation to the device block pools
+        (new storage row i = old row perm[i])."""
+        p = jnp.asarray(perm)
+        self.cache["units"] = jax.tree.map(
+            lambda a: jnp.take(a, p, axis=1), self.cache["units"])
+
+
+__all__ = ["BACKENDS", "DECODE", "IDLE", "ModelRunner", "PREFILL",
+           "StepBatch", "StepOutput", "VERIFY"]

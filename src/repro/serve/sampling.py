@@ -1,0 +1,291 @@
+"""Per-request sampling: ``SamplingParams`` + batched on-device sampling.
+
+The seed engine hard-coded greedy argmax in three places (prefill first
+token, decode step, spec acceptance fallback). Here sampling is one
+per-request contract threaded api -> scheduler -> engine -> ModelRunner:
+
+  * ``SamplingParams`` — temperature / top-k / top-p / repetition penalty /
+    stop sequences / max_tokens / logprobs, attached to every ``Request``.
+  * ``Sampler`` — ONE jitted batched kernel samples every row of a step in
+    a single device call: per-row temperature and filter knobs are traced
+    arrays, so one compilation serves any mix of greedy and sampled rows.
+    Greedy rows (temperature <= 0) reduce to exactly ``argmax(logits)`` —
+    bit-identical to the pre-SamplingParams engines, which is what the
+    paged-vs-contiguous and spec-vs-baseline equivalence tests pin.
+  * numpy mirrors (``softmax``, ``sample_np``, ``categorical_np``) — the
+    host-side primitives the legacy slot engine and the rejection-sampling
+    acceptance rule (repro.spec.accept) share, so speculative acceptance
+    and plain sampling are built from the same math.
+
+Stop sequences are host-side by construction (they need the committed
+token stream, which only the engine has): ``stop_truncate`` is the one
+shared matcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How one request turns logits into tokens.
+
+    ``temperature=None`` (the default) means "unset": greedy, unless the
+    engine provides a default (SpecConfig.temperature keeps its old
+    engine-wide meaning for requests that don't choose). An EXPLICIT
+    ``temperature=0.0`` is always greedy, even on such an engine;
+    ``temperature>0`` samples. top_k=0 and top_p=1.0 disable the
+    respective filters; repetition_penalty=1.0 is a no-op. ``stop`` is
+    a tuple of token-id sequences — generation truncates BEFORE the match
+    (the stop sequence itself is not emitted). ``max_tokens`` caps the
+    generated length (the engine takes min with the request's max_new).
+    ``logprobs`` asks for the chosen token's log-probability per step.
+    ``seed`` makes the request's sample stream reproducible independently
+    of batch composition.
+    """
+
+    temperature: Optional[float] = None
+    top_k: int = 0
+    top_p: float = 1.0
+    repetition_penalty: float = 1.0
+    stop: Tuple[Tuple[int, ...], ...] = ()
+    max_tokens: Optional[int] = None
+    logprobs: bool = False
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.temperature is not None and self.temperature < 0:
+            object.__setattr__(self, "temperature", 0.0)
+        if not (0.0 < self.top_p <= 1.0):
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.repetition_penalty <= 0:
+            raise ValueError("repetition_penalty must be > 0, got "
+                             f"{self.repetition_penalty}")
+        if self.max_tokens is not None and self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        # normalize stop: accept any iterable of iterables of ints
+        stop = tuple(tuple(int(t) for t in s) for s in self.stop)
+        if any(len(s) == 0 for s in stop):
+            raise ValueError("empty stop sequence")
+        object.__setattr__(self, "stop", stop)
+
+    @property
+    def is_greedy(self) -> bool:
+        return (self.temperature or 0.0) <= 0
+
+
+GREEDY = SamplingParams()
+
+
+def request_key(seed: Optional[int], rid: int, counter: int) -> np.ndarray:
+    """Deterministic uint32[2] PRNG key for one sample draw of one request.
+
+    Derived from (seed, rid, draw counter) so a request's sample stream
+    does not depend on which other requests share its batch — the
+    per-request reproducibility contract of ``SamplingParams.seed``."""
+    ss = np.random.SeedSequence(entropy=0 if seed is None else seed,
+                                spawn_key=(rid & 0xFFFFFFFF, counter))
+    return ss.generate_state(2, np.uint32)
+
+
+def stop_truncate(tokens: Sequence[int],
+                  stop: Tuple[Tuple[int, ...], ...]) -> Optional[int]:
+    """If ``tokens`` ends with any stop sequence, return the length to
+    truncate to (match excluded); else None. The engine calls this after
+    every committed token, so a stop can never be overrun mid-sequence."""
+    n = len(tokens)
+    for seq in stop:
+        m = len(seq)
+        if m and n >= m and tuple(int(t) for t in tokens[n - m:]) == seq:
+            return n - m
+    return None
+
+
+def stop_holdback(tokens: Sequence[int],
+                  stop: Tuple[Tuple[int, ...], ...]) -> int:
+    """How many trailing tokens might still be retracted: the longest
+    suffix of ``tokens`` that is a PROPER prefix of a stop sequence.
+    Streaming front-ends must hold these back — if the match completes on
+    a later tick the engine deletes them from tokens_out, and a token
+    already streamed to a client cannot be unsent."""
+    best = 0
+    n = len(tokens)
+    for seq in stop:
+        for m in range(min(len(seq) - 1, n), 0, -1):
+            if tuple(int(t) for t in tokens[n - m:]) == seq[:m]:
+                best = max(best, m)
+                break
+    return best
+
+
+# ---------------------------------------------------------------------------
+# The batched filter->sample math (device and numpy share this spec):
+#   1. repetition penalty on seen token ids (HF convention: positive logits
+#      divide by the penalty, negative multiply),
+#   2. temperature scale,
+#   3. top-k mask, then top-p (nucleus) mask over the surviving softmax,
+#   4. categorical draw; greedy rows bypass 2-4 with a plain argmax.
+
+
+def _sample_batch(logits, presence, temp, top_k, top_p, rep, keys):
+    """logits f32[B, V]; presence bool[B, V] (token ids already in the
+    stream); temp/top_p/rep f32[B]; top_k i32[B]; keys u32[B, 2].
+    Returns (tokens i32[B], logprob-of-chosen f32[B])."""
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    pen = jnp.where(logits > 0, logits / rep[:, None], logits * rep[:, None])
+    logits = jnp.where(presence, pen, logits)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    scaled = logits / jnp.maximum(temp, 1e-6)[:, None]
+    srt = jnp.sort(scaled, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(
+        srt, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=1)
+    keep_k = jnp.where(top_k[:, None] > 0, scaled >= kth, True)
+    masked = jnp.where(keep_k, scaled, -jnp.inf)
+    probs = jax.nn.softmax(masked, axis=-1)
+    ps = jnp.sort(probs, axis=-1)[:, ::-1]
+    csum = jnp.cumsum(ps, axis=-1)
+    # nucleus: smallest prefix with mass >= top_p; the cutoff prob is the
+    # smallest sorted prob whose PRECEDING mass is still < top_p
+    keep_sorted = (csum - ps) < top_p[:, None]
+    thresh = jnp.min(jnp.where(keep_sorted, ps, jnp.inf), axis=-1)
+    final = jnp.where(probs >= thresh[:, None], masked, -jnp.inf)
+    sampled = jax.vmap(jax.random.categorical)(keys, final).astype(jnp.int32)
+    tok = jnp.where(temp > 0, sampled, greedy)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    chosen = jnp.take_along_axis(lp, tok[:, None], axis=1)[:, 0]
+    return tok, chosen
+
+
+def _greedy_batch(logits):
+    logits = logits.astype(jnp.float32)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return tok, jnp.take_along_axis(lp, tok[:, None], axis=1)[:, 0]
+
+
+class Sampler:
+    """Batched on-device sampler: one jitted call per engine tick.
+
+    Per-row knobs are traced (not static), so every mix of greedy and
+    sampled rows shares one compilation per batch size. Ticks where every
+    row is greedy with no penalty (the common serving steady state, and
+    the equivalence-test path) skip the filter machinery entirely — a
+    plain argmax, bit-identical to the pre-SamplingParams engines."""
+
+    def __init__(self):
+        self._fn = jax.jit(_sample_batch)
+        self._greedy = jax.jit(_greedy_batch)
+
+    def __call__(self, logits, presence, temp, top_k, top_p, rep, keys
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        if not np.any(np.asarray(temp) > 0) \
+                and np.all(np.asarray(rep) == 1.0):
+            tok, lp = self._greedy(logits)
+            return np.asarray(tok), np.asarray(lp)
+        tok, lp = self._fn(logits, jnp.asarray(presence),
+                           jnp.asarray(temp, jnp.float32),
+                           jnp.asarray(top_k, jnp.int32),
+                           jnp.asarray(top_p, jnp.float32),
+                           jnp.asarray(rep, jnp.float32),
+                           jnp.asarray(keys, jnp.uint32))
+        return np.asarray(tok), np.asarray(lp)
+
+
+# ---------------------------------------------------------------------------
+# numpy mirrors (legacy slot engine prefill; spec acceptance primitives)
+
+
+def softmax(logits: np.ndarray, temperature: float = 1.0) -> np.ndarray:
+    """Temperature softmax in f64 — the acceptance-rule primitive
+    (repro.spec.accept builds rejection sampling on this)."""
+    z = np.asarray(logits, np.float64) / max(temperature, 1e-6)
+    z = z - z.max(axis=-1, keepdims=True)
+    e = np.exp(z)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def categorical_np(rng: np.random.Generator, p: np.ndarray) -> int:
+    """One draw from a normalized distribution (shared by rejection
+    sampling and the host sampling mirror)."""
+    return int(rng.choice(len(p), p=p))
+
+
+def _penalize_np(logits: np.ndarray, sp: SamplingParams,
+                 seen: Sequence[int]) -> np.ndarray:
+    z = np.asarray(logits, np.float64).copy()
+    if sp.repetition_penalty != 1.0 and len(seen):
+        ids = np.asarray(sorted(set(int(t) for t in seen)), np.int64)
+        pos = z[ids] > 0
+        z[ids[pos]] /= sp.repetition_penalty
+        z[ids[~pos]] *= sp.repetition_penalty
+    return z
+
+
+def filter_logits_np(logits: np.ndarray, sp: SamplingParams,
+                     seen: Sequence[int] = ()) -> np.ndarray:
+    """Apply one request's filters to one position's logits — the host
+    mirror of the device sampler's law, shared by the legacy engine and
+    the speculative acceptance rules (spec.accept.filtered_accept):
+    repetition penalty over ``seen`` token ids, then top-k and top-p
+    masks at the request temperature. Returns f64 logits with filtered
+    entries at -inf: argmax is the filtered greedy token,
+    softmax(., temperature) the filtered sampling distribution."""
+    z = _penalize_np(logits, sp, seen)
+    t = sp.temperature or 0.0
+    if t <= 0 or (sp.top_k <= 0 and sp.top_p >= 1.0):
+        return z
+    scaled = z / max(t, 1e-6)
+    keep = np.ones(z.shape, bool)
+    if sp.top_k > 0:
+        kth = np.sort(scaled)[::-1][min(sp.top_k, len(scaled)) - 1]
+        keep &= scaled >= kth
+    if sp.top_p < 1.0:
+        p = softmax(np.where(keep, scaled, -np.inf), 1.0)
+        order = np.argsort(p)[::-1]
+        csum = np.cumsum(p[order])
+        kp = (csum - p[order]) < sp.top_p
+        keep &= p >= p[order][kp].min()
+    return np.where(keep, z, -np.inf)
+
+
+def sample_np(logits: np.ndarray, sp: SamplingParams,
+              rng: np.random.Generator,
+              seen: Sequence[int] = ()) -> Tuple[int, float]:
+    """Host mirror of the batched device sampler for one row (the legacy
+    slot engine's batch-1 prefill uses this). Greedy is a plain argmax —
+    identical to the device path."""
+    pen = _penalize_np(logits, sp, seen)
+    lp_full = np.log(softmax(pen, 1.0))
+    if sp.is_greedy:
+        tok = int(np.argmax(pen))
+        return tok, float(lp_full[tok])
+    masked = filter_logits_np(logits, sp, seen)
+    tok = categorical_np(rng, softmax(masked, sp.temperature))
+    return tok, float(lp_full[tok])
+
+
+def effective_params(sp: SamplingParams,
+                     fallback_temperature: float = 0.0) -> SamplingParams:
+    """Resolve a request's params to a concrete temperature: unset
+    (None) inherits the engine default (SpecConfig.temperature keeps its
+    old meaning); an explicit value — including explicit 0.0 = greedy —
+    always wins."""
+    t = sp.temperature
+    if t is None:
+        t = fallback_temperature if fallback_temperature > 0 else 0.0
+    return dataclasses.replace(sp, temperature=float(t))
+
+
+__all__ = ["GREEDY", "Sampler", "SamplingParams", "categorical_np",
+           "effective_params", "filter_logits_np", "request_key",
+           "sample_np", "softmax", "stop_holdback", "stop_truncate"]

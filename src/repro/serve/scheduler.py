@@ -21,24 +21,35 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.configs.base import ServeConfig
 from repro.serve.kv_cache import SlotAllocator
 from repro.serve.paged_kv import PagedKVCache
+from repro.serve.sampling import SamplingParams
 
 
 @dataclasses.dataclass
 class Request:
-    """One generation request (moved from engine; engine re-exports)."""
+    """One generation request (moved from engine; engine re-exports).
+
+    ``sampling`` carries the per-request decoding contract (temperature,
+    top-k/top-p, repetition penalty, stop sequences, max_tokens,
+    logprobs) end-to-end: api.submit -> scheduler -> engine -> runner.
+    ``sampling.max_tokens`` tightens ``max_new`` at admission; when
+    ``sampling.logprobs`` is set, ``logprobs_out[i]`` is the chosen-token
+    log-probability of ``tokens_out[i]``."""
     rid: int
     prompt: np.ndarray          # i32[S] (or [S, nc])
     max_new: int = 16
     tokens_out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     priority: int = 0           # larger = more urgent (policy="priority")
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
+    logprobs_out: List[float] = dataclasses.field(default_factory=list)
 
 
 class State(enum.Enum):
@@ -135,15 +146,11 @@ class Scheduler:
         return admitted
 
     # --- per-tick picks ---------------------------------------------------
-    def next_prefill(self) -> Optional[Tuple[SchedEntry, int, int]]:
-        """(entry, pos, valid_len) of the next prefill chunk, or None."""
-        cands = [e for e in self.active.values() if e.state == State.PREFILL]
-        if not cands:
-            return None
-        e = min(cands, key=self._key)
-        total = len(e.prefill_tokens())
-        valid = min(self.scfg.prefill_chunk, total - e.pos)
-        return e, e.pos, valid
+    def prefill_entries(self) -> List[SchedEntry]:
+        """Active mid-prefill entries in policy order — the engine gives
+        each one a PREFILL row of the unified step this tick."""
+        return sorted((e for e in self.active.values()
+                       if e.state == State.PREFILL), key=self._key)
 
     def decode_entries(self) -> List[SchedEntry]:
         return sorted((e for e in self.active.values()

@@ -25,14 +25,15 @@ pin/unpin around the in-flight verify.
 """
 
 from repro.configs.base import ModelConfig, ServeConfig, SpecConfig
-from repro.spec.accept import greedy_accept, rejection_accept
+from repro.spec.accept import (filtered_accept, greedy_accept,
+                               rejection_accept)
 from repro.spec.controller import AdaptiveK
 from repro.spec.drafter import Drafter, ModelDrafter, NGramDrafter
 from repro.spec.selfspec import SelfSpecDrafter
 
 __all__ = ["AdaptiveK", "Drafter", "ModelDrafter", "NGramDrafter",
-           "SelfSpecDrafter", "SpecConfig", "greedy_accept", "make_drafter",
-           "rejection_accept"]
+           "SelfSpecDrafter", "SpecConfig", "filtered_accept",
+           "greedy_accept", "make_drafter", "rejection_accept"]
 
 
 def make_drafter(spec: SpecConfig, cfg: ModelConfig, params,
@@ -48,7 +49,8 @@ def make_drafter(spec: SpecConfig, cfg: ModelConfig, params,
         return SelfSpecDrafter(cfg, params, scfg.max_seq,
                                frac=spec.draft_frac,
                                rank=spec.predictor_rank,
-                               temperature=spec.temperature, seed=spec.seed)
+                               temperature=spec.temperature, seed=spec.seed,
+                               max_batch=scfg.max_batch)
     if spec.drafter == "model":
         if draft_params is None:
             raise ValueError(
@@ -62,6 +64,7 @@ def make_drafter(spec: SpecConfig, cfg: ModelConfig, params,
                 f"vocab {cfg.vocab}; drafter and target must share a "
                 f"tokenizer")
         return ModelDrafter(dcfg, draft_params, scfg.max_seq,
-                            temperature=spec.temperature, seed=spec.seed)
+                            temperature=spec.temperature, seed=spec.seed,
+                            max_batch=scfg.max_batch)
     raise ValueError(f"unknown drafter {spec.drafter!r} "
                      f"(ngram | model | selfspec)")

@@ -16,12 +16,9 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-
-def softmax(logits: np.ndarray, temperature: float = 1.0) -> np.ndarray:
-    z = logits.astype(np.float64) / max(temperature, 1e-6)
-    z = z - z.max(axis=-1, keepdims=True)
-    e = np.exp(z)
-    return e / e.sum(axis=-1, keepdims=True)
+# the acceptance rules are built from the SAME primitives as plain
+# per-request sampling (serve.sampling): one softmax, one categorical
+from repro.serve.sampling import categorical_np, softmax  # noqa: F401
 
 
 def greedy_accept(draft: np.ndarray,
@@ -82,8 +79,71 @@ def rejection_accept(rng: np.random.Generator, draft: np.ndarray,
         total = resid.sum()
         if total <= 0:                      # q == p exactly: resample p
             resid, total = p, p.sum()
-        emitted.append(int(rng.choice(len(resid), p=resid / total)))
+        emitted.append(categorical_np(rng, resid / total))
         return emitted, j
     p = softmax(logits[m], temperature)
-    emitted.append(int(rng.choice(len(p), p=p)))
+    emitted.append(categorical_np(rng, p))
+    return emitted, m
+
+
+def filtered_accept(rng: np.random.Generator, draft: np.ndarray,
+                    qdists: Optional[np.ndarray], logits: np.ndarray,
+                    sp, seen) -> Tuple[List[int], int]:
+    """Acceptance under a request's FULL SamplingParams: the target law
+    at every position is the filtered distribution (repetition penalty /
+    top-k / top-p at the request temperature, serve.sampling
+    .filter_logits_np) — the same law the non-speculative sampler draws
+    from, so speculative and plain decoding agree in distribution (and,
+    for greedy-with-penalty, token-for-token). The penalty's seen-set
+    advances with each accepted/emitted token, exactly as sequential
+    decoding would advance it.
+
+    ``sp`` must carry a RESOLVED temperature (the engine passes
+    effective params); ``seen`` is the committed stream (prompt +
+    generated). A draft token the filters exclude has p(x) = 0 and is
+    rejected with probability 1 — the filters can only tighten
+    acceptance, never leak excluded tokens.
+    """
+    from repro.serve.sampling import filter_logits_np
+
+    seen = set(int(t) for t in seen)
+    greedy = (sp.temperature or 0.0) <= 0
+    m = len(draft)
+    emitted: List[int] = []
+
+    def target(j):
+        z = filter_logits_np(logits[j], sp, seen)
+        if greedy:
+            return int(np.argmax(z)), None
+        return None, softmax(z, sp.temperature)
+
+    for j in range(m):
+        d = int(draft[j])
+        tgt, p = target(j)
+        if greedy:
+            if d != tgt:
+                emitted.append(tgt)         # correction at divergence
+                return emitted, j
+            emitted.append(d)
+            seen.add(d)
+            continue
+        if qdists is None:
+            q_d = 1.0
+            resid = p.copy()
+            resid[d] = 0.0
+        else:
+            q = qdists[j].astype(np.float64)
+            q_d = q[d]
+            resid = np.maximum(p - q, 0.0)
+        if rng.random() < min(1.0, p[d] / max(q_d, 1e-12)):
+            emitted.append(d)
+            seen.add(d)
+            continue
+        total = resid.sum()
+        if total <= 0:                      # q == p exactly: resample p
+            resid, total = p, p.sum()
+        emitted.append(categorical_np(rng, resid / total))
+        return emitted, j
+    tgt, p = target(m)                      # all accepted: bonus token
+    emitted.append(tgt if greedy else categorical_np(rng, p))
     return emitted, m

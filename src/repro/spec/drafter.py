@@ -40,6 +40,11 @@ class Drafter(Protocol):
         counters so drafter-vs-drafter byte comparisons stay honest."""
         ...
 
+    # Optional: ``propose_batch(items)`` with items = [(rid, ctx, k)]
+    # returning one (tokens, qdists) per item. Drafters that run a model
+    # implement it to draft every slot per device step (ModelDrafter
+    # below); the engine falls back to per-row propose() otherwise.
+
 
 # ---------------------------------------------------------------------------
 # Prompt-lookup / n-gram drafter (model-free)
@@ -93,90 +98,245 @@ class NGramDrafter:
 class ModelDrafter:
     """Draft with a small autoregressive model sharing the target's vocab.
 
-    Keeps one batch-1 contiguous KV cache per in-flight request; the
-    *fork/rollback* story is trivial here because rolling a contiguous
-    cache back is just rewinding ``lens`` — stale KV past the frontier is
-    masked by attention and overwritten by the next write. On every
-    propose() the drafter re-syncs to the committed stream via longest
-    common prefix, so accepted drafts cost nothing to replay and target
-    corrections cost one decode step each.
+    The draft model decodes ALL in-flight requests per device step: one
+    shared [max_batch, max_seq] contiguous cache, one slot per request,
+    per-row ``lens`` as the rollback cursor — rewinding a row is just
+    rewinding lens (stale KV past the frontier is masked by attention and
+    overwritten by the next write). Rows not being fed this step are
+    parked at lens = max_seq: their scatter drops out of bounds and their
+    logits are ignored, so mixed catch-up depths batch cleanly. On every
+    propose the drafter re-syncs each row to its committed stream via
+    longest common prefix, so accepted drafts cost nothing to replay.
+
+    ``steps`` counts BATCHED decode steps — the draft weight stream is
+    read once per step however many rows ride it, which is exactly the
+    amortization the engine's Table-II accounting charges for.
     """
 
     def __init__(self, cfg: ModelConfig, params, max_seq: int,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 max_batch: int = 8):
+        # batched (parked-row) drafting needs attention-family blocks:
+        # parking relies on the OOB-dropped KV scatter, and recurrent
+        # state would advance for idle rows. Recurrent draft models fall
+        # back to the per-request sequential path below.
+        self._batched = all(b in ("attn", "shared_attn", "moe")
+                            for b in cfg.pattern_unit())
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
+        self.max_batch = max_batch
         self.temperature = temperature
+        self.seed = seed
         self.model = Model(cfg)
         self._decode = None          # jit'd lazily (subclasses override)
-        self._caches: Dict[int, dict] = {}
+        self._cache = None           # shared [max_batch, max_seq] cache
+        self._caches: Dict[int, int] = {}   # rid -> slot
+        self._free: List[int] = list(range(max_batch))
         self._fed: Dict[int, List[int]] = {}
-        self._rng = np.random.default_rng(seed)
-        self.steps = 0               # decode steps spent drafting
+        self._rngs: Dict[int, np.random.Generator] = {}
+        self._seq_caches: Dict[int, dict] = {}  # sequential fallback
+        self.steps = 0               # BATCHED decode steps spent drafting
 
     # -- one drafter decode step: feed token, return next-token logits --
     def _make_decode(self):
         import jax
         return jax.jit(self.model.decode_step)
 
-    def _feed(self, rid: int, tok: int) -> np.ndarray:
+    def _slot(self, rid: int, protect=()) -> int:
+        """Slot for ``rid``, evicting the least-recently-proposed OTHER
+        request if full — never one in ``protect`` (the rids of the
+        propose_batch in flight: evicting a live row would drop its fed
+        state mid-call). Evictees re-sync from their token stream on
+        their next propose (cheap replay)."""
+        slot = self._caches.get(rid)
+        if slot is not None:
+            self._caches[rid] = self._caches.pop(rid)   # refresh recency
+            return slot
+        if not self._free:
+            victim = next((r for r in self._caches if r not in protect),
+                          None)
+            if victim is None:
+                raise RuntimeError(
+                    f"draft cache: {len(protect)} live rows exceed "
+                    f"max_batch={self.max_batch}")
+            self.forget(victim)
+        slot = self._free.pop(0)
+        self._caches[rid] = slot
+        self._fed[rid] = []
+        return slot
+
+    def _step(self, tok: np.ndarray, lens: np.ndarray) -> np.ndarray:
+        """One BATCHED draft decode step. Rows with lens == max_seq are
+        parked: the KV scatter drops (out of bounds, mode='drop') and the
+        returned logits row is garbage the caller ignores."""
         if self._decode is None:
             self._decode = self._make_decode()
-        logits, self._caches[rid] = self._decode(
-            self.params, jnp.asarray([[tok]], jnp.int32), self._caches[rid])
+        if self._cache is None:
+            self._cache = self.model.init_cache(self.max_batch,
+                                                self.max_seq, jnp.float32)
+        self._cache["lens"] = jnp.asarray(lens, jnp.int32)
+        logits, self._cache = self._decode(self.params, jnp.asarray(tok),
+                                           self._cache)
         self.steps += 1
-        return np.asarray(logits)[0, 0]
+        return np.asarray(logits)[:, 0]
+
+    def _rng_for(self, rid: int) -> np.random.Generator:
+        """Per-request RNG so a row's sample stream is independent of
+        batch composition (mirrors SamplingParams.seed semantics)."""
+        rng = self._rngs.get(rid)
+        if rng is None:
+            rng = self._rngs[rid] = np.random.default_rng(
+                np.random.SeedSequence(entropy=self.seed,
+                                       spawn_key=(rid,)))
+        return rng
 
     def propose(self, rid: int, ctx: np.ndarray, k: int
                 ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
-        ctx_l = [int(t) for t in np.asarray(ctx).tolist()]
-        empty = np.zeros((0,), np.int32)
-        if k <= 0 or len(ctx_l) + 1 >= self.max_seq:
-            return empty, None
-        if rid not in self._caches:
-            self._caches[rid] = self.model.init_cache(1, self.max_seq,
-                                                      jnp.float32)
-            self._fed[rid] = []
-        fed = self._fed[rid]
+        return self.propose_batch([(rid, ctx, k)])[0]
+
+    def _sample_draft(self, rid: int, logits: np.ndarray, qdists: list
+                      ) -> int:
+        """One draft token from next-token logits (greedy or the
+        drafter's temperature; records the proposal distribution for
+        rejection sampling)."""
+        if self.temperature <= 0:
+            return int(np.argmax(logits))
+        from repro.serve.sampling import categorical_np, softmax
+        q = softmax(logits, self.temperature)
+        qdists.append(q.astype(np.float32))
+        return categorical_np(self._rng_for(rid), q)
+
+    def _propose_seq(self, rid: int, ctx_l: List[int], k: int):
+        """Per-request sequential fallback for recurrent draft models:
+        batch-1 cache, one decode step per token. Recurrent state cannot
+        rewind via lens, so any divergence from the fed stream re-feeds
+        the whole context through a fresh cache."""
+        fed = self._fed.setdefault(rid, [])
         cp = 0
         for a, b in zip(fed, ctx_l):
             if a != b:
                 break
             cp += 1
-        cp = min(cp, len(ctx_l) - 1)  # always feed >= 1 token for logits
-        del fed[cp:]
-        self._caches[rid]["lens"] = jnp.full_like(
-            self._caches[rid]["lens"], cp)
+        cp = min(cp, len(ctx_l) - 1)  # always feed >= 1 for logits
+        if rid not in self._seq_caches or cp < len(fed):
+            self._seq_caches[rid] = self.model.init_cache(
+                1, self.max_seq, jnp.float32)
+            fed.clear()
+            cp = 0
+
+        def feed(tok):
+            if self._decode is None:
+                self._decode = self._make_decode()
+            logits, self._seq_caches[rid] = self._decode(
+                self.params, jnp.asarray([[tok]], jnp.int32),
+                self._seq_caches[rid])
+            self.steps += 1
+            return np.asarray(logits)[0, 0]
+
         logits = None
         for t in ctx_l[cp:]:
-            logits = self._feed(rid, t)
+            logits = feed(t)
             fed.append(t)
         toks: List[int] = []
         qdists: List[np.ndarray] = []
         for j in range(k):
-            if self.temperature <= 0:
-                d = int(np.argmax(logits))
-            else:
-                from repro.spec.accept import softmax
-                q = softmax(logits, self.temperature)
-                qdists.append(q.astype(np.float32))
-                d = int(self._rng.choice(len(q), p=q))
+            d = self._sample_draft(rid, logits, qdists)
             toks.append(d)
             if j + 1 < k and len(fed) + 1 < self.max_seq:
-                logits = self._feed(rid, d)
+                logits = feed(d)
                 fed.append(d)
             elif j + 1 < k:
                 break                 # drafter cache full: stop early
-        qd = np.stack(qdists) if qdists else None   # len(qdists)==len(toks)
+        qd = np.stack(qdists) if qdists else None
         return np.asarray(toks, np.int32), qd
 
+    def propose_batch(self, items):
+        """Draft every requested row through shared batched decode steps:
+        catch-up (re-feed committed tokens after rollback) and the K
+        draft-token steps each run ONE device call for all rows — the
+        engine's spec tick costs O(catch-up + K) draft-model weight
+        streams total, not per row."""
+        empty = np.zeros((0,), np.int32)
+        results = [(empty, None)] * len(items)
+        protect = {rid for rid, _, _ in items}
+        live = []
+        for i, (rid, ctx, k) in enumerate(items):
+            ctx_l = [int(t) for t in np.asarray(ctx).tolist()]
+            if k <= 0 or len(ctx_l) + 1 >= self.max_seq:
+                continue
+            if not self._batched:
+                results[i] = self._propose_seq(rid, ctx_l, k)
+                continue
+            slot = self._slot(rid, protect)
+            fed = self._fed[rid]
+            cp = 0
+            for a, b in zip(fed, ctx_l):
+                if a != b:
+                    break
+                cp += 1
+            cp = min(cp, len(ctx_l) - 1)  # always feed >= 1 for logits
+            del fed[cp:]
+            live.append({"i": i, "rid": rid, "slot": slot, "k": k,
+                         "pending": ctx_l[cp:], "toks": [], "qd": [],
+                         "logits": None, "done": False})
+        if not live:
+            return results
+
+        B = self.max_batch
+
+        def batched_feed(rows):
+            """Feed each row's queued token in one device step."""
+            tok = np.zeros((B, 1), np.int32)
+            lens = np.full((B,), self.max_seq, np.int32)   # park the rest
+            for r, t in rows:
+                tok[r["slot"], 0] = t
+                lens[r["slot"]] = len(self._fed[r["rid"]])
+            logits = self._step(tok, lens)
+            for r, t in rows:
+                self._fed[r["rid"]].append(t)
+                r["logits"] = logits[r["slot"]]
+
+        # catch-up: rows at different depths re-sync together, one token
+        # per row per step, until every row has next-token logits
+        while any(r["pending"] for r in live):
+            batched_feed([(r, r["pending"].pop(0))
+                          for r in live if r["pending"]])
+
+        # draft loop: sample one token per row, feed them all in one step
+        for j in range(max(r["k"] for r in live)):
+            feeds = []
+            for r in live:
+                if r["done"] or j >= r["k"]:
+                    continue
+                d = self._sample_draft(r["rid"], r["logits"], r["qd"])
+                r["toks"].append(d)
+                if j + 1 >= r["k"]:
+                    r["done"] = True
+                elif len(self._fed[r["rid"]]) + 1 < self.max_seq:
+                    feeds.append((r, d))
+                else:
+                    r["done"] = True    # drafter cache full: stop early
+            if not feeds:
+                break
+            batched_feed(feeds)
+
+        for r in live:
+            qd = np.stack(r["qd"]) if r["qd"] else None
+            results[r["i"]] = (np.asarray(r["toks"], np.int32), qd)
+        return results
+
     def weight_bytes_per_step(self, scfg) -> float:
-        """One draft decode step streams the full draft-model weight set
-        (the draft model is small — that IS the bet)."""
+        """One BATCHED draft decode step streams the full draft-model
+        weight set once, however many rows share it (the draft model is
+        small and the batch amortizes it — that IS the bet)."""
         from repro.serve.metrics import weight_traffic  # lazy: no cycle
         return weight_traffic(self.cfg, scfg)[0]
 
     def forget(self, rid: int) -> None:
-        self._caches.pop(rid, None)
+        slot = self._caches.pop(rid, None)
+        if slot is not None:
+            self._free.append(slot)
+        self._seq_caches.pop(rid, None)
         self._fed.pop(rid, None)
+        self._rngs.pop(rid, None)

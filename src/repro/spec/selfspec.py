@@ -119,13 +119,13 @@ class SelfSpecDrafter(ModelDrafter):
     def __init__(self, cfg: ModelConfig, params, max_seq: int, *,
                  frac: float = 0.0625, rank: int = 16,
                  temperature: float = 0.0, seed: int = 0,
-                 calibration_steps: int = 120):
+                 calibration_steps: int = 120, max_batch: int = 8):
         if cfg.pattern_unit() != ("attn",):
             raise ValueError(
                 f"{cfg.name}: self-speculation supports plain attention "
                 f"stacks only (pattern {cfg.pattern_unit()})")
         super().__init__(cfg, params, max_seq, temperature=temperature,
-                         seed=seed)
+                         seed=seed, max_batch=max_batch)
         self.k_active = sparsity.active_fraction_to_k(cfg.d_ff, frac,
                                                       multiple=16)
         self.preds = calibrate_predictors(cfg, params, rank, seed=seed,

@@ -59,8 +59,9 @@ def test_paged_decode_token_identical_to_contiguous(nectar):
 
 
 def test_chunked_prefill_matches_whole_prompt_logits(nectar):
-    """Prefill split into fixed chunks produces the same last-position
-    logits as one whole-prompt forward."""
+    """Prefill split into fixed chunks (PREFILL rows of the unified
+    forward_step) produces the same last-position logits as one
+    whole-prompt forward."""
     cfg, model, params = nectar
     prompt = _prompts(cfg, [29])[0]
 
@@ -78,13 +79,15 @@ def test_chunked_prefill_matches_whole_prompt_logits(nectar):
         valid = min(C, len(prompt) - pos)
         chunk = np.zeros((1, C), np.int32)
         chunk[0, :valid] = prompt[pos:pos + valid]
-        logits, pc = model.prefill_chunk(
-            params, jnp.asarray(chunk), pc, jnp.int32(0), jnp.int32(pos),
-            jnp.int32(valid), bs)
+        pc["lens"] = jnp.full((1,), pos, jnp.int32)
+        logits, pc = model.forward_step(
+            params, jnp.asarray(chunk), pc,
+            jnp.full((1,), valid, jnp.int32), jnp.ones((1,), bool), bs)
+        last = logits[:, valid - 1]
         pos += valid
-    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+    np.testing.assert_allclose(np.asarray(last), np.asarray(ref)[:, 0],
                                rtol=2e-4, atol=2e-4)
-    assert int(jnp.argmax(logits[0, 0])) == int(jnp.argmax(ref[0, 0]))
+    assert int(jnp.argmax(last[0])) == int(jnp.argmax(ref[0, 0]))
 
 
 def test_preemption_on_block_exhaustion_preserves_output(nectar):

@@ -101,33 +101,40 @@ def test_greedy_spec_selfspec_token_identical(nectar):
 
 
 def test_verify_step_matches_sequential_decode(nectar):
-    """Model-level acceptance: one K+1-position verify pass produces the
-    same logits chain as feeding the tokens one decode step at a time."""
+    """Model-level acceptance: one K+1-position VERIFY row of the unified
+    forward_step produces the same logits chain as feeding the tokens one
+    DECODE row at a time."""
     cfg, model, params = nectar
     bs, MB, nb = 8, 8, 16
     prompt = _prompts(cfg, [13], seed=4)[0]
     toks = _prompts(cfg, [4], seed=5)[0]         # pending + 3 "drafts"
+    P = len(prompt)
+    no_prefill = jnp.zeros((1,), bool)
 
     def fresh():
         c = model.init_paged_cache(1, nb, bs, MB, jnp.float32)
         tables = np.full((1, MB), nb, np.int32)
         tables[0] = np.arange(MB)
         c["block_tables"] = jnp.asarray(tables)
-        _, c = model.prefill_chunk(
-            params, jnp.asarray(np.pad(prompt, (0, 16 - len(prompt)))[None]),
-            c, jnp.int32(0), jnp.int32(0), jnp.int32(len(prompt)), bs)
+        c["lens"] = jnp.zeros((1,), jnp.int32)
+        _, c = model.forward_step(
+            params, jnp.asarray(np.pad(prompt, (0, 16 - P))[None]), c,
+            jnp.full((1,), P, jnp.int32), jnp.ones((1,), bool), bs)
         return c
 
     cache = fresh()
-    v_logits, _ = model.verify_step_paged(
+    cache["lens"] = jnp.full((1,), P, jnp.int32)
+    v_logits, _ = model.forward_step(
         params, jnp.asarray(toks[None]), cache,
-        jnp.ones((1,), jnp.int32), jnp.full((1,), len(toks), jnp.int32), bs)
+        jnp.full((1,), len(toks), jnp.int32), no_prefill, bs)
 
     cache = fresh()
     seq = []
-    for t in toks:
-        lg, cache = model.decode_step_paged(
-            params, jnp.asarray([[t]]), cache, jnp.ones((1,), jnp.int32), bs)
+    for i, t in enumerate(toks):
+        cache["lens"] = jnp.full((1,), P + i, jnp.int32)
+        lg, cache = model.forward_step(
+            params, jnp.asarray([[t]]), cache, jnp.ones((1,), jnp.int32),
+            no_prefill, bs)
         seq.append(np.asarray(lg)[0, 0])
     np.testing.assert_allclose(np.asarray(v_logits)[0], np.stack(seq),
                                rtol=2e-4, atol=2e-4)
@@ -343,11 +350,15 @@ def test_int8_kv_decode_equivalence_within_tolerance(nectar):
         tables = np.full((1, MB), nb, np.int32)
         tables[0] = np.arange(MB)
         c["block_tables"] = jnp.asarray(tables)
-        _, c = model.prefill_chunk(
-            params, jnp.asarray(np.pad(prompt, (0, 32 - len(prompt)))[None]),
-            c, jnp.int32(0), jnp.int32(0), jnp.int32(len(prompt)), bs)
-        lg, _ = model.decode_step_paged(
-            params, jnp.asarray([[5]]), c, jnp.ones((1,), jnp.int32), bs)
+        P = len(prompt)
+        c["lens"] = jnp.zeros((1,), jnp.int32)
+        _, c = model.forward_step(
+            params, jnp.asarray(np.pad(prompt, (0, 32 - P))[None]), c,
+            jnp.full((1,), P, jnp.int32), jnp.ones((1,), bool), bs)
+        c["lens"] = jnp.full((1,), P, jnp.int32)
+        lg, _ = model.forward_step(
+            params, jnp.asarray([[5]]), c, jnp.ones((1,), jnp.int32),
+            jnp.zeros((1,), bool), bs)
         return np.asarray(lg)[0, 0]
 
     fp = decode_logits(False)
@@ -446,7 +457,5 @@ def test_spec_requires_paged_engine(nectar):
 
 def test_spec_rejects_codebook_models():
     cfg = get_config("musicgen-smoke")
-    model = Model(cfg)
     with pytest.raises(ValueError, match="codebooks|token streams"):
-        model.verify_step_paged(None, jnp.zeros((1, 2), jnp.int32), None,
-                                None, None, 8)
+        Engine(cfg, None, ServeConfig(paged=True, spec=SpecConfig()))
