@@ -45,11 +45,22 @@ ARRIVAL_RATE = 6.0          # requests/s (Poisson)
 LONG_FRAC = 0.3
 
 
-def make_trace(cfg, seed=0, n_requests=N_REQUESTS, max_new=MAX_NEW):
+SYS_PROMPT_LEN = 32         # --shared-prefix-frac system-prompt tokens
+
+
+def make_trace(cfg, seed=0, n_requests=N_REQUESTS, max_new=MAX_NEW,
+               shared_prefix_frac=0.0):
     """(arrival_s, Request) pairs: 70% short prompts (4-12 tokens), 30%
     long (48-64) — every long prompt also gets a unique length, which is
-    exactly the shape of traffic that re-jits the seed prefill."""
+    exactly the shape of traffic that re-jits the seed prefill.
+
+    ``shared_prefix_frac`` synthesizes system-prompt traffic: that
+    fraction of requests opens with one common SYS_PROMPT_LEN-token
+    prefix (plus its unique tail) — the trace shape prefix caching
+    (ServeConfig.prefix_cache, benchmarks.bench_prefix) feeds on."""
     rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab, size=SYS_PROMPT_LEN,
+                              dtype=np.int32)
     gaps = rng.exponential(1.0 / ARRIVAL_RATE, n_requests)
     arrivals = np.cumsum(gaps)
     trace = []
@@ -59,6 +70,8 @@ def make_trace(cfg, seed=0, n_requests=N_REQUESTS, max_new=MAX_NEW):
         else:
             n = int(rng.integers(4, 13))
         prompt = rng.integers(0, cfg.vocab, size=n, dtype=np.int32)
+        if rng.random() < shared_prefix_frac:
+            prompt = np.concatenate([sys_prompt, prompt])
         trace.append((float(arrivals[i]),
                       Request(rid=i, prompt=prompt, max_new=max_new)))
     return trace
@@ -90,18 +103,24 @@ def run_trace(eng: Engine, trace):
 
 
 def bench_engine(cfg, params, paged: bool, seed=0, n_requests=N_REQUESTS,
-                 max_new=MAX_NEW):
-    scfg = ServeConfig(max_batch=4, max_seq=96, paged=paged, block_size=8,
-                       prefill_chunk=16)
+                 max_new=MAX_NEW, shared_prefix_frac=0.0):
+    # shared-prefix traffic lengthens prompts (sys prompt + tail) and, on
+    # the paged engine, turns the radix prefix cache on — the system
+    # prompt should cost its prefill once, not per request
+    scfg = ServeConfig(max_batch=4,
+                       max_seq=128 if shared_prefix_frac > 0 else 96,
+                       paged=paged, block_size=8, prefill_chunk=16,
+                       prefix_cache=paged and shared_prefix_frac > 0)
     eng = Engine(cfg, params, scfg)
     # warm the decode jit (both modes) so compile time isn't billed to the
     # trace; per-prompt-length prefill re-jits stay billed to the seed
     # engine because they are its steady-state behavior, not warmup.
     warm = Request(rid=-1, prompt=np.arange(4, dtype=np.int32), max_new=2)
     eng.run([warm], max_steps=50)
-    eng.metrics = type(eng.metrics)(cfg, scfg)
+    eng.reset_metrics()
     return run_trace(eng, make_trace(cfg, seed, n_requests=n_requests,
-                                     max_new=max_new))
+                                     max_new=max_new,
+                                     shared_prefix_frac=shared_prefix_frac))
 
 
 SWEEP_BATCHES = (2, 4, 8)
@@ -126,7 +145,7 @@ def run_sweep(quick: bool = False):
             warm = Request(rid=-1, prompt=np.arange(4, dtype=np.int32),
                            max_new=2)
             eng.run([warm], max_steps=50)
-            eng.metrics = type(eng.metrics)(cfg, scfg)
+            eng.reset_metrics()
             s = run_trace(eng, make_trace(cfg, n_requests=n_requests,
                                           max_new=max_new))
             cell = {"max_batch": mb, "block_size": bs,
@@ -156,7 +175,7 @@ def run_sweep(quick: bool = False):
     return rows
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, shared_prefix_frac: float = 0.0):
     n_requests = 6 if quick else N_REQUESTS
     max_new = 8 if quick else MAX_NEW
     cfg = get_config("nectar-relu-llama-1.7m")
@@ -164,15 +183,19 @@ def run(quick: bool = False):
     params = model.init(jax.random.PRNGKey(0))
 
     seed_s = bench_engine(cfg, params, paged=False, n_requests=n_requests,
-                          max_new=max_new)
+                          max_new=max_new,
+                          shared_prefix_frac=shared_prefix_frac)
     paged_s = bench_engine(cfg, params, paged=True, n_requests=n_requests,
-                           max_new=max_new)
+                           max_new=max_new,
+                           shared_prefix_frac=shared_prefix_frac)
     speedup = paged_s["tokens_per_s"] / max(seed_s["tokens_per_s"], 1e-9)
 
     report = {
         "trace": {"n_requests": n_requests, "max_new": max_new,
                   "arrival_rate_per_s": ARRIVAL_RATE,
-                  "long_prompt_frac": LONG_FRAC, "quick": quick},
+                  "long_prompt_frac": LONG_FRAC,
+                  "shared_prefix_frac": shared_prefix_frac,
+                  "quick": quick},
         "seed_engine": seed_s,
         "paged_engine": paged_s,
         "tokens_per_s_speedup": speedup,
@@ -201,9 +224,15 @@ def main():
                     help="batch-size x block-size grid -> BENCH_sweep.json")
     ap.add_argument("--quick", action="store_true",
                     help="tiny trace (CI smoke)")
+    ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
+                    help="fraction of requests opening with one common "
+                         "system prompt (synthesizes prefix-cache "
+                         "traffic; enables prefix_cache on the paged "
+                         "engine when > 0)")
     args = ap.parse_args()
     rows = run_sweep(quick=args.quick) if args.sweep \
-        else run(quick=args.quick)
+        else run(quick=args.quick,
+                 shared_prefix_frac=args.shared_prefix_frac)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     art = (ART_SWEEP_QUICK if args.quick else ART_SWEEP) if args.sweep \

@@ -64,7 +64,7 @@ def bench_engine(cfg, params, spec, reqs, scfg_kw, repeats: int = 1):
         warm = Request(rid=-1, prompt=np.arange(8, dtype=np.int32),
                        max_new=4)
         eng.run([warm], max_steps=100)           # compile outside the clock
-        eng.metrics = type(eng.metrics)(cfg, scfg)
+        eng.reset_metrics()
         run_reqs = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
                     for r in reqs]
         t0 = time.monotonic()

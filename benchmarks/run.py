@@ -21,8 +21,9 @@ import sys
 import traceback
 
 SUITES = ["bench_matmul", "bench_sparsity", "bench_prefetch", "bench_e2e",
-          "bench_serving", "bench_spec", "roofline_report"]
-QUICK_SUITES = ["bench_serving", "bench_spec"]   # accept a quick=... kwarg
+          "bench_serving", "bench_spec", "bench_prefix", "roofline_report"]
+# serving-path suites accepting a quick=... kwarg (the CI smoke subset)
+QUICK_SUITES = ["bench_serving", "bench_spec", "bench_prefix"]
 
 
 def main() -> None:

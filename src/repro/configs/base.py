@@ -202,6 +202,10 @@ class ServeConfig:
 
     # --- paged serving (serve.paged_kv + serve.scheduler) ---
     paged: bool = False             # block-table paged KV decode
+    # radix-tree prefix cache (serve.prefix_cache): requests sharing a
+    # prompt prefix share physical KV blocks (refcounted, copy-on-write);
+    # admission prefills only the uncached suffix. Paged mode only.
+    prefix_cache: bool = False
     block_size: int = 16            # tokens per KV block
     n_kv_blocks: int = 0            # KV pool size; 0 = max_batch*max_seq/bs
     prefill_chunk: int = 32         # chunked-prefill tokens per tick

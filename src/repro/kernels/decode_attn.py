@@ -72,17 +72,22 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
 
 
-def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, n_m: int, block_s: int):
-    """One (b, m) grid step of paged flash-decode: identical online-softmax
-    body to ``_decode_kernel``, but the KV block streamed at step m is the
-    one the BLOCK TABLE names — the index map gathers tbl_ref[b, m] out of
-    the shared pool, so the kernel reads paged storage directly with no
-    [B, MB*bs] host-path gather ever materializing.
+def _paged_attn_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, n_m: int, block_s: int):
+    """One (b, m) grid step of paged attention over S query rows: the same
+    online-softmax body as ``_decode_kernel``, but (a) the KV block
+    streamed at step m is the one the BLOCK TABLE names — the index map
+    gathers tbl_ref[b, m] out of the shared pool, so the kernel reads
+    paged storage directly with no [B, MB*bs] host-path gather ever
+    materializing — and (b) S queries share each streamed block with a
+    per-query causal limit: query j sits at absolute position
+    len_ref[b] + j and sees kv positions <= len_ref[b] + j (its own KV
+    was just scattered by the write path). S = 1 is classic flash-decode;
+    S = K+1 covers speculative verify rows; S = chunk covers prefill.
 
-    len_ref: i32[B] kv lengths; tbl_ref: i32[B, MB] block tables (sentinel
-    entries clamp to a real block in the index map — they only ever sit at
-    positions >= len_ref[b], which the mask below zeroes out anyway).
+    len_ref: i32[B] committed context lens; tbl_ref: i32[B, MB] block
+    tables (sentinel entries clamp to a real block in the index map —
+    they only ever sit past the causal limit, which the mask zeroes).
     """
     b = pl.program_id(0)
     m = pl.program_id(1)
@@ -93,16 +98,17 @@ def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)                     # [Kv, G, Dh]
+    q = q_ref[0].astype(jnp.float32)                     # [S, Kv, G, Dh]
     k = k_ref[0].astype(jnp.float32)                     # [bs, Kv, Dh]
     v = v_ref[0].astype(jnp.float32)
-    Dh = q.shape[-1]
-    scores = jnp.einsum("kgd,skd->kgs", q * Dh ** -0.5, k)
+    S, Dh = q.shape[0], q.shape[-1]
+    scores = jnp.einsum("skgd,tkd->skgt", q * Dh ** -0.5, k)
 
     kv_pos = m * block_s + jax.lax.broadcasted_iota(
-        jnp.int32, (1, 1, block_s), 2)
-    mask = kv_pos < len_ref[b]
-    scores = jnp.where(mask, scores, NEG_INF)
+        jnp.int32, (1, 1, 1, block_s), 3)
+    q_pos = len_ref[b] + jax.lax.broadcasted_iota(
+        jnp.int32, (S, 1, 1, 1), 0)
+    scores = jnp.where(kv_pos <= q_pos, scores, NEG_INF)
 
     m_old = m_ref[...]
     m_new = jnp.maximum(m_old, jnp.max(scores, axis=-1))
@@ -112,7 +118,7 @@ def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
     corr = jnp.where(alive, jnp.exp(m_old - m_new), 0.0)
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
     acc_ref[...] = acc_ref[...] * corr[..., None] + \
-        jnp.einsum("kgs,skd->kgd", p, v)
+        jnp.einsum("skgt,tkd->skgd", p, v)
     m_ref[...] = m_new
 
     @pl.when(m == n_m - 1)
@@ -121,59 +127,79 @@ def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
-def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
-                           v_pool: jax.Array, tables: jax.Array,
-                           kv_len: jax.Array, *, block_size: int,
-                           interpret: bool = True) -> jax.Array:
-    """Flash-decode THROUGH block tables: the serving engine's paged KV
-    pool and per-slot tables go straight to the kernel, whose BlockSpec
-    index map resolves ``tables[b, m]`` per grid step (scalar-prefetched)
-    — the DMA engine streams exactly the blocks the row owns, in table
-    order, with the same VMEM-resident (m, l, o) online softmax as the
-    contiguous kernel.
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    tables: jax.Array, lens: jax.Array, *,
+                    block_size: int, interpret: bool = True) -> jax.Array:
+    """Paged attention THROUGH block tables for S query rows per slot:
+    the serving engine's paged KV pool and per-slot tables go straight to
+    the kernel, whose BlockSpec index map resolves ``tables[b, m]`` per
+    grid step (scalar-prefetched) — the DMA engine streams exactly the
+    blocks the row owns, in table order, with the VMEM-resident
+    (m, l, o) online softmax shared across the S queries.
 
-    q: f[B, Hq, Dh]; k_pool/v_pool: f[n_blocks, bs, Kv, Dh] (the shared
-    pools from init_paged_kv_cache — fp pools only, int8 pools carry
-    scale leaves this kernel does not consume); tables: i32[B, MB] with
-    ``n_blocks`` as the sentinel; kv_len: i32[B]. Returns f32[B, Hq, Dh].
+    This is the one attention read path of the unified ModelRunner step:
+    S=1 decode rows, S=K+1 speculative verify rows, and S=chunk prefill
+    rows all resolve here with a per-query causal limit (query j attends
+    kv positions <= lens[b] + j; padding rows past n_valid produce
+    garbage the engine never reads, exactly like the naive path).
+
+    q: f[B, S, Hq, Dh]; k_pool/v_pool: f[n_blocks, bs, Kv, Dh] (the
+    shared pools from init_paged_kv_cache — fp pools only, int8 pools
+    carry scale leaves this kernel does not consume); tables: i32[B, MB]
+    with ``n_blocks`` as the sentinel; lens: i32[B] committed context
+    BEFORE this step. Returns f32[B, S, Hq, Dh].
     """
-    B, Hq, Dh = q.shape
+    B, S, Hq, Dh = q.shape
     n_blocks, bs, Kv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
     assert bs == block_size, (bs, block_size)
     MB = tables.shape[1]
     G = Hq // Kv
-    qg = q.reshape(B, Kv, G, Dh)
+    qg = q.reshape(B, S, Kv, G, Dh)
 
     def kv_index(b, m, len_ref, tbl_ref):
         # sentinel (== n_blocks) would be OOB: clamp to block 0 — every
-        # sentinel position is >= kv_len[b] and masked out in the kernel
+        # sentinel position is past the causal limit and masked anyway
         blk = tbl_ref[b, m]
         return (jnp.where(blk >= n_blocks, 0, blk), 0, 0, 0)
 
     out = pl.pallas_call(
-        functools.partial(_paged_decode_kernel, n_m=MB, block_s=bs),
+        functools.partial(_paged_attn_kernel, n_m=MB, block_s=bs),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=(B, MB),
             in_specs=[
-                pl.BlockSpec((1, Kv, G, Dh),
-                             lambda b, m, lr, tr: (b, 0, 0, 0)),
+                pl.BlockSpec((1, S, Kv, G, Dh),
+                             lambda b, m, lr, tr: (b, 0, 0, 0, 0)),
                 pl.BlockSpec((1, bs, Kv, Dh), kv_index),
                 pl.BlockSpec((1, bs, Kv, Dh), kv_index),
             ],
-            out_specs=pl.BlockSpec((1, Kv, G, Dh),
-                                   lambda b, m, lr, tr: (b, 0, 0, 0)),
-            scratch_shapes=[pltpu.VMEM((Kv, G), jnp.float32),
-                            pltpu.VMEM((Kv, G), jnp.float32),
-                            pltpu.VMEM((Kv, G, Dh), jnp.float32)],
+            out_specs=pl.BlockSpec((1, S, Kv, G, Dh),
+                                   lambda b, m, lr, tr: (b, 0, 0, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((S, Kv, G), jnp.float32),
+                            pltpu.VMEM((S, Kv, G), jnp.float32),
+                            pltpu.VMEM((S, Kv, G, Dh), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, Kv, G, Dh), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, S, Kv, G, Dh), jnp.float32),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(kv_len.astype(jnp.int32), tables.astype(jnp.int32), qg, k_pool,
+    )(lens.astype(jnp.int32), tables.astype(jnp.int32), qg, k_pool,
       v_pool)
-    return out.reshape(B, Hq, Dh)
+    return out.reshape(B, S, Hq, Dh)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, tables: jax.Array,
+                           kv_len: jax.Array, *, block_size: int,
+                           interpret: bool = True) -> jax.Array:
+    """Single-token flash-decode through block tables (the original
+    kernel entry, kept for callers that think in terms of a total
+    ``kv_len``): q f[B, Hq, Dh], kv_len i32[B] INCLUDING the in-flight
+    token. Thin wrapper over ``paged_attention`` with S = 1."""
+    out = paged_attention(q[:, None], k_pool, v_pool, tables,
+                          kv_len - 1, block_size=block_size,
+                          interpret=interpret)
+    return out[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))

@@ -205,13 +205,13 @@ def attn_step_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
       * prefill row  (n_valid = chunk valid length, lens[b] = chunk pos):
         chunked prefill attending to earlier chunks plus its own prefix.
 
-    ``backend`` picks the single-token read path: "naive" gathers each
-    row's blocks into a logical sequence on the host-visible path (the
-    reference, GSPMD-shardable); "flash" hands q + the block pools + the
-    tables straight to the Pallas flash-decode kernel, which DMAs KV
-    blocks via the table (kernels.decode_attn.paged_decode_attention) —
-    no [B, MB*bs] gather materializes. S > 1 always takes the full-score
-    path (S is small: a prefill chunk or k_max+1).
+    ``backend`` picks the read path for EVERY row width: "naive" gathers
+    each row's blocks into a logical sequence on the host-visible path
+    (the reference, GSPMD-shardable); "flash" hands q + the block pools +
+    the tables straight to the Pallas paged-attention kernel, which DMAs
+    KV blocks via the table (kernels.decode_attn.paged_attention) with a
+    per-query causal limit — no [B, MB*bs] gather materializes for
+    decode (S=1), verify (S=K+1), or prefill-chunk rows alike.
 
     x: [B, S, d]; lens/n_valid: i32[B]; tables: i32[B, MB] (inactive rows
     all-sentinel). Returns (out [B, S, d], new_cache).
@@ -232,12 +232,12 @@ def attn_step_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
     new_cache = {**_store_paged(cache, "k", blk, off, k),
                  **_store_paged(cache, "v", blk, off, v)}
     qg = q.reshape(B, S, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
-    if S == 1 and backend == "flash":
-        from repro.kernels.decode_attn import paged_decode_attention
-        o = paged_decode_attention(
-            q.reshape(B, cfg.n_heads, cfg.d_head), new_cache["k"],
-            new_cache["v"], tables, lens + 1, block_size=block_size)
-        o = o.reshape(B, 1, cfg.n_heads * cfg.d_head).astype(x.dtype)
+    if backend == "flash":
+        from repro.kernels.decode_attn import paged_attention
+        o = paged_attention(
+            q.reshape(B, S, cfg.n_heads, cfg.d_head), new_cache["k"],
+            new_cache["v"], tables, lens, block_size=block_size)
+        o = o.reshape(B, S, cfg.n_heads * cfg.d_head).astype(x.dtype)
         return o @ p["wo"], new_cache
     kg = _read_paged(new_cache, "k", tables, n_blocks)    # [B, MBbs, Kv, Dh]
     vg = _read_paged(new_cache, "v", tables, n_blocks)

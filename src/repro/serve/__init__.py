@@ -1,5 +1,7 @@
 from repro.serve import (api, engine, kv_cache, metrics,  # noqa: F401
-                         paged_kv, runner, sampling, scheduler)
+                         paged_kv, prefix_cache, runner, sampling,
+                         scheduler)
+from repro.serve.prefix_cache import RadixPrefixCache  # noqa: F401
 from repro.serve.runner import (ModelRunner, StepBatch,  # noqa: F401
                                 StepOutput)
 from repro.serve.sampling import SamplingParams  # noqa: F401

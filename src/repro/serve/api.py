@@ -33,8 +33,12 @@ class StreamingServer:
                sampling: Optional[SamplingParams] = None) -> int:
         """Queue a request; returns its rid immediately. ``sampling``
         carries the per-request decoding contract (temperature, top-k/p,
-        repetition penalty, stop sequences, max_tokens, logprobs) all the
-        way through scheduler -> engine -> runner; omitted means greedy.
+        repetition penalty, stop sequences, max_tokens, logprobs,
+        prompt_logprobs) all the way through scheduler -> engine ->
+        runner; omitted means greedy. On a prefix-cached engine
+        (ServeConfig.prefix_cache) a prompt sharing a cached prefix maps
+        those KV blocks at admission and prefills only the suffix — the
+        result is token-identical either way, only TTFT changes.
         Requests the engine's admission control rejects (queue full) wait
         in a local backlog and re-submit as capacity frees. rids come
         from the engine's counter so concurrent servers/streams never

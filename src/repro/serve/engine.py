@@ -67,6 +67,13 @@ class Engine:
             raise ValueError(
                 f"{cfg.name}: speculative decode supports plain token "
                 f"streams only (no codebooks / M-RoPE)")
+        if scfg.prefix_cache and not scfg.paged:
+            raise ValueError("prefix_cache requires the paged engine "
+                             "(paged=True)")
+        if scfg.prefix_cache and (cfg.n_codebooks or cfg.mrope):
+            raise ValueError(
+                f"{cfg.name}: prefix caching keys on plain token-id "
+                f"streams (no codebooks / M-RoPE)")
         if scfg.paged:
             self._init_paged(drafter, draft_params)
         else:
@@ -85,6 +92,22 @@ class Engine:
     @property
     def stats(self) -> List[StepStats]:
         return self.metrics.step_stats
+
+    def reset_metrics(self) -> None:
+        """Fresh MetricsCollector wired to the live pool/prefix gauges
+        (benchmarks call this after warmup so compile time isn't billed;
+        replacing ``engine.metrics`` by hand would silently lose the
+        gauges). The pool's and index's own event counters restart with
+        the collector so every rate in one summary() covers the same
+        measurement window — pool STATE (blocks, refcounts, the radix
+        tree itself) is untouched."""
+        self.metrics = metrics_mod.MetricsCollector(self.cfg, self.scfg)
+        if self.scfg.paged:
+            self.metrics.pool = self.pool
+            self.metrics.prefix = self.prefix
+            self.pool.reset_counters()
+            if self.prefix is not None:
+                self.prefix.reset_counters()
 
     # ------------------------------------------------------------------
     # shared driver
@@ -124,6 +147,12 @@ class Engine:
                 f"Engine.new_rid() to allocate ids")
         if not self.can_serve(req):
             return False
+        if req.sampling.prompt_logprobs and (not self.scfg.paged
+                                             or self.cfg.n_codebooks):
+            raise ValueError(
+                "prompt_logprobs needs the paged engine's all-position "
+                "prefill logits (ServeConfig(paged=True), plain token "
+                "streams)")
         if req.sampling.max_tokens is not None:
             req.max_new = min(req.max_new, req.sampling.max_tokens)
         if self.scfg.paged:
@@ -223,7 +252,13 @@ class Engine:
             max_batch=scfg.max_batch,
             max_blocks_per_seq=scfg.blocks_per_seq,
             int8_kv=scfg.kv_quant)
-        self.sched = Scheduler(scfg, self.pool)
+        self.prefix = None
+        if scfg.prefix_cache:
+            from repro.serve.prefix_cache import RadixPrefixCache
+            self.prefix = RadixPrefixCache(self.pool)  # sets pool.index
+        self.sched = Scheduler(scfg, self.pool, prefix=self.prefix)
+        self.metrics.pool = self.pool
+        self.metrics.prefix = self.prefix
         self.runner = ModelRunner(self.model, self.params, scfg,
                                   dtype=jnp.float32)
         self._kv_per_tok = paged_kv.kv_bytes_per_token(self.cfg,
@@ -321,6 +356,12 @@ class Engine:
         finished: List[int] = []
         for e in self.sched.admit():
             self._seed_presence(e.slot, e.req)
+            if self.prefix is not None \
+                    and not e.req.sampling.prompt_logprobs:
+                # prompt_logprobs requests never consult the index (the
+                # scheduler skips the match) — counting them as misses
+                # would diverge from the index's own hit-rate counters
+                self.metrics.on_prefix_lookup(e.req.rid, e.cached_len)
         spec = self.spec
         S_spec = spec.k_max + 1 if spec is not None else 0
         K = 0
@@ -407,6 +448,15 @@ class Engine:
             # pin across the step: a concurrent defrag must not move
             # blocks an in-flight device table has captured
             self.pool.pin(e.slot)
+        # copy-on-write BEFORE the tables snapshot: any row whose write
+        # span lands in a block referenced elsewhere (prefix-shared block,
+        # rollback into a shared partial tail) gets a private copy so
+        # sibling requests can never observe its writes
+        cow: List[Tuple[int, int]] = []
+        for slot, _, toks, start in rows:
+            cow.extend(self.pool.cow_for_write(slot, start, len(toks)))
+        if cow:
+            self.runner.copy_blocks(cow)
         batch = self.runner.new_batch(max(len(r[2]) for r in rows),
                                       self.pool.tables())
         for slot, phase, toks, start in rows:
@@ -431,12 +481,17 @@ class Engine:
         # prefill rows: advance the frontier; a completing row emits its
         # first token (sampled with ITS params — no more greedy-only)
         for e, pos, valid in prefill_plan:
+            self._record_prompt_logprobs(e, out, pos, valid)
             e.pos = pos + valid
             self.metrics.on_prefill_chunk(valid)
             if e.req.rid not in completing:
                 continue
             e.ctx_len = e.pos
             e.state = State.RUNNING
+            # prompt KV is final: publish the full blocks to the prefix
+            # index so concurrent same-prefix requests share them NOW
+            # (not only after this request completes)
+            self.sched.index_prefix(e, e.prefill_tokens(), e.pos)
             if e.replay:
                 e.replay = False               # next token already known
                 if e.resync_replay:
@@ -454,6 +509,46 @@ class Engine:
         else:
             self._commit_verify(run_rows, proposals, out, finished)
         return finished
+
+    def _record_prompt_logprobs(self, e: SchedEntry, out, pos: int,
+                                valid: int) -> None:
+        """Fill req.prompt_logprobs_out[pos:pos+valid] from this prefill
+        chunk's all-position logits: logits[j] predicts position pos+j+1,
+        so position pos's own logprob comes from the PREVIOUS chunk's
+        last row (stashed on the entry as ``plp_prev``); position 0 has
+        no prefix and records None. Replayed positions (already recorded)
+        are skipped by the exact-length guard."""
+        req = e.req
+        if not req.sampling.prompt_logprobs:
+            return
+        P = len(np.asarray(req.prompt).reshape(-1))
+        lps = req.prompt_logprobs_out
+        toks = np.asarray(e.prefill_tokens()).reshape(-1)
+        row = None
+        for j in range(valid):
+            p = pos + j
+            if p >= P:
+                break
+            if p == 0:
+                if not lps:
+                    lps.append(None)
+                continue
+            if len(lps) != p:
+                continue
+            if j == 0:
+                z = e.plp_prev
+            else:
+                if row is None:
+                    row = out.row_logits(e.slot)
+                z = row[j - 1]
+            if z is not None:
+                lps.append(sampling.token_logprob(z, int(toks[p])))
+        if pos + valid < P:
+            if row is None:
+                row = out.row_logits(e.slot)
+            e.plp_prev = np.array(row[valid - 1])
+        else:
+            e.plp_prev = None
 
     def _one_token(self, tok_np: np.ndarray, slot: int):
         if self.cfg.n_codebooks:

@@ -79,6 +79,7 @@ class RequestMetrics:
     finished_at: Optional[float] = None
     n_generated: int = 0
     preemptions: int = 0
+    cached_prompt_tokens: int = 0   # prefix-cache hit size at admission
 
     @property
     def ttft(self) -> Optional[float]:
@@ -119,6 +120,13 @@ class MetricsCollector:
         self.decode_steps = 0
         self.prefill_chunks = 0
         self.evictions = 0
+        # --- prefix cache (serve.prefix_cache) ---
+        self.prefix_lookups = 0      # admissions that consulted the index
+        self.prefix_hits = 0         # ... that matched >= 1 block
+        self.prefix_cached_tokens = 0  # prompt tokens served from cache
+        # live gauges (set by the paged engine; None on the legacy path)
+        self.pool = None             # PagedKVCache — block-pool pressure
+        self.prefix = None           # RadixPrefixCache — index counters
         # --- speculative decode (repro.spec) ---
         self.spec_steps = 0          # verify passes
         self.spec_drafted = 0        # draft tokens proposed
@@ -150,6 +158,18 @@ class MetricsCollector:
     def on_preemption(self, rid: int):
         self.requests[rid].preemptions += 1
         self.evictions += 1
+
+    def on_prefix_lookup(self, rid: int, cached_tokens: int):
+        """One admission-time radix lookup; ``cached_tokens`` is the
+        matched block-aligned prefix length (0 = miss)."""
+        self.prefix_lookups += 1
+        if cached_tokens > 0:
+            self.prefix_hits += 1
+            self.prefix_cached_tokens += cached_tokens
+        r = self.requests.get(rid)
+        if r is not None:
+            r.cached_prompt_tokens = max(r.cached_prompt_tokens,
+                                         cached_tokens)
 
     # --- step events ---
     def on_decode_step(self, n_tokens: int,
@@ -188,6 +208,12 @@ class MetricsCollector:
         n_tok = sum(r.n_generated for r in done)
         wall = (max(r.finished_at for r in done) - self._t0) \
             if done and self._t0 is not None else 0.0
+        # TTFT split by prefix-cache outcome: the headline win of prefix
+        # sharing is that hit requests skip cached-prefix prefill chunks
+        ttft_hit = [r.ttft for r in done
+                    if r.ttft is not None and r.cached_prompt_tokens > 0]
+        ttft_miss = [r.ttft for r in done
+                     if r.ttft is not None and r.cached_prompt_tokens == 0]
         return {
             "n_finished": len(done),
             "generated_tokens": n_tok,
@@ -209,4 +235,18 @@ class MetricsCollector:
             "kv_bytes": sum(s.kv_bytes for s in self.step_stats),
             "sparse_savings_bytes": sum(s.sparse_savings_bytes
                                         for s in self.step_stats),
+            # --- prefix cache ---
+            "prefix_lookups": self.prefix_lookups,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": (self.prefix_hits
+                                / max(self.prefix_lookups, 1)),
+            "prefix_cached_tokens": self.prefix_cached_tokens,
+            "ttft_hit_p50_ms": percentile(ttft_hit, 50) * 1e3,
+            "ttft_miss_p50_ms": percentile(ttft_miss, 50) * 1e3,
+            # --- block-pool pressure (observable BEFORE admission stalls:
+            # high_water_frac near 1 or rising fragmentation means the
+            # next long prompt defers or evicts) ---
+            "kv_pool": self.pool.stats() if self.pool is not None else {},
+            "prefix_index": (self.prefix.stats()
+                             if self.prefix is not None else {}),
         }

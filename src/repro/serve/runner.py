@@ -19,8 +19,10 @@ after speculative acceptance).
 
 The attention read path is pluggable (``ServeConfig.attn_backend``):
 "naive" gathers blocks into a logical sequence (reference, shardable);
-"flash" hands the block pools + tables to the Pallas flash-decode kernel
-(kernels.decode_attn.paged_decode_attention) for single-token steps.
+"flash" hands the block pools + tables to the Pallas paged-attention
+kernel (kernels.decode_attn.paged_attention), which covers every row
+width of the unified step — single-token decode, K+1 verify, and
+prefill chunks — with per-row causal masking resolved in-kernel.
 """
 
 from __future__ import annotations
@@ -175,13 +177,26 @@ class ModelRunner:
             jnp.asarray(batch.phase == PREFILL))
         return StepOutput(logits=logits, last_logits=last)
 
-    # --- defrag ------------------------------------------------------------
+    # --- block maintenance --------------------------------------------------
     def apply_perm(self, perm: np.ndarray) -> None:
         """Apply a pool defrag permutation to the device block pools
         (new storage row i = old row perm[i])."""
         p = jnp.asarray(perm)
         self.cache["units"] = jax.tree.map(
             lambda a: jnp.take(a, p, axis=1), self.cache["units"])
+
+    def copy_blocks(self, pairs) -> None:
+        """Copy-on-write: duplicate pool storage rows src -> dst across
+        every layer's block pools (all leaves, int8 scales included).
+        The host side (paged_kv.cow_for_write) already rewrote the block
+        table; this mirrors the bytes so the writer's private copy starts
+        bit-identical to the shared original."""
+        if not pairs:
+            return
+        src = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        dst = jnp.asarray([p[1] for p in pairs], jnp.int32)
+        self.cache["units"] = jax.tree.map(
+            lambda a: a.at[:, dst].set(a[:, src]), self.cache["units"])
 
 
 __all__ = ["BACKENDS", "DECODE", "IDLE", "ModelRunner", "PREFILL",

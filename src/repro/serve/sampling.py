@@ -46,6 +46,11 @@ class SamplingParams:
     (the stop sequence itself is not emitted). ``max_tokens`` caps the
     generated length (the engine takes min with the request's max_new).
     ``logprobs`` asks for the chosen token's log-probability per step.
+    ``prompt_logprobs`` additionally returns, for every prompt position
+    i >= 1, log p(prompt[i] | prompt[:i]) — the runner already emits
+    all-position logits, so this is pure bookkeeping over the prefill
+    chunks (paged engine only; it also opts the request out of prefix
+    caching, since cached positions never produce logits).
     ``seed`` makes the request's sample stream reproducible independently
     of batch composition.
     """
@@ -57,6 +62,7 @@ class SamplingParams:
     stop: Tuple[Tuple[int, ...], ...] = ()
     max_tokens: Optional[int] = None
     logprobs: bool = False
+    prompt_logprobs: bool = False
     seed: Optional[int] = None
 
     def __post_init__(self):
@@ -214,6 +220,15 @@ def softmax(logits: np.ndarray, temperature: float = 1.0) -> np.ndarray:
     return e / e.sum(axis=-1, keepdims=True)
 
 
+def token_logprob(logits: np.ndarray, token: int) -> float:
+    """log p(token) under softmax(logits) in f64 — the prompt-logprobs
+    primitive (raw model distribution: no temperature or filters, same
+    convention as the chosen-token ``logprobs`` stream)."""
+    z = np.asarray(logits, np.float64)
+    z = z - z.max()
+    return float(z[int(token)] - np.log(np.exp(z).sum()))
+
+
 def categorical_np(rng: np.random.Generator, p: np.ndarray) -> int:
     """One draw from a normalized distribution (shared by rejection
     sampling and the host sampling mirror)."""
@@ -288,4 +303,5 @@ def effective_params(sp: SamplingParams,
 
 __all__ = ["GREEDY", "Sampler", "SamplingParams", "categorical_np",
            "effective_params", "filter_logits_np", "request_key",
-           "sample_np", "softmax", "stop_holdback", "stop_truncate"]
+           "sample_np", "softmax", "stop_holdback", "stop_truncate",
+           "token_logprob"]

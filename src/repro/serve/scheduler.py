@@ -1,5 +1,5 @@
 """Request scheduler: admission control, chunked prefill interleaved with
-decode, FIFO/priority ordering, preemption-by-eviction.
+decode, FIFO/priority ordering, preemption-by-eviction, prefix reuse.
 
 Why chunked prefill: the seed engine ran a whole prompt's prefill inside
 ``add_request`` — one long prompt head-of-line-blocked every decoding
@@ -15,6 +15,13 @@ recompute: the victim's blocks are freed and its prompt *plus already
 generated tokens* replay through chunked prefill when capacity returns —
 decode state is fully reconstructible from tokens, so nothing is copied
 out.
+
+With ``ServeConfig.prefix_cache`` a radix index over token prefixes
+(serve.prefix_cache) rides along: admission matches the longest cached
+block-aligned prefix, maps those physical blocks into the new slot
+(refcount++), and chunked prefill covers only the uncached suffix —
+including on replay after eviction, where the victim's own prompt blocks
+are usually still indexed and re-prefill collapses to a table remap.
 """
 
 from __future__ import annotations
@@ -40,7 +47,9 @@ class Request:
     logprobs) end-to-end: api.submit -> scheduler -> engine -> runner.
     ``sampling.max_tokens`` tightens ``max_new`` at admission; when
     ``sampling.logprobs`` is set, ``logprobs_out[i]`` is the chosen-token
-    log-probability of ``tokens_out[i]``."""
+    log-probability of ``tokens_out[i]``; ``sampling.prompt_logprobs``
+    fills ``prompt_logprobs_out[i]`` with the log-probability of
+    ``prompt[i]`` given ``prompt[:i]`` (index 0 is None — no prefix)."""
     rid: int
     prompt: np.ndarray          # i32[S] (or [S, nc])
     max_new: int = 16
@@ -50,6 +59,8 @@ class Request:
     sampling: SamplingParams = dataclasses.field(
         default_factory=SamplingParams)
     logprobs_out: List[float] = dataclasses.field(default_factory=list)
+    prompt_logprobs_out: List[Optional[float]] = dataclasses.field(
+        default_factory=list)
 
 
 class State(enum.Enum):
@@ -71,6 +82,9 @@ class SchedEntry:
     resync_replay: bool = False  # spec mode: replay prompt only, then
     #                              re-feed generated KV via verify steps
     resync: List[int] = dataclasses.field(default_factory=list)
+    cached_len: int = 0         # prefix-cache hit: tokens mapped at admit
+    plp_prev: Optional[np.ndarray] = None  # prompt-logprobs chunk seam:
+    #                              last-position logits of the prior chunk
 
     def prefill_tokens(self) -> np.ndarray:
         """What chunked prefill must process: the prompt, plus — after an
@@ -96,11 +110,12 @@ class SchedEntry:
 class Scheduler:
     """Decides, per tick, which prefill chunk runs and which rows decode."""
 
-    def __init__(self, scfg: ServeConfig, pool: PagedKVCache):
+    def __init__(self, scfg: ServeConfig, pool: PagedKVCache, prefix=None):
         if scfg.policy not in ("fifo", "priority"):
             raise ValueError(f"unknown scheduling policy {scfg.policy!r}")
         self.scfg = scfg
         self.pool = pool
+        self.prefix = prefix        # RadixPrefixCache | None
         self.slots = SlotAllocator(scfg.max_batch)
         self.waiting: List[SchedEntry] = []
         self.active: Dict[int, SchedEntry] = {}     # rid -> PREFILL/RUNNING
@@ -128,22 +143,72 @@ class Scheduler:
         return True
 
     def admit(self) -> List[SchedEntry]:
-        """Move waiting requests into slots while a slot AND enough free
-        blocks for at least the first prefill chunk exist."""
+        """Move waiting requests into slots while a slot AND enough
+        allocatable blocks for at least the first prefill chunk exist.
+
+        With a prefix index, the longest cached block-aligned prefix is
+        mapped into the slot first (``pool.share``: refcount++, no new
+        blocks, no prefill work) and the chunk budget covers only the
+        uncached suffix. The share is rolled back (free_slot) if the
+        suffix's first chunk doesn't fit — matched-but-unadmitted blocks
+        must drop back to reclaimable, not leak references."""
         admitted = []
         while self.waiting and self.slots.free:
             e = self.waiting[0]
-            first = min(self.scfg.prefill_chunk, len(e.prefill_tokens()))
-            if self.pool.blocks_for(first) > self.pool.n_free:
+            toks = e.prefill_tokens()
+            shared: List[int] = []
+            cached_len = 0
+            if self.prefix is not None \
+                    and not e.req.sampling.prompt_logprobs:
+                # prompt_logprobs needs real logits for every prompt
+                # position — cached positions never run through the model.
+                # record=False: a blocked head-of-line request repeats
+                # this lookup every tick; stats count once, on admission.
+                shared, cached_len = self.prefix.match(toks, record=False)
+            first = min(self.scfg.prefill_chunk, len(toks) - cached_len)
+            # capacity precheck BEFORE touching refcounts: new blocks for
+            # the suffix chunk, plus one reclaimable revived per matched
+            # block nobody references (sharing it removes it from the
+            # pool's allocatable count). Conservative, so a blocked
+            # request never churns share/free counters while it waits.
+            need_new = self.pool.blocks_for(cached_len + first) \
+                - len(shared)
+            revived = sum(1 for b in shared
+                          if self.pool.ref.get(b, 0) == 0)
+            if need_new + revived > self.pool.n_free:
                 break
             slot = self.slots.alloc(e.req.rid)
+            self.pool.share(slot, shared)
+            if not self.pool.can_allocate(slot, cached_len + first):
+                self.pool.free_slot(slot)      # precheck was conservative,
+                self.slots.release(e.req.rid)  # not wrong — roll back
+                break
+            if self.prefix is not None \
+                    and not e.req.sampling.prompt_logprobs:
+                self.prefix.record_lookup(cached_len)
             e.slot = slot
             e.state = State.PREFILL
-            e.pos = 0
+            e.pos = cached_len
+            e.cached_len = cached_len
             self.waiting.pop(0)
             self.active[e.req.rid] = e
             admitted.append(e)
         return admitted
+
+    # --- prefix indexing --------------------------------------------------
+    def index_prefix(self, e: SchedEntry, tokens, n_tokens: int) -> None:
+        """Insert ``e``'s leading full blocks into the prefix index once
+        their KV is final: ``tokens[:n_tokens]`` have device KV written
+        and no future write can touch a full block below that frontier
+        (rollback keeps whole blocks; writes past the frontier COW)."""
+        if self.prefix is None or e.slot is None:
+            return
+        blocks = self.pool.owned.get(e.slot, [])
+        n_full = min(n_tokens // self.pool.block_size, len(blocks))
+        if n_full > 0:
+            toks = np.asarray(tokens).reshape(-1)
+            self.prefix.insert(toks[:n_full * self.pool.block_size],
+                               blocks[:n_full])
 
     # --- per-tick picks ---------------------------------------------------
     def prefill_entries(self) -> List[SchedEntry]:
@@ -173,22 +238,47 @@ class Scheduler:
         return max(cands, key=self._key)
 
     def preempt(self, e: SchedEntry) -> None:
-        """Evict: free blocks + slot, requeue for recompute."""
+        """Evict: release block refs + slot, requeue for recompute.
+        Blocks the prefix index holds (the victim's own prompt, typically)
+        merely drop to reclaimable — if they survive until readmission,
+        the replay prefill matches them and skips the recompute."""
         self.pool.free_slot(e.slot)
         self.slots.release(e.req.rid)
         del self.active[e.req.rid]
         e.slot = None
         e.pos = 0
         e.ctx_len = 0
+        e.cached_len = 0
         e.state = State.WAITING
         e.replay = bool(e.req.tokens_out)
         e.resync_replay = e.replay and self.scfg.spec is not None
         e.resync = []
+        if e.req.sampling.prompt_logprobs:
+            P = len(np.asarray(e.req.prompt).reshape(-1))
+            if len(e.req.prompt_logprobs_out) < P:
+                # mid-prefill eviction: the chunk-seam logits are stale
+                # after replay restarts at pos 0 — recompute from scratch
+                e.req.prompt_logprobs_out.clear()
+        e.plp_prev = None
         self.waiting.append(e)
         self.waiting.sort(key=self._key)
         self.n_preemptions += 1
 
     def finish(self, e: SchedEntry) -> None:
+        # index the finished request's blocks BEFORE releasing them: the
+        # generated tokens extend the cached chain (multi-turn traffic
+        # re-sends prompt+response as the next prompt). KV is valid up to
+        # the committed frontier — the final token's KV was never written
+        # (steady-state invariant), so it never indexes.
+        if self.prefix is not None:
+            if e.state == State.PREFILL:
+                self.index_prefix(e, e.prefill_tokens(), e.pos)
+            else:
+                prompt = np.asarray(e.req.prompt).reshape(-1)
+                seq = np.concatenate(
+                    [prompt, np.asarray(e.req.tokens_out, prompt.dtype)])
+                kv_valid = len(prompt) + max(len(e.req.tokens_out) - 1, 0)
+                self.index_prefix(e, seq, kv_valid)
         e.state = State.DONE
         e.req.done = True
         self.pool.free_slot(e.slot)

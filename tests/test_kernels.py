@@ -205,6 +205,62 @@ def test_paged_decode_attention_reads_block_tables():
                                rtol=1e-5, atol=1e-5)
 
 
+def test_paged_attention_multi_query_rows():
+    """S > 1 (verify / prefill-chunk rows of the unified step): query j
+    sits at position lens[b]+j and must see exactly kv positions
+    <= lens[b]+j — checked against a per-row masked reference over the
+    manually gathered cache."""
+    from repro.kernels.decode_attn import paged_attention
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    B, S, Hq, Kv, Dh, nb, bs, MB = 2, 5, 4, 2, 16, 12, 8, 4
+    q = jax.random.normal(ks[0], (B, S, Hq, Dh))
+    k_pool = jax.random.normal(ks[1], (nb, bs, Kv, Dh))
+    v_pool = jax.random.normal(ks[2], (nb, bs, Kv, Dh))
+    tables = np.full((B, MB), nb, np.int32)
+    tables[0, :3] = [5, 1, 8]
+    tables[1, :2] = [0, 9]
+    lens = np.array([17, 9], np.int32)      # queries at lens+j, j<S
+    out = np.asarray(paged_attention(q, k_pool, v_pool,
+                                     jnp.asarray(tables),
+                                     jnp.asarray(lens), block_size=bs))
+    kg = np.zeros((B, MB * bs, Kv, Dh), np.float32)
+    vg = np.zeros_like(kg)
+    for b in range(B):
+        for m in range(MB):
+            if tables[b, m] < nb:
+                kg[b, m * bs:(m + 1) * bs] = np.asarray(k_pool)[tables[b, m]]
+                vg[b, m * bs:(m + 1) * bs] = np.asarray(v_pool)[tables[b, m]]
+    for b in range(B):
+        for j in range(S):
+            r = ref.decode_attention_ref(
+                q[:, j], jnp.asarray(kg), jnp.asarray(vg),
+                jnp.full((B,), lens[b] + j + 1, jnp.int32))
+            np.testing.assert_allclose(out[b, j], np.asarray(r)[b],
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_paged_attention_s1_matches_decode_entry():
+    """The kept single-token entry (paged_decode_attention) is exactly
+    the S=1 slice of the general kernel."""
+    from repro.kernels.decode_attn import (paged_attention,
+                                           paged_decode_attention)
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    B, Hq, Kv, Dh, nb, bs, MB = 2, 4, 2, 16, 8, 16, 3
+    q = jax.random.normal(ks[0], (B, Hq, Dh))
+    k_pool = jax.random.normal(ks[1], (nb, bs, Kv, Dh))
+    v_pool = jax.random.normal(ks[2], (nb, bs, Kv, Dh))
+    tables = np.full((B, MB), nb, np.int32)
+    tables[0, :2] = [3, 1]
+    tables[1, :1] = [0]
+    kv_len = jnp.array([23, 7])
+    a = paged_decode_attention(q, k_pool, v_pool, jnp.asarray(tables),
+                               kv_len, block_size=bs)
+    c = paged_attention(q[:, None], k_pool, v_pool, jnp.asarray(tables),
+                        kv_len - 1, block_size=bs)[:, 0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                               rtol=1e-6, atol=1e-6)
+
+
 @settings(max_examples=15, deadline=None)
 @given(s_blocks=st.integers(1, 4), kvl=st.integers(1, 64),
        seed=st.integers(0, 2 ** 16))

@@ -1,0 +1,447 @@
+"""Radix-tree prefix cache: block-granular matching, refcounted sharing,
+LRU reclaim, copy-on-write isolation, and composition with speculation,
+preemption, and the streaming engine — plus a randomized refcount stress
+test (no leaks, no double-frees)."""
+
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ServeConfig, SpecConfig
+from repro.models import Model
+from repro.serve import paged_kv
+from repro.serve.engine import Engine
+from repro.serve.prefix_cache import RadixPrefixCache
+from repro.serve.scheduler import Request
+
+
+@pytest.fixture(scope="module")
+def nectar():
+    cfg = get_config("nectar-relu-llama-1.7m")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, lengths, seed=0, shared=0):
+    """Random prompts; the first ``shared`` tokens are common to all."""
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, cfg.vocab, size=shared, dtype=np.int32)
+    return [np.concatenate(
+                [head, rng.integers(0, cfg.vocab, size=int(n),
+                                    dtype=np.int32)])
+            for n in lengths]
+
+
+def _pool(cfg, n_blocks=16, block_size=4, max_batch=4, mbs=8):
+    return paged_kv.PagedKVCache(cfg, n_blocks=n_blocks,
+                                 block_size=block_size,
+                                 max_batch=max_batch,
+                                 max_blocks_per_seq=mbs)
+
+
+def _check_refcounts(pool, radix=None):
+    """The exactness contract: pool.ref IS the multiset of slot->block
+    references; the free list is disjoint from everything live."""
+    cnt = Counter(b for blocks in pool.owned.values() for b in blocks)
+    assert dict(cnt) == pool.ref, (dict(cnt), pool.ref)
+    free = pool.free
+    assert len(set(free)) == len(free)          # no double-free
+    assert not set(free) & set(cnt)             # free ∩ owned = ∅
+    if radix is not None:
+        assert not set(free) & set(radix.blocks())  # free ∩ cached = ∅
+
+
+# ---------------------------------------------------------------------------
+# radix index: match / insert / cap / LRU
+
+
+def test_radix_block_granular_match_and_cap(nectar):
+    cfg, _, _ = nectar
+    pool = _pool(cfg, block_size=4)
+    radix = RadixPrefixCache(pool)
+    toks = np.arange(100, 113, dtype=np.int32)      # 13 tokens
+    assert pool.allocate(0, 13)                     # 4 blocks
+    radix.insert(toks, pool.owned[0])               # indexes 3 full blocks
+    assert len(radix) == 3
+
+    # full query: capped at len-1 = 12 -> 3 blocks
+    blocks, n = radix.match(toks)
+    assert n == 12 and blocks == pool.owned[0][:3]
+    # identical prompt: cap guarantees >= 1 suffix token to prefill
+    blocks, n = radix.match(toks[:12])
+    assert n == 8 and len(blocks) == 2
+    # diverging third block stops the walk
+    q = toks.copy()
+    q[9] += 1
+    _, n = radix.match(q)
+    assert n == 8
+    # diverging first block: total miss
+    q2 = toks.copy()
+    q2[0] += 1
+    assert radix.match(q2) == ([], 0)
+    pool.free_slot(0)
+    _check_refcounts(pool, radix)
+
+
+def test_radix_lru_reclaims_leaf_first(nectar):
+    cfg, _, _ = nectar
+    pool = _pool(cfg, n_blocks=8, block_size=4)
+    radix = RadixPrefixCache(pool)
+    toks = np.arange(12, dtype=np.int32)
+    assert pool.allocate(0, 12)
+    chain = list(pool.owned[0])
+    radix.insert(toks, chain)
+    pool.free_slot(0)                   # whole chain now reclaimable
+    assert radix.n_reclaimable() == 3
+    assert pool.n_free == 8             # caching never shrinks capacity
+
+    freed = radix.reclaim(1)
+    assert freed == [chain[2]]          # deepest (leaf) goes first
+    freed = radix.reclaim(2)
+    assert freed == [chain[1], chain[0]]  # cascade toward the root
+    assert len(radix) == 0
+
+
+def test_radix_referenced_blocks_never_reclaimed(nectar):
+    cfg, _, _ = nectar
+    pool = _pool(cfg, n_blocks=4, block_size=4, max_batch=2)
+    radix = RadixPrefixCache(pool)
+    toks = np.arange(8, dtype=np.int32)
+    assert pool.allocate(0, 8)
+    radix.insert(toks, pool.owned[0])
+    # slot 1 maps the cached chain (a prefix hit)
+    blocks, n = radix.match(np.concatenate([toks, [99]]))
+    assert n == 8
+    pool.share(1, blocks)
+    pool.free_slot(0)                   # original owner leaves
+    assert pool.ref == {blocks[0]: 1, blocks[1]: 1}
+    assert radix.n_reclaimable() == 0   # slot 1 still reads them
+    assert radix.reclaim(4) == []
+    # interior node above a referenced child is not reclaimable either
+    pool.truncate(1, 4)                 # slot 1 drops the deep block
+    assert radix.n_reclaimable() == 1   # only the leaf came free
+    pool.free_slot(1)
+    assert radix.n_reclaimable() == 2
+    _check_refcounts(pool, radix)
+
+
+def test_allocate_draws_from_reclaim_under_pressure(nectar):
+    """A dry free list + reclaimable cached blocks: allocation evicts the
+    LRU cached blocks transparently (admission counted them as free)."""
+    cfg, _, _ = nectar
+    pool = _pool(cfg, n_blocks=4, block_size=4, max_batch=2)
+    radix = RadixPrefixCache(pool)
+    toks = np.arange(16, dtype=np.int32)
+    assert pool.allocate(0, 16)         # whole pool
+    radix.insert(toks, pool.owned[0])
+    pool.free_slot(0)
+    assert pool.free == [] and pool.n_free == 4
+    assert pool.allocate(1, 8)          # forces 2 LRU evictions
+    assert radix.evictions == 2
+    assert pool.n_free == 2
+    _check_refcounts(pool, radix)
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write
+
+
+def test_cow_isolates_siblings(nectar):
+    """A write planned into a block referenced elsewhere splits it: the
+    writer gets a fresh block, the sibling's table entry is untouched,
+    refcounts stay exact."""
+    cfg, _, _ = nectar
+    pool = _pool(cfg, n_blocks=8, block_size=4, max_batch=2)
+    radix = RadixPrefixCache(pool)
+    assert pool.allocate(0, 8)
+    b0, b1 = pool.owned[0]
+    pool.share(1, [b0, b1])             # sibling maps both blocks
+    assert pool.ref == {b0: 2, b1: 2}
+
+    # slot 0 "rolls back" into block b1 and decodes: positions 5.. write
+    pairs = pool.cow_for_write(0, 5, 3)
+    assert len(pairs) == 1 and pairs[0][0] == b1
+    new = pairs[0][1]
+    assert pool.owned[0] == [b0, new]
+    assert pool.owned[1] == [b0, b1]    # sibling untouched
+    assert pool.tables()[1][0] == b0 and pool.tables()[1][1] == b1
+    assert pool.ref == {b0: 2, b1: 1, new: 1}
+    assert pool.cow_count == 1
+    # a second write in the same span: already private, no copy
+    assert pool.cow_for_write(0, 5, 3) == []
+    pool.free_slot(0)
+    pool.free_slot(1)
+    _check_refcounts(pool, radix)
+    assert pool.n_free == pool.n_blocks
+
+
+def test_cow_triggers_for_index_held_blocks(nectar):
+    """ref == 1 but the radix still holds the block: writing would corrupt
+    future cache hits, so it must COW too."""
+    cfg, _, _ = nectar
+    pool = _pool(cfg, n_blocks=8, block_size=4)
+    radix = RadixPrefixCache(pool)
+    toks = np.arange(8, dtype=np.int32)
+    assert pool.allocate(0, 8)
+    blocks = list(pool.owned[0])
+    radix.insert(toks, blocks)
+    assert pool.ref[blocks[1]] == 1 and radix.holds(blocks[1])
+    pairs = pool.cow_for_write(0, 6, 2)
+    assert len(pairs) == 1 and pairs[0][0] == blocks[1]
+    assert radix.holds(blocks[1])       # cached original survives
+    pool.free_slot(0)
+    _check_refcounts(pool, radix)
+
+
+def test_engine_cow_on_shared_partial_tail(nectar):
+    """Fork/rollback on a shared block: a running request whose partial
+    tail block acquires a sibling reader copy-on-writes its next decode
+    write instead of corrupting the shared bytes — greedy output is
+    unchanged and the shared block's device content stays frozen."""
+    cfg, _, params = nectar
+    prompt = _prompts(cfg, [10], seed=3)[0]
+
+    def run(force_share):
+        eng = Engine(cfg, params,
+                     ServeConfig(max_batch=2, max_seq=64, paged=True,
+                                 block_size=8, prefill_chunk=16,
+                                 prefix_cache=True))
+        eng.add_request(Request(rid=0, prompt=prompt, max_new=10))
+        for _ in range(3):
+            eng.step()
+        frozen = None
+        if force_share:
+            e = next(iter(eng.sched.active.values()))
+            assert e.ctx_len % 8 != 0           # mid-block frontier
+            b = eng.pool.owned[e.slot][e.ctx_len // 8]
+            eng.pool.share(1, [b])              # a "sibling" reader
+            leaf = jax.tree.leaves(eng.runner.cache["units"])[0]
+            frozen = (b, np.array(leaf[:, b]))
+        while eng._busy():
+            eng.step()
+        toks = [int(t) for t in eng._requests[0].tokens_out]
+        if force_share:
+            assert eng.pool.cow_count >= 1
+            b, before = frozen
+            leaf = jax.tree.leaves(eng.runner.cache["units"])[0]
+            np.testing.assert_array_equal(before, np.asarray(leaf[:, b]))
+            eng.pool.free_slot(1)
+            _check_refcounts(eng.pool, eng.prefix)
+        return toks
+
+    assert run(force_share=False) == run(force_share=True)
+
+
+# ---------------------------------------------------------------------------
+# engine: sharing end-to-end
+
+
+def _serve(cfg, params, prompts, max_new=8, spec=None, **kw):
+    base = dict(max_batch=2, max_seq=96, paged=True, block_size=8,
+                prefill_chunk=16, spec=spec)
+    base.update(kw)
+    eng = Engine(cfg, params, ServeConfig(**base))
+    done = eng.run([Request(rid=i, prompt=p, max_new=max_new)
+                    for i, p in enumerate(prompts)], max_steps=2000)
+    return {i: [int(t) for t in r.tokens_out] for i, r in done.items()}, eng
+
+
+def test_prefix_cache_token_identical_and_hits(nectar):
+    """Acceptance: >= 50% of requests share a system prompt; greedy output
+    is token-identical cache-on vs cache-off, hits land, and every block
+    reference is released at the end (free + reclaimable == capacity)."""
+    cfg, _, params = nectar
+    shared = _prompts(cfg, [5, 9, 7, 11], seed=1, shared=40)
+    unique = _prompts(cfg, [12], seed=2)
+    prompts = shared + unique
+    off, _ = _serve(cfg, params, prompts)
+    on, eng = _serve(cfg, params, prompts, prefix_cache=True)
+    assert off == on
+    s = eng.metrics.summary()
+    assert s["prefix_lookups"] == 5
+    assert s["prefix_hits"] >= 2
+    assert s["prefix_cached_tokens"] >= 2 * 40 // 8 * 8
+    assert s["kv_pool"]["cow"] == 0        # block-aligned sharing: no COW
+    # refcount accounting exact, nothing leaked
+    assert eng.pool.ref == {}
+    assert eng.pool.owned == {}
+    assert eng.pool.n_free == eng.pool.n_blocks
+    _check_refcounts(eng.pool, eng.prefix)
+
+
+def test_prefix_cache_spec_fork_rollback_token_identical(nectar):
+    """Prefix sharing x speculation: verify-step fork/rollback (truncate)
+    on requests admitted through shared prefixes must not corrupt
+    siblings — greedy output token-identical to the cache-off spec
+    engine, refcounts exact after drain."""
+    cfg, _, params = nectar
+    spec = SpecConfig(drafter="ngram", k=3, k_max=4, adaptive=False)
+    prompts = _prompts(cfg, [6, 10, 8], seed=4, shared=32)
+    off, _ = _serve(cfg, params, prompts, spec=spec)
+    on, eng = _serve(cfg, params, prompts, spec=spec, prefix_cache=True)
+    assert off == on
+    assert eng.metrics.summary()["prefix_hits"] >= 1
+    assert eng.pool.ref == {} and eng.pool.owned == {}
+    assert eng.pool.n_free == eng.pool.n_blocks
+    _check_refcounts(eng.pool, eng.prefix)
+
+
+def test_prefix_cache_survives_preemption(nectar):
+    """A tight pool forces evictions; replay re-matches the victim's own
+    still-cached prompt blocks. Output must equal the unconstrained run
+    and all references drain to zero."""
+    cfg, _, params = nectar
+    prompts = _prompts(cfg, [4, 6], seed=5, shared=8)
+    free, _ = _serve(cfg, params, prompts, max_new=16, max_seq=64,
+                     block_size=4, prefill_chunk=8)
+    tight, eng = _serve(cfg, params, prompts, max_new=16, max_seq=64,
+                        block_size=4, prefill_chunk=8,
+                        prefix_cache=True, n_kv_blocks=10)
+    assert eng.metrics.evictions > 0
+    assert free == tight
+    assert eng.pool.ref == {} and eng.pool.owned == {}
+    assert eng.pool.n_free == eng.pool.n_blocks
+
+
+def test_prefix_cache_composes_with_int8_kv(nectar):
+    """int8 block pools share/copy exactly like fp pools (scale leaves
+    ride along in copy_blocks): output token-identical cache on vs off."""
+    cfg, _, params = nectar
+    prompts = _prompts(cfg, [5, 7, 6], seed=6, shared=24)
+    off, _ = _serve(cfg, params, prompts, kv_quant=True)
+    on, eng = _serve(cfg, params, prompts, kv_quant=True,
+                     prefix_cache=True)
+    assert off == on
+    assert eng.metrics.summary()["prefix_hits"] >= 1
+    assert eng.pool.ref == {} and eng.pool.n_free == eng.pool.n_blocks
+
+
+def test_prefix_cache_rejected_off_paged(nectar):
+    cfg, _, params = nectar
+    with pytest.raises(ValueError, match="prefix_cache"):
+        Engine(cfg, params, ServeConfig(paged=False, prefix_cache=True))
+
+
+def test_defrag_remaps_index_and_shared_blocks(nectar):
+    """Defrag with an active sharer AND cached reclaimable blocks: tables,
+    refcounts, and the radix all follow the permutation; a post-defrag
+    match returns the moved ids."""
+    cfg, _, _ = nectar
+    pool = _pool(cfg, n_blocks=12, block_size=4, max_batch=3)
+    radix = RadixPrefixCache(pool)
+    toks = np.arange(200, 212, dtype=np.int32)
+    assert pool.allocate(0, 4)          # filler, freed later (makes holes)
+    assert pool.allocate(1, 12)
+    chain = list(pool.owned[1])
+    radix.insert(toks, chain)
+    blocks, n = radix.match(np.concatenate([toks, [7]]))
+    assert n == 12
+    pool.share(2, blocks)               # active sharer
+    pool.free_slot(0)                   # hole at the front
+    pool.free_slot(1)                   # chain now ref 1 via slot 2
+    perm = pool.defrag()
+    assert perm is not None
+    moved = pool.owned[2]
+    assert moved == [0, 1, 2]           # compacted to the lowest ids
+    assert list(pool.tables()[2][:3]) == moved
+    assert pool.ref == {0: 1, 1: 1, 2: 1}
+    again, n = radix.match(np.concatenate([toks, [7]]))
+    assert n == 12 and again == moved   # index followed the move
+    pool.free_slot(2)
+    _check_refcounts(pool, radix)
+    assert pool.n_free == pool.n_blocks
+
+
+# ---------------------------------------------------------------------------
+# randomized stress: refcount accounting exact under admit/evict/rollback
+
+
+def test_refcount_stress_randomized(nectar):
+    """Random interleaving of allocate / share-via-match / truncate
+    (rollback) / cow / free / insert / defrag / reclaim pressure. After
+    every op the refcount table equals the multiset of slot references
+    and the free list is disjoint from live blocks; at the end, freeing
+    everything returns the pool to full capacity with every refcount 0."""
+    cfg, _, _ = nectar
+    rng = np.random.default_rng(0)
+    pool = _pool(cfg, n_blocks=24, block_size=4, max_batch=6, mbs=8)
+    radix = RadixPrefixCache(pool)
+    # a small universe of "prompts" so matches actually happen
+    universe = [rng.integers(0, 64, size=int(n), dtype=np.int32)
+                for n in rng.integers(8, 30, size=5)]
+    slot_tokens = {}                    # slot -> token seq backing it
+
+    for _ in range(400):
+        op = rng.choice(["admit", "free", "truncate", "cow", "insert",
+                         "defrag"])
+        if op == "admit" and len(slot_tokens) < 6:
+            slot = next(s for s in range(6) if s not in slot_tokens)
+            base = universe[rng.integers(len(universe))]
+            toks = np.concatenate(
+                [base, rng.integers(0, 64, size=int(rng.integers(1, 6)),
+                                    dtype=np.int32)]).astype(np.int32)
+            blocks, n = radix.match(toks)
+            pool.share(slot, blocks)
+            if pool.can_allocate(slot, len(toks)) \
+                    and pool.allocate(slot, len(toks)):
+                slot_tokens[slot] = toks
+            else:
+                pool.free_slot(slot)    # rollback, exactly like admit()
+        elif op == "free" and slot_tokens:
+            slot = rng.choice(list(slot_tokens))
+            pool.free_slot(slot)
+            del slot_tokens[slot]
+        elif op == "truncate" and slot_tokens:
+            slot = int(rng.choice(list(slot_tokens)))
+            keep = int(rng.integers(1, len(slot_tokens[slot]) + 1))
+            pool.truncate(slot, keep)
+            slot_tokens[slot] = slot_tokens[slot][:keep]
+        elif op == "cow" and slot_tokens:
+            slot = int(rng.choice(list(slot_tokens)))
+            n = len(slot_tokens[slot])
+            start = int(rng.integers(0, n))
+            if pool.n_free >= pool.blocks_for(n - start):
+                pool.cow_for_write(slot, start, n - start)
+        elif op == "insert" and slot_tokens:
+            slot = int(rng.choice(list(slot_tokens)))
+            toks = slot_tokens[slot]
+            radix.insert(toks, pool.owned[slot][:len(toks) // 4])
+        elif op == "defrag":
+            pool.defrag()
+        _check_refcounts(pool, radix)
+        assert pool.n_used + len(pool.free) == pool.n_blocks
+
+    for slot in list(slot_tokens):
+        pool.free_slot(slot)
+    _check_refcounts(pool, radix)
+    # acceptance: every refcount 0, free count == capacity
+    assert pool.ref == {}
+    assert pool.owned == {}
+    assert pool.n_free == pool.n_blocks
+    assert len(pool.free) + radix.n_reclaimable() == pool.n_blocks
+
+
+def test_pool_stats_fragmentation_and_high_water(nectar):
+    """Bugfix coverage: stats() exposes pool pressure (high-water mark,
+    fragmentation, reclaimable split) so admission stalls are observable
+    before they happen."""
+    cfg, _, _ = nectar
+    pool = _pool(cfg, n_blocks=8, block_size=4, max_batch=3)
+    assert pool.allocate(0, 8)
+    assert pool.allocate(1, 8)
+    s = pool.stats()
+    assert s["high_water_blocks"] == 4 and s["high_water_frac"] == 0.5
+    assert s["fragmentation"] == 0.0     # free space is one run
+    pool.free_slot(0)                    # hole: free = [4,5,6,7] + [0,1]
+    pool.allocate(2, 4)                  # takes [0], leaving a split run?
+    s = pool.stats()
+    assert s["n_used"] == 3
+    assert s["high_water_blocks"] == 4   # never decreases
+    pool.free_slot(1)
+    pool.free_slot(2)
+    assert pool.stats()["n_free"] == 8
+    assert pool.stats()["fragmentation"] == 0.0

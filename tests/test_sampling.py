@@ -275,6 +275,76 @@ def test_flash_backend_token_identical(nectar):
     assert naive == flash
 
 
+def test_flash_backend_covers_verify_and_prefill_rows(nectar):
+    """ROADMAP item: the paged Pallas kernel extends to S > 1 query rows,
+    so attn_backend='flash' also serves speculative K+1 verify rows and
+    chunked-prefill rows of the unified step — token-identical to the
+    naive gather under speculation (which exercises every width)."""
+    cfg, _, params = nectar
+    spec = SpecConfig(drafter="ngram", k=3, k_max=4, adaptive=False)
+    prompts = _prompts(cfg, [6, 19], seed=11)
+    naive, _ = _serve(cfg, params, prompts, max_new=12,
+                      **_kw(spec=spec))
+    flash, eng = _serve(cfg, params, prompts, max_new=12,
+                        **_kw(spec=spec, attn_backend="flash"))
+    assert naive == flash
+    assert eng.metrics.spec_steps > 0       # verify rows actually ran
+
+
+# ---------------------------------------------------------------------------
+# prompt logprobs (ROADMAP item: runner already emits all-position logits)
+
+
+def test_prompt_logprobs_match_full_forward(nectar):
+    """prompt_logprobs_out[i] == log softmax(logits[i-1])[prompt[i]] from
+    a whole-prompt forward; index 0 is None. The prompt spans several
+    prefill chunks, so the chunk-seam stitching is exercised."""
+    cfg, model, params = nectar
+    prompt = _prompts(cfg, [37], seed=12)[0]
+    eng = Engine(cfg, params, ServeConfig(**_kw(max_seq=96)))
+    done = eng.run([Request(rid=0, prompt=prompt, max_new=2,
+                            sampling=SamplingParams(prompt_logprobs=True))],
+                   max_steps=200)
+    plp = done[0].prompt_logprobs_out
+    assert len(plp) == len(prompt) and plp[0] is None
+    logits, _ = model.forward(params, {"tokens": jnp.asarray(prompt)[None]})
+    z = np.asarray(logits)[0]
+    for i in range(1, len(prompt)):
+        ref = sampling.token_logprob(z[i - 1], int(prompt[i]))
+        assert plp[i] == pytest.approx(ref, abs=2e-4)
+
+
+def test_prompt_logprobs_survive_preemption(nectar):
+    """Mid-prefill eviction clears the partial list; replay recomputes it
+    — the final list must still match the clean run exactly."""
+    cfg, _, params = nectar
+    prompts = _prompts(cfg, [4, 20], seed=13)
+    sp = SamplingParams(prompt_logprobs=True)
+
+    def run(n_kv_blocks):
+        eng = Engine(cfg, params, ServeConfig(
+            **_kw(block_size=4, prefill_chunk=8, max_seq=64,
+                  n_kv_blocks=n_kv_blocks)))
+        reqs = [Request(rid=i, prompt=p, max_new=12, sampling=sp)
+                for i, p in enumerate(prompts)]
+        eng.run(reqs, max_steps=1000)
+        return [list(r.prompt_logprobs_out) for r in reqs], eng
+
+    free, _ = run(0)
+    tight, eng = run(10)
+    assert eng.metrics.evictions > 0
+    assert free == tight
+
+
+def test_prompt_logprobs_rejected_on_legacy_engine(nectar):
+    cfg, _, params = nectar
+    eng = Engine(cfg, params, ServeConfig(paged=False))
+    with pytest.raises(ValueError, match="prompt_logprobs"):
+        eng.add_request(Request(
+            rid=0, prompt=np.arange(4, dtype=np.int32),
+            sampling=SamplingParams(prompt_logprobs=True)))
+
+
 def test_flash_backend_rejects_int8_kv(nectar):
     cfg, _, params = nectar
     with pytest.raises(ValueError, match="flash"):
