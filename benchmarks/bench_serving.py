@@ -13,8 +13,12 @@ Emits CSV rows for benchmarks.run and writes BENCH_serving.json.
 ``--sweep`` additionally grids (max_batch x block_size) over the same
 trace generator and writes BENCH_sweep.json (ROADMAP open item: find the
 paged engine's throughput knee instead of guessing the defaults).
+``--mesh N`` compares the paged engine sharded over a model=N device
+mesh vs single-device on the same trace (token-identity asserted) and
+writes BENCH_mesh.json — see docs/sharding.md.
 
-Run: PYTHONPATH=src python -m benchmarks.bench_serving [--sweep] [--quick]
+Run: PYTHONPATH=src python -m benchmarks.bench_serving \
+         [--sweep | --mesh N] [--quick]
 """
 
 from __future__ import annotations
@@ -38,6 +42,8 @@ ART = os.path.join(_DIR, "BENCH_serving.json")
 ART_QUICK = os.path.join(_DIR, "BENCH_serving_quick.json")
 ART_SWEEP = os.path.join(_DIR, "BENCH_sweep.json")
 ART_SWEEP_QUICK = os.path.join(_DIR, "BENCH_sweep_quick.json")
+ART_MESH = os.path.join(_DIR, "BENCH_mesh.json")
+ART_MESH_QUICK = os.path.join(_DIR, "BENCH_mesh_quick.json")
 
 N_REQUESTS = 16
 MAX_NEW = 16
@@ -175,6 +181,73 @@ def run_sweep(quick: bool = False):
     return rows
 
 
+def run_mesh(model_shards: int, quick: bool = False):
+    """Sharded-vs-single-device paged engine on the same Poisson trace
+    (ServeConfig.mesh, docs/sharding.md). Needs >= ``model_shards``
+    visible devices — the CI job forces a 4-device host platform via
+    XLA_FLAGS=--xla_force_host_platform_device_count=4. Reports tokens/s
+    both ways plus a greedy token-identity check (the sharding
+    correctness contract), and writes BENCH_mesh[_quick].json.
+
+    On a CPU host the sharded run is SLOWER (collectives are memcpy +
+    synchronization with zero extra FLOP throughput); the artifact's
+    point is the identity bit and the per-shard pool gauges — real
+    speedups need devices whose matmul throughput scales with the mesh.
+    """
+    from repro.configs.base import MeshConfig
+
+    if len(jax.devices()) < model_shards:
+        raise SystemExit(
+            f"--mesh {model_shards} needs {model_shards} devices; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{model_shards}")
+    n_requests = 6 if quick else N_REQUESTS
+    max_new = 8 if quick else MAX_NEW
+    cfg = get_config("nectar-relu-llama-1.7m")
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+
+    def bench(mesh):
+        scfg = ServeConfig(max_batch=4, max_seq=96, paged=True,
+                           block_size=8, prefill_chunk=16, mesh=mesh)
+        eng = Engine(cfg, params, scfg)
+        warm = Request(rid=-1, prompt=np.arange(4, dtype=np.int32),
+                       max_new=2)
+        eng.run([warm], max_steps=50)
+        eng.reset_metrics()
+        trace = make_trace(cfg, n_requests=n_requests, max_new=max_new)
+        s = run_trace(eng, trace)
+        toks = {req.rid: [int(t) for t in req.tokens_out]
+                for _, req in trace}
+        return s, toks
+
+    single_s, single_toks = bench(None)
+    mesh_s, mesh_toks = bench(MeshConfig(model=model_shards))
+    identical = single_toks == mesh_toks
+    report = {
+        "trace": {"n_requests": n_requests, "max_new": max_new,
+                  "arrival_rate_per_s": ARRIVAL_RATE,
+                  "long_prompt_frac": LONG_FRAC, "quick": quick},
+        "model_shards": model_shards,
+        "single_device": single_s,
+        "sharded": mesh_s,
+        "token_identical": identical,
+    }
+    with open(ART_MESH_QUICK if quick else ART_MESH, "w") as f:
+        json.dump(report, f, indent=1)
+    if not identical:
+        raise SystemExit("sharded greedy output diverged from the "
+                         "single-device engine — sharding bug")
+    pool = mesh_s["kv_pool"]
+    return [
+        ("serving_mesh_single", 0.0,
+         f"tok_s={single_s['tokens_per_s']:.1f}"),
+        (f"serving_mesh_model{model_shards}", 0.0,
+         f"tok_s={mesh_s['tokens_per_s']:.1f};"
+         f"token_identical={identical};"
+         f"per_shard_kv_bytes={pool['per_shard_capacity_bytes']:.0f}"),
+    ]
+
+
 def run(quick: bool = False, shared_prefix_frac: float = 0.0):
     n_requests = 6 if quick else N_REQUESTS
     max_new = 8 if quick else MAX_NEW
@@ -224,19 +297,35 @@ def main():
                     help="batch-size x block-size grid -> BENCH_sweep.json")
     ap.add_argument("--quick", action="store_true",
                     help="tiny trace (CI smoke)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="sharded serving: compare the paged engine on a "
+                         "model=N mesh vs single-device on the same "
+                         "trace -> BENCH_mesh.json (needs N visible "
+                         "devices)")
     ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
                     help="fraction of requests opening with one common "
                          "system prompt (synthesizes prefix-cache "
                          "traffic; enables prefix_cache on the paged "
                          "engine when > 0)")
     args = ap.parse_args()
-    rows = run_sweep(quick=args.quick) if args.sweep \
-        else run(quick=args.quick,
-                 shared_prefix_frac=args.shared_prefix_frac)
+    if args.mesh and args.sweep:
+        ap.error("--mesh and --sweep are separate benchmarks; "
+                 "run them one at a time")
+    if args.mesh == 1:
+        ap.error("--mesh needs >= 2 model shards (1 is the plain "
+                 "single-device benchmark — just drop the flag)")
+    if args.mesh > 1:
+        rows = run_mesh(args.mesh, quick=args.quick)
+        art = ART_MESH_QUICK if args.quick else ART_MESH
+    elif args.sweep:
+        rows = run_sweep(quick=args.quick)
+        art = ART_SWEEP_QUICK if args.quick else ART_SWEEP
+    else:
+        rows = run(quick=args.quick,
+                   shared_prefix_frac=args.shared_prefix_frac)
+        art = ART_QUICK if args.quick else ART
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
-    art = (ART_SWEEP_QUICK if args.quick else ART_SWEEP) if args.sweep \
-        else (ART_QUICK if args.quick else ART)
     print(f"wrote {art}")
 
 

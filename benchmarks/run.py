@@ -12,18 +12,53 @@
 Run: PYTHONPATH=src python -m benchmarks.run [--only <name>] [--quick]
 
 ``--quick`` is the CI smoke mode: it runs only the serving-path suites
-(bench_serving, bench_spec) on tiny traces — fast enough for the tier-1
-workflow, so the benchmark scripts themselves can't silently rot.
+(bench_serving, bench_spec, bench_prefix) on tiny traces — fast enough
+for the tier-1 workflow, so the benchmark scripts themselves can't
+silently rot. It also writes one consolidated ``BENCH_quick.json`` index
+(suite -> artifact file -> headline metrics) so the perf trajectory
+stays machine-readable across PRs without parsing per-suite schemas
+(docs/benchmarks.md documents all of them).
 """
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+_DIR = os.path.dirname(os.path.abspath(__file__))
+ART_INDEX = os.path.join(_DIR, "BENCH_quick.json")
 
 SUITES = ["bench_matmul", "bench_sparsity", "bench_prefetch", "bench_e2e",
           "bench_serving", "bench_spec", "bench_prefix", "roofline_report"]
 # serving-path suites accepting a quick=... kwarg (the CI smoke subset)
 QUICK_SUITES = ["bench_serving", "bench_spec", "bench_prefix"]
+# per-suite artifact written in --quick mode (relative to benchmarks/)
+QUICK_ARTIFACTS = {"bench_serving": "BENCH_serving_quick.json",
+                   "bench_spec": "BENCH_spec_quick.json",
+                   "bench_prefix": "BENCH_prefix_quick.json"}
+
+
+def write_quick_index(results: dict) -> None:
+    """One machine-readable index over the --quick run: suite name ->
+    artifact file -> headline metrics. ``results`` maps suite name to its
+    CSV rows; the headline is the last row's derived field (every suite
+    puts its acceptance metric there — speedup / TTFT ratio / identity),
+    and every row rides along so cross-PR tooling never needs the
+    per-suite artifact schemas."""
+    index = {}
+    for suite, rows in results.items():
+        art = QUICK_ARTIFACTS.get(suite)
+        index[suite] = {
+            "file": art if art and os.path.exists(os.path.join(_DIR, art))
+            else None,
+            "headline": rows[-1][0] if rows else None,
+            "headline_metric": rows[-1][2] if rows else None,
+            "rows": {name: derived for name, _, derived in rows},
+        }
+    with open(ART_INDEX, "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"# wrote {ART_INDEX}", file=sys.stderr)
 
 
 def main() -> None:
@@ -41,6 +76,7 @@ def main() -> None:
         suites = QUICK_SUITES if args.quick else SUITES
     print("name,us_per_call,derived")
     failed = []
+    results = {}
     for mod_name in suites:
         try:
             mod = __import__(f"benchmarks.{mod_name}",
@@ -49,12 +85,15 @@ def main() -> None:
                 rows = mod.run(quick=True)
             else:
                 rows = mod.run()
+            results[mod_name] = rows
             for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}")
                 sys.stdout.flush()
         except Exception:  # noqa: BLE001 — report and continue
             failed.append(mod_name)
             traceback.print_exc()
+    if args.quick:
+        write_quick_index(results)
     if failed:
         print(f"# FAILED suites: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -1,0 +1,89 @@
+"""Sharded serving demo: the paged engine partitioned over a 4-device
+'model' mesh (ServeConfig(mesh=MeshConfig(model=4))), on fake host
+devices so it runs anywhere.
+
+What it shows (see docs/sharding.md for the design):
+  * transformer weights shard over 'model' (output-dim tensor
+    parallelism) and the paged KV block pool partitions its KV-HEAD axis
+    — each device holds n_kv_heads/4 heads of every physical block, so
+    the host-side block machinery (tables, refcounts, prefix radix
+    index, COW, defrag) is untouched by sharding,
+  * greedy output is asserted TOKEN-IDENTICAL to the single-device
+    engine — the bit-reproducible all-gather-only layout at work,
+  * per-shard KV pool stats: what one device actually holds.
+
+    PYTHONPATH=src python examples/sharded_serve.py
+
+(The XLA_FLAGS line below must run before jax initializes devices, which
+is why this demo sets it at the very top instead of asking you to.)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import MeshConfig, ServeConfig  # noqa: E402
+from repro.models import Model  # noqa: E402
+from repro.serve.engine import Engine  # noqa: E402
+from repro.serve.scheduler import Request  # noqa: E402
+
+N_SHARDS = 4
+
+
+def serve(cfg, params, prompts, mesh=None):
+    eng = Engine(cfg, params,
+                 ServeConfig(max_batch=4, max_seq=96, paged=True,
+                             block_size=8, prefill_chunk=16,
+                             prefix_cache=True, mesh=mesh))
+    done = eng.run([Request(rid=i, prompt=p, max_new=12)
+                    for i, p in enumerate(prompts)], max_steps=3000)
+    return {i: [int(t) for t in r.tokens_out] for i, r in done.items()}, eng
+
+
+def main():
+    cfg = get_config("nectar-relu-llama-1.7m")
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    sys_prompt = rng.integers(0, cfg.vocab, size=16, dtype=np.int32)
+    # 6 requests through a 4-slot batch: the last two admit after the
+    # first wave published the shared system prompt — real prefix hits
+    prompts = [np.concatenate(
+        [sys_prompt,
+         rng.integers(0, cfg.vocab, size=int(n), dtype=np.int32)])
+        for n in (5, 21, 9, 13, 7, 11)]
+
+    print(f"devices: {len(jax.devices())} "
+          f"({jax.devices()[0].platform})")
+    single, _ = serve(cfg, params, prompts)
+    sharded, eng = serve(cfg, params, prompts,
+                         mesh=MeshConfig(model=N_SHARDS))
+    assert sharded == single, "sharded output diverged from single-device"
+    print(f"token-identity over {len(prompts)} requests "
+          f"(model={N_SHARDS} mesh vs single device): OK")
+
+    s = eng.metrics.summary()
+    print("mesh:", s["mesh"])
+    pool = s["kv_pool"]
+    print(f"KV pool: {pool['n_blocks']} blocks x "
+          f"{eng.pool.block_size} tokens, "
+          f"{pool['capacity_bytes'] / 1024:.1f} KiB total")
+    print(f"  per shard: {pool['per_shard_capacity_bytes'] / 1024:.1f} "
+          f"KiB across {pool['model_shards']} shards "
+          f"({cfg.n_kv_heads // pool['model_shards']} of "
+          f"{cfg.n_kv_heads} KV heads each)")
+    print(f"  high water: {pool['high_water_blocks']} blocks "
+          f"({pool['per_shard_used_bytes'] / 1024:.1f} KiB/shard now); "
+          f"prefix hits: {s['prefix_hits']}/{s['prefix_lookups']}")
+    # the device arrays really are partitioned
+    leaf = jax.tree.leaves(eng.runner.cache["units"])[0]
+    print(f"  pool leaf {leaf.shape} sharding: {leaf.sharding.spec}")
+
+
+if __name__ == "__main__":
+    main()

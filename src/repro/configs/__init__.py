@@ -1,2 +1,3 @@
-from repro.configs.base import ModelConfig, TrainConfig, ServeConfig  # noqa: F401
+from repro.configs.base import (MeshConfig, ModelConfig,  # noqa: F401
+                                ServeConfig, TrainConfig)
 from repro.configs.registry import get_config, list_configs, REGISTRY  # noqa: F401

@@ -193,6 +193,43 @@ class SpecConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """Device mesh for sharded serving (paged engine only).
+
+    ``model`` is the tensor-parallel axis: transformer weights shard over
+    it (dist.sharding.params_shardings) and the paged KV block pool
+    partitions its KV-head axis over it (dist.sharding.cache_shardings
+    with paged=True) — each device holds n_kv_heads/model heads of every
+    physical block, so the pool's host-side bookkeeping (block tables,
+    refcounts, COW, truncate, defrag, the radix prefix index) is
+    completely shard-agnostic.
+
+    ``shard_kv_seq`` additionally shards the gathered per-row KV
+    *sequence* over ``model`` inside single-token decode attention and
+    merges the per-shard partial softmaxes with the LSE-combine
+    collective (dist.collectives.lse_combine_decode_attention) — the
+    long-context layout where one device cannot hold a row's KV.
+
+    ``data`` > 1 is reserved for batch-parallel replicas and is rejected
+    by the engine until the runner actually batch-shards step inputs —
+    accepting it today would silently replicate identical work across
+    the extra devices.
+
+    Declarative and jax-free: the engine materializes the actual
+    jax.sharding.Mesh via launch.mesh.make_serving_mesh, so configs can
+    be built before device state exists (e.g. under forced host-device
+    counts)."""
+
+    model: int = 1                  # tensor-parallel shards
+    data: int = 1                   # batch-parallel replicas (reserved)
+    shard_kv_seq: bool = False      # LSE-combine decode over seq shards
+
+    @property
+    def n_devices(self) -> int:
+        return self.model * self.data
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_batch: int = 8
     max_seq: int = 2048
@@ -217,6 +254,10 @@ class ServeConfig:
     # "flash" = Pallas flash-decode kernel reading the block pools
     # directly via scalar-prefetched tables (single-token steps)
     attn_backend: str = "naive"
+    # multi-device serving (paged + naive backend only): shard weights
+    # and the KV block pool's head axis over the mesh's 'model' axis;
+    # greedy output stays token-identical to the single-device engine
+    mesh: Optional[MeshConfig] = None
 
     @property
     def blocks_per_seq(self) -> int:

@@ -4,6 +4,22 @@ elastic resharding, ring attention.
 Everything here is a no-op on a single device — the model/train/serve code
 calls ``constrain_*`` unconditionally and pays nothing unless an
 ``activation_sharding_scope`` is active on a real mesh.
+
+Map (docs/sharding.md covers the serving-side design):
+
+  * ``sharding`` — ``ShardingPolicy`` + ``params_shardings`` /
+    ``batch_shardings`` / ``cache_shardings`` (contiguous AND paged-pool
+    layouts), the activation-sharding scope, and the ``constrain_*``
+    points model code calls unconditionally (including
+    ``constrain_tp_exact``, the all-gather pins of the bit-reproducible
+    serving layout).
+  * ``collectives`` — ``lse_combine_decode_attention`` (decode over a
+    sequence-sharded KV cache without resharding) and the hierarchical
+    gradient all-reduce.
+  * ``compression`` — int8 error-feedback gradient compression for the
+    cross-pod link.
+  * ``ring`` — ring attention over the sequence axis.
+  * ``elastic`` — resharding live train state when the mesh changes.
 """
 
 from repro.dist import compression, sharding  # noqa: F401

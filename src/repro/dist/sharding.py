@@ -32,6 +32,15 @@ class ShardingPolicy:
     seq_shard: bool = False
     pod_param_shard: bool = False
     shard_kv_seq: bool = False
+    # Bit-reproducible tensor parallelism (sharded serving): shard every
+    # weight on its OUTPUT dim and all-gather activations at the
+    # constrain_tp_exact points, so every collective is a CONCATENATION
+    # (order-preserving) and never a summation — fp accumulation order
+    # matches the single device exactly, which is what keeps greedy
+    # decode token-identical even through int8 KV quantization rounding
+    # (a psum's ~1e-7 reduction-order noise amplifies to a full
+    # quantization step when it lands on a rounding boundary).
+    exact_tp: bool = False
 
 
 def _batch_axes(mesh: Mesh, batch: int) -> Tuple[str, ...]:
@@ -56,13 +65,24 @@ def _param_spec(shape, mesh: Mesh, policy: ShardingPolicy):
     """Tensor-parallel on 'model' over the largest divisible trailing dim;
     fsdp shards one remaining dim over the data (and optionally pod) axes.
     Stacked-unit leaves keep axis 0 (the unit axis) replicated — it is the
-    scan axis."""
+    scan axis.
+
+    ``policy.exact_tp`` shards ONLY the last dim — for matmul weights
+    that is the OUTPUT dim, so a replicated activation times a
+    column-sharded weight needs no cross-device reduction (the
+    bit-reproducible serving layout; see constrain_tp_exact). A leaf
+    whose last dim doesn't divide stays fully REPLICATED — falling back
+    to an earlier (contraction) dim would silently reintroduce the psum
+    the layout exists to avoid."""
     spec = [None] * len(shape)
     msize = _model_size(mesh)
     lo = 1 if len(shape) >= 3 else 0  # skip the [U, ...] stack axis
     if msize > 1 and len(shape) >= 2:
-        cands = sorted(range(lo, len(shape)),
-                       key=lambda i: shape[i], reverse=True)
+        if policy.exact_tp:
+            cands = [len(shape) - 1]
+        else:
+            cands = sorted(range(lo, len(shape)),
+                           key=lambda i: shape[i], reverse=True)
         for i in cands:
             if shape[i] % msize == 0 and shape[i] >= msize:
                 spec[i] = MODEL_AXIS
@@ -108,21 +128,48 @@ def batch_shardings(cfg, mesh: Mesh, b: int, s: int, kind: str,
 
 
 def cache_shardings(cfg, mesh: Mesh, batch: int,
-                    policy: Optional[ShardingPolicy] = None):
+                    policy: Optional[ShardingPolicy] = None,
+                    paged: bool = False):
     """Returns fn(path, leaf) -> NamedSharding for tree_map_with_path over a
-    decode cache ({"lens": [B], "units": {bj: leaf [U, B, ...]}})."""
+    decode cache.
+
+    Contiguous cache (``paged=False``, {"lens": [B], "units": {bj: leaf
+    [U, B, ...]}}): batch-sharded over the batch axes; with
+    ``policy.shard_kv_seq`` the K/V seq axis additionally shards over
+    'model' (the LSE-combine decode layout).
+
+    Paged block pool (``paged=True``, {"lens": [B], "block_tables":
+    [B, MB], "units": {bj: k/v [U, n_blocks, bs, Kv, Dh] (+ _scale
+    leaves)}}): the KV-HEAD axis shards over 'model' — the tensor-
+    parallel partition matching column-sharded wk/wv, so each device
+    writes and reads only its local heads of every block. The BLOCK axis
+    is never sharded: block tables address arbitrary physical blocks, so
+    every device must hold (its head slice of) every block — that is what
+    keeps allocation, refcounts, COW and defrag host-side and
+    shard-agnostic. lens/block_tables are replicated host-truth,
+    republished by the runner every step."""
     bt = _batch_axes(mesh, batch)
-    kv_seq = bool(policy and policy.shard_kv_seq) and _model_size(mesh) > 1
+    msize = _model_size(mesh)
+    kv_seq = bool(policy and policy.shard_kv_seq) and msize > 1
 
     def fn(path, leaf):
         names = [getattr(p, "key", None) for p in path]
-        if names and names[-1] in ("lens", "block_tables"):
+        last = names[-1] if names else None
+        if paged:
+            if last in ("k", "v", "k_scale", "v_scale") and leaf.ndim >= 5 \
+                    and msize > 1 and leaf.shape[3] % msize == 0 \
+                    and leaf.shape[3] >= msize:
+                spec = [None] * leaf.ndim
+                spec[3] = MODEL_AXIS        # [U, nb, bs, Kv, Dh|1]
+                return NamedSharding(mesh, P(*spec))
+            return NamedSharding(mesh, P())
+        if last in ("lens", "block_tables"):
             return NamedSharding(mesh, P(bt) if bt else P())
         if leaf.ndim >= 2 and bt:
             spec = [None] * leaf.ndim
             spec[1] = bt
-            if kv_seq and leaf.ndim >= 3 and names[-1] in ("k", "v") \
-                    and leaf.shape[2] % _model_size(mesh) == 0:
+            if kv_seq and leaf.ndim >= 3 and last in ("k", "v") \
+                    and leaf.shape[2] % msize == 0:
                 spec[2] = MODEL_AXIS
             return NamedSharding(mesh, P(*spec))
         return NamedSharding(mesh, P())
@@ -134,6 +181,17 @@ def cache_shardings(cfg, mesh: Mesh, batch: int,
 # Activation-sharding scope (used by dryrun lowering; identity otherwise)
 
 _SCOPE: Optional[Tuple[Mesh, ShardingPolicy]] = None
+
+
+def current_scope() -> Optional[Tuple[Mesh, ShardingPolicy]]:
+    """The active (mesh, policy) activation-sharding scope, or None.
+
+    Model code consults this at TRACE time to pick sharded code paths
+    (e.g. attention.attn_step_paged routes single-token decode through
+    the LSE-combine collective when policy.shard_kv_seq) — the scope is a
+    host-side global, so whatever is active while jit traces is what the
+    compiled program bakes in."""
+    return _SCOPE
 
 
 @contextlib.contextmanager
@@ -182,6 +240,24 @@ def constrain_seq_gathered(x):
     def spec(mesh, policy, x):
         bt = _batch_axes(mesh, x.shape[0])
         return P(bt) if bt else None
+
+    return _constrain(x, spec)
+
+
+def constrain_tp_exact(x):
+    """All-gather point of the bit-reproducible serving layout
+    (ShardingPolicy.exact_tp): force ``x`` fully replicated. Placed right
+    after each output-dim-sharded matmul (and after the embedding
+    gather), it turns the layout's only collectives into all-gathers —
+    concatenations preserve every fp value bit-exactly, while a psum of
+    partial products re-orders the accumulation and perturbs the last
+    ulp. Identity off-scope and under non-exact policies, so model code
+    calls it unconditionally."""
+
+    def spec(mesh, policy, x):
+        if not policy.exact_tp or _model_size(mesh) <= 1:
+            return None
+        return P()
 
     return _constrain(x, spec)
 

@@ -33,6 +33,26 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(devices, axes, **_axis_kw(len(axes)))
 
 
+def make_serving_mesh(mcfg):
+    """Mesh for the sharded serving engine (ServeConfig.mesh): axes
+    ("data", "model") of shape (mcfg.data, mcfg.model) over the first
+    data*model visible devices. On a dev host, force fake devices first:
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=4
+
+    Raises if fewer devices are visible than the config asks for —
+    serving must never silently run a smaller mesh than it advertised."""
+    need = mcfg.n_devices
+    have = len(jax.devices())
+    if have < need:
+        raise ValueError(
+            f"MeshConfig(model={mcfg.model}, data={mcfg.data}) needs "
+            f"{need} devices, only {have} visible (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} for a host "
+            f"mesh)")
+    return make_mesh((mcfg.data, mcfg.model), ("data", "model"))
+
+
 def make_mesh(shape, axes):
     """Arbitrary mesh over the first prod(shape) devices (tests, examples)."""
     n = int(np.prod(shape))

@@ -3,6 +3,13 @@ heterogeneous decode paths (sparse FFN gather + int8 weight streaming).
 
     PYTHONPATH=src python -m repro.launch.serve --arch nectar-relu-llama-1.7m \
         --requests 8 --max-new 16 [--ckpt-dir /tmp/nectar_ckpt]
+
+Sharded serving (--mesh N partitions weights + the KV block pool over N
+'model'-axis devices; see docs/sharding.md). On a host without real
+accelerators, force fake devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.serve --paged --mesh 4
 """
 
 from __future__ import annotations
@@ -51,6 +58,15 @@ def main():
                     help="paged attention read path: reference gather vs "
                          "the Pallas flash-decode kernel through block "
                          "tables")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="model-axis shards for sharded serving (paged "
+                         "engine; needs >= N visible devices — set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N on a CPU host)")
+    ap.add_argument("--shard-kv-seq", action="store_true",
+                    help="with --mesh: also shard the gathered decode KV "
+                         "sequence over 'model' and merge via the "
+                         "LSE-combine collective")
     # --- per-request SamplingParams (applied to every demo request) ---
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples on-device")
@@ -77,12 +93,17 @@ def main():
         spec = SpecConfig(drafter=args.spec, k=args.spec_k,
                           k_max=args.spec_k)   # user cap: adaptive K can
         #                                        shrink below it, never exceed
+    mesh = None
+    if args.mesh > 1:
+        from repro.configs.base import MeshConfig
+        mesh = MeshConfig(model=args.mesh,
+                          shard_kv_seq=args.shard_kv_seq)
     scfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
                        sparse_decode=not args.dense, paged=args.paged,
                        block_size=args.block_size,
                        prefill_chunk=args.prefill_chunk,
                        policy=args.policy, spec=spec,
-                       attn_backend=args.attn_backend)
+                       attn_backend=args.attn_backend, mesh=mesh)
     eng = Engine(cfg, params, scfg)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p,
@@ -113,6 +134,10 @@ def main():
         out.update({"ttft_p99_ms": s["ttft_p99_ms"],
                     "tpot_p50_ms": s["tpot_p50_ms"],
                     "evictions": s["evictions"]})
+        if args.mesh > 1:
+            out["mesh"] = s["mesh"]
+            out["kv_pool_per_shard_bytes"] = \
+                s["kv_pool"]["per_shard_capacity_bytes"]
         if args.spec:
             out.update({
                 "spec_steps": s["spec_steps"],

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain_tp_exact
 from repro.models import layers, rope
 from repro.models.flash import (NEG_INF, _gqa_out, _gqa_scores,
                                 block_causal_attention,
@@ -150,6 +151,25 @@ def attn_decode(p, cfg: ModelConfig, x, cos, sin, cache: dict,
 # Paged attention: decode + chunked prefill read/write through block tables
 
 
+def _kv_seq_scope(seq_len: int):
+    """The active mesh IF single-token paged decode should route through
+    the LSE-combine collective: an activation_sharding_scope with
+    ``shard_kv_seq`` is active, the mesh has a real 'model' axis, and the
+    gathered logical sequence divides across it. Returns None otherwise
+    (the replicated/head-sharded reference path)."""
+    from repro.dist import sharding
+    scope = sharding.current_scope()
+    if scope is None or not scope[1].shard_kv_seq:
+        return None
+    mesh = scope[0]
+    if "model" not in mesh.axis_names:
+        return None
+    msize = mesh.shape["model"]
+    if msize <= 1 or seq_len % msize != 0:
+        return None
+    return mesh
+
+
 def _gather_paged(cache_leaf, tables, n_blocks: int):
     """[n_blocks, bs, Kv, Dh] gathered via tables i32[B, MB] ->
     [B, MB*bs, Kv, Dh]. Sentinel entries (== n_blocks) fill zeros; those
@@ -242,9 +262,22 @@ def attn_step_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
     kg = _read_paged(new_cache, "k", tables, n_blocks)    # [B, MBbs, Kv, Dh]
     vg = _read_paged(new_cache, "v", tables, n_blocks)
     if S == 1:
-        # single-token step: reference_attention keeps this bit-identical
-        # to the contiguous-cache decode (and GSPMD-shardable)
-        o = reference_attention(qg, kg, vg, causal=False, kv_len=lens + 1)
+        scope = _kv_seq_scope(kg.shape[1])
+        if scope is not None:
+            # sequence-sharded decode (ShardingPolicy.shard_kv_seq): the
+            # gathered logical sequence shards over 'model' and each
+            # device softmaxes only its local KV slice; the partials
+            # merge with the LSE-combine collective — no device ever
+            # materializes a row's full KV (the long-context layout).
+            from repro.dist.collectives import lse_combine_decode_attention
+            o = lse_combine_decode_attention(scope, qg[:, 0], kg, vg,
+                                             lens + 1)[:, None]
+        else:
+            # single-token step: reference_attention keeps this
+            # bit-identical to the contiguous-cache decode (and
+            # GSPMD-shardable)
+            o = reference_attention(qg, kg, vg, causal=False,
+                                    kv_len=lens + 1)
     else:
         # per-(row, position) causal mask: kv position t visible to query
         # j of row b iff t <= lens[b]+j. S is small, so full scores are
@@ -257,4 +290,9 @@ def attn_step_paged(p, cfg: ModelConfig, x, cos, sin, cache: dict,
         probs = jax.nn.softmax(s, axis=-1)
         o = jnp.moveaxis(_gqa_out(probs, vg), -2, 1).astype(x.dtype)
     o = o.reshape(B, S, cfg.n_heads * cfg.d_head)
-    return o @ p["wo"], new_cache
+    # bit-reproducible layout (exact_tp): gather the head-sharded o (a
+    # concatenation — exact), multiply by the output-sharded wo with a
+    # fully replicated contraction dim (no psum), gather the result;
+    # identity when no exact_tp scope is active
+    o = constrain_tp_exact(o)
+    return constrain_tp_exact(o @ p["wo"]), new_cache

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import sparsity
+from repro.dist.sharding import constrain_tp_exact
 from repro.models import layers
 
 
@@ -58,12 +59,19 @@ def ffn_step(p, cfg: ModelConfig, x, is_prefill, has_prefill: bool = True):
     exactly ``dense_ffn`` / ``gathered_sparse_ffn``, which is what keeps
     unified-step output token-identical to the split per-phase engines.
     """
+    # bit-reproducible layout (exact_tp, identity off-scope): the hidden
+    # activation all-gathers before the down-projection so the contraction
+    # runs over a replicated d_ff against the output-sharded w_down — a
+    # concatenation instead of a psum of partials (the sparse gather path
+    # is psum-free already; the dense branch is not without this)
     if not cfg.relu_sparse:
-        return ffn_forward(p, cfg, x)
+        return constrain_tp_exact(ffn_forward(p, cfg, x))
     if not has_prefill:
-        return ffn_decode(p, cfg, x)
+        return constrain_tp_exact(ffn_decode(p, cfg, x))
     h = sparsity.ffn_hidden(x, p["w_up"], "relu", p.get("w_gate"))
+    h = constrain_tp_exact(h)
     k = sparsity.active_fraction_to_k(cfg.d_ff, cfg.sparse_k_frac)
-    return jnp.where(is_prefill[:, None, None],
-                     sparsity.down_dense(h, p["w_down"]),
-                     sparsity.down_sparse(h, p["w_down"], k))
+    return constrain_tp_exact(
+        jnp.where(is_prefill[:, None, None],
+                  sparsity.down_dense(h, p["w_down"]),
+                  sparsity.down_sparse(h, p["w_down"], k)))

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.dist.sharding import constrain_residual, constrain_seq_gathered
+from repro.dist.sharding import (constrain_residual, constrain_seq_gathered,
+                                 constrain_tp_exact)
 from repro.models import attention, ffn, layers, moe, rope, ssm, xlstm
 
 
@@ -109,13 +110,20 @@ def block_step_paged(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
     if kind == "shared_attn":
         p = ctx["shared_params"]
     if kind in ("attn", "shared_attn", "moe"):
-        h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+        # exact_tp pins (identity off-scope): the norm outputs stay
+        # replicated so GSPMD can't back-propagate a d-sharded layout
+        # into the norm's mean reduction — a psum whose accumulation
+        # order would perturb the residual stream (and through int8 KV
+        # quantization rounding, the emitted tokens)
+        h = constrain_tp_exact(layers.rms_norm(x, p["norm1"],
+                                               cfg.norm_eps))
         a, new_cache = attention.attn_step_paged(
             p["attn"], cfg, h, ctx["cos"], ctx["sin"], cache, ctx["lens"],
             ctx["n_valid"], ctx["tables"], ctx["block_size"],
             backend=ctx["backend"])
         x = x + a
-        h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        h = constrain_tp_exact(layers.rms_norm(x, p["norm2"],
+                                               cfg.norm_eps))
         if kind == "moe":
             y, _ = moe.moe_forward(p["moe"], cfg, h)
         else:
@@ -430,7 +438,10 @@ def forward_step(params, cfg: ModelConfig, tokens, cache, n_valid,
     Returns (logits [B, S, V] — or [B, S, nc, V] for codebook models —
     and the updated cache).
     """
-    x = _embed_inputs(params, cfg, {"tokens": tokens})
+    # exact_tp: the embedding gather lands d-sharded (the table's output
+    # dim is partitioned); gather it back to replicated — an exact
+    # concatenation — before the residual stream starts
+    x = constrain_tp_exact(_embed_inputs(params, cfg, {"tokens": tokens}))
     B, S = x.shape[0], x.shape[1]
     lens = cache["lens"]
     positions = lens[:, None] + jnp.arange(S)[None, :]
@@ -463,7 +474,8 @@ def forward_step(params, cfg: ModelConfig, tokens, cache, n_valid,
 
     x, new_units = jax.lax.scan(unit_body, x,
                                 (params["units"], cache["units"]))
-    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x = constrain_tp_exact(
+        layers.rms_norm(x, params["final_norm"], cfg.norm_eps))
     logits = project_logits(params, cfg, x)
     return logits, {"lens": lens,
                     "block_tables": cache["block_tables"],

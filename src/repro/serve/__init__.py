@@ -1,3 +1,27 @@
+"""The serving subsystem: a production-style continuous-batching engine
+over ONE unified batched model step (docs/architecture.md).
+
+Public surface:
+
+  * ``engine.Engine`` — the front door: host-side policy (admission,
+    block accounting, speculation, sampling commit) over a
+    ``runner.ModelRunner``; configured entirely by ``ServeConfig``
+    (docs/serving.md).
+  * ``api.generate`` / ``api.StreamingServer`` — streaming interfaces.
+  * ``sampling.SamplingParams`` — the per-request decoding contract.
+  * ``runner.ModelRunner`` / ``StepBatch`` / ``StepOutput`` — the one
+    jitted step every phase rides (and, under ``ServeConfig.mesh``, the
+    mesh-aware sharding boundary — docs/sharding.md).
+  * ``paged_kv.PagedKVCache`` — refcounted block-pool bookkeeping
+    (share / copy-on-write / truncate / defrag).
+  * ``prefix_cache.RadixPrefixCache`` — radix index for cross-request
+    prefix sharing (match / publish-on-completion / LRU reclaim).
+  * ``scheduler.Scheduler`` / ``Request`` — admission, chunked prefill,
+    priorities, preemption-by-recompute.
+  * ``metrics.MetricsCollector`` — TTFT/TPOT percentiles, Table-II
+    traffic counters, pool/prefix/mesh gauges (``summary()``).
+"""
+
 from repro.serve import (api, engine, kv_cache, metrics,  # noqa: F401
                          paged_kv, prefix_cache, runner, sampling,
                          scheduler)

@@ -39,6 +39,24 @@ from repro.serve.scheduler import Request, SchedEntry, Scheduler, State
 
 
 class Engine:
+    """The serving front door: host-side policy over one ModelRunner.
+
+    Construct with a ModelConfig, its params, and a ServeConfig; submit
+    work with ``add_request(Request)`` (or the batch driver ``run``),
+    advance with ``step()`` — one tick = at most one batched device step
+    — and read results off ``Request.tokens_out`` / ``metrics.summary()``.
+    ``serve.api`` wraps this in a streaming interface.
+
+    All serving features compose behind ServeConfig flags: paged KV +
+    chunked prefill (``paged``), speculative decode (``spec``), radix
+    prefix cache (``prefix_cache``), int8 KV (``kv_quant``), pluggable
+    attention read path (``attn_backend``), and multi-device sharded
+    serving (``mesh`` — weights + KV-head-sharded block pool over the
+    'model' axis, greedy-token-identical to single-device). The engine
+    itself stays a pure host-side scheduler in every combination: device
+    work happens only inside ModelRunner.
+    """
+
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
                  drafter=None, draft_params=None):
         """``scfg.spec`` turns on speculative decode (paged mode only).
@@ -74,6 +92,12 @@ class Engine:
             raise ValueError(
                 f"{cfg.name}: prefix caching keys on plain token-id "
                 f"streams (no codebooks / M-RoPE)")
+        if scfg.mesh is not None and scfg.mesh.n_devices > 1 \
+                and not scfg.paged:
+            raise ValueError(
+                "sharded serving (ServeConfig.mesh) requires the paged "
+                "engine (paged=True) — the legacy slot path is the "
+                "single-device equivalence baseline")
         if scfg.paged:
             self._init_paged(drafter, draft_params)
         else:
@@ -105,6 +129,7 @@ class Engine:
         if self.scfg.paged:
             self.metrics.pool = self.pool
             self.metrics.prefix = self.prefix
+            self.metrics.mesh = self._mesh_summary()
             self.pool.reset_counters()
             if self.prefix is not None:
                 self.prefix.reset_counters()
@@ -257,10 +282,21 @@ class Engine:
             from repro.serve.prefix_cache import RadixPrefixCache
             self.prefix = RadixPrefixCache(self.pool)  # sets pool.index
         self.sched = Scheduler(scfg, self.pool, prefix=self.prefix)
+        self.mesh = self._make_mesh()
+        if self.mesh is not None:
+            # KV heads shard over 'model' only when they divide; weights
+            # shard independently (largest divisible dim), so an
+            # indivisible head count degrades the POOL to replicated
+            # without turning sharded serving off
+            msize = self.mesh.shape["model"]
+            self.pool.model_shards = \
+                msize if self.cfg.n_kv_heads % msize == 0 else 1
         self.metrics.pool = self.pool
         self.metrics.prefix = self.prefix
+        self.metrics.mesh = self._mesh_summary()
         self.runner = ModelRunner(self.model, self.params, scfg,
-                                  dtype=jnp.float32)
+                                  dtype=jnp.float32, mesh=self.mesh,
+                                  policy=self._policy)
         self._kv_per_tok = paged_kv.kv_bytes_per_token(self.cfg,
                                                        scfg.kv_quant)
         if self.spec is not None:
@@ -282,6 +318,39 @@ class Engine:
                 scfg) if hasattr(self.drafter, "weight_bytes_per_step") \
                 else 0.0
             self._draft_steps_seen = 0
+
+    def _make_mesh(self):
+        """Materialize ServeConfig.mesh into a jax Mesh + ShardingPolicy
+        (None/None when unsharded). The mesh threads engine -> runner;
+        everything host-side (scheduler, pool, prefix index) never sees
+        it — block accounting is shard-agnostic by construction."""
+        self._policy = None
+        mcfg = self.scfg.mesh
+        if mcfg is None or mcfg.n_devices <= 1:
+            return None
+        if mcfg.data > 1:
+            raise ValueError(
+                "MeshConfig.data > 1 is reserved: the serving runner "
+                "does not batch-shard step inputs yet, so extra data-"
+                "axis devices would only replicate identical work")
+        from repro.dist.sharding import ShardingPolicy
+        from repro.launch.mesh import make_serving_mesh
+        # exact_tp: the bit-reproducible layout (all collectives are
+        # concatenations) — what makes sharded greedy token-identical to
+        # single-device even through int8 KV quantization rounding
+        self._policy = ShardingPolicy(shard_kv_seq=mcfg.shard_kv_seq,
+                                      exact_tp=True)
+        return make_serving_mesh(mcfg)
+
+    def _mesh_summary(self) -> dict:
+        if getattr(self, "mesh", None) is None:
+            return {}
+        from repro.launch.mesh import mesh_info
+        info = mesh_info(self.mesh)
+        info["kv_pool_shards"] = self.pool.model_shards
+        info["shard_kv_seq"] = bool(self._policy
+                                    and self._policy.shard_kv_seq)
+        return info
 
     def _submit_paged(self, req: Request) -> bool:
         if not self.sched.submit(req):

@@ -127,6 +127,7 @@ class MetricsCollector:
         # live gauges (set by the paged engine; None on the legacy path)
         self.pool = None             # PagedKVCache — block-pool pressure
         self.prefix = None           # RadixPrefixCache — index counters
+        self.mesh = {}               # sharded serving: launch.mesh info
         # --- speculative decode (repro.spec) ---
         self.spec_steps = 0          # verify passes
         self.spec_drafted = 0        # draft tokens proposed
@@ -249,4 +250,7 @@ class MetricsCollector:
             "kv_pool": self.pool.stats() if self.pool is not None else {},
             "prefix_index": (self.prefix.stats()
                              if self.prefix is not None else {}),
+            # --- sharded serving (ServeConfig.mesh): axes + shard count,
+            # {} on a single device ---
+            "mesh": self.mesh,
         }

@@ -66,6 +66,10 @@ class PagedKVCache:
     max_batch: int
     max_blocks_per_seq: int
     int8_kv: bool = False
+    # KV-head shards of the device pool ('model' mesh axis). Bookkeeping
+    # here is per-BLOCK and shard-agnostic — this factor only scales the
+    # byte gauges to what one device actually holds (stats()).
+    model_shards: int = 1
 
     def __post_init__(self):
         self.free: List[int] = list(range(self.n_blocks))
@@ -337,7 +341,16 @@ class PagedKVCache:
         return 1.0 - best / len(runs)
 
     def stats(self) -> dict:
+        """Pool-pressure snapshot for metrics.summary()["kv_pool"]: sizes,
+        byte gauges (global AND per-shard under sharded serving), event
+        counters since the last reset_counters(), high-water mark, and
+        free-list fragmentation."""
         return {"n_blocks": self.n_blocks, "n_free": self.n_free,
+                "model_shards": self.model_shards,
+                "per_shard_used_bytes":
+                    self.used_bytes() / self.model_shards,
+                "per_shard_capacity_bytes":
+                    self.capacity_bytes() / self.model_shards,
                 "n_free_list": len(self.free),
                 "n_reclaimable": self.n_reclaimable,
                 "n_used": self.n_used, "used_bytes": self.used_bytes(),

@@ -23,6 +23,19 @@ The attention read path is pluggable (``ServeConfig.attn_backend``):
 kernel (kernels.decode_attn.paged_attention), which covers every row
 width of the unified step — single-token decode, K+1 verify, and
 prefill chunks — with per-row causal masking resolved in-kernel.
+
+Sharded serving (``mesh`` + ``policy``): the runner is the mesh-aware
+boundary. Weights shard over the 'model' axis (dist.sharding.
+params_shardings), the paged block pool shards its KV-HEAD axis
+(cache_shardings with paged=True), and ``step`` stays ONE jitted entry
+whose inputs are committed sharded arrays and whose out_shardings pin
+the cache layout stable across ticks. Everything above (engine,
+scheduler, paged_kv, prefix cache) sees exactly the same host-side
+world as on one device — block ids, refcounts, COW pairs and tables are
+global, only the device bytes behind them are partitioned. With
+``policy.shard_kv_seq`` single-token decode attention additionally
+shards the gathered KV sequence and merges partial softmaxes via the
+LSE-combine collective (dist.collectives).
 """
 
 from __future__ import annotations
@@ -35,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.dist import sharding as shd
 
 # row phases (StepBatch.phase values)
 IDLE, PREFILL, DECODE, VERIFY = 0, 1, 2, 3
@@ -105,7 +119,12 @@ class ModelRunner:
     a StepBatch per tick and calls ``step``."""
 
     def __init__(self, model, params, scfg: ServeConfig,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, mesh=None, policy=None):
+        """``mesh``/``policy`` (a jax Mesh + dist.sharding.ShardingPolicy)
+        turn on sharded serving: params and the paged pool are device_put
+        to their mesh shardings here, and every compiled step pins them
+        via out_shardings. Single-device serving passes neither and pays
+        nothing."""
         cfg: ModelConfig = model.cfg
         if scfg.attn_backend not in BACKENDS:
             raise ValueError(f"unknown attn_backend "
@@ -114,13 +133,34 @@ class ModelRunner:
             raise ValueError(
                 "attn_backend='flash' reads fp block pools; int8 KV "
                 "(kv_quant) needs the naive dequantizing gather")
+        if mesh is not None and scfg.attn_backend != "naive":
+            raise ValueError(
+                "sharded serving (ServeConfig.mesh) needs the GSPMD-"
+                "shardable attn_backend='naive' read path; the Pallas "
+                "flash kernel addresses one device's pool")
         self.model = model
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
+        self.mesh = mesh
+        self.policy = policy if policy is not None else shd.ShardingPolicy()
         self.cache = model.init_paged_cache(
             scfg.max_batch, scfg.pool_blocks, scfg.block_size,
             scfg.blocks_per_seq, dtype, int8_kv=scfg.kv_quant)
+        self._cache_shardings = None
+        self._repl = None
+        if mesh is not None:
+            self.params = jax.device_put(
+                params, shd.params_shardings(params, cfg, mesh,
+                                             self.policy))
+            csh = shd.cache_shardings(cfg, mesh, scfg.max_batch,
+                                      policy=self.policy, paged=True)
+            self._cache_shardings = jax.tree_util.tree_map_with_path(
+                csh, self.cache)
+            self.cache = jax.tree.map(jax.device_put, self.cache,
+                                      self._cache_shardings)
+            self._repl = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
         self.buckets = sorted({1, scfg.prefill_chunk}
                               | ({scfg.spec.k_max + 1}
                                  if scfg.spec is not None else set()))
@@ -151,6 +191,7 @@ class ModelRunner:
         if fn is None:
             mdl, bs = self.model, self.scfg.block_size
             backend = self.scfg.attn_backend
+            mesh, policy = self.mesh, self.policy
 
             def run(params, tokens, cache, n_valid, is_prefill):
                 logits, cache = mdl.forward_step(
@@ -161,7 +202,24 @@ class ModelRunner:
                 last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
                 return logits, last, cache
 
-            fn = self._fns[key] = jax.jit(run)
+            if mesh is not None:
+                # trace under the activation-sharding scope (model code
+                # consults it for the seq-sharded LSE decode path) and pin
+                # the cache's layout so it never drifts across ticks;
+                # logits come back replicated — sampling and the verify
+                # chain read them host-side.
+                base = run
+
+                def run(params, tokens, cache, n_valid, is_prefill):
+                    with shd.activation_sharding_scope(mesh, policy):
+                        return base(params, tokens, cache, n_valid,
+                                    is_prefill)
+
+                fn = jax.jit(run, out_shardings=(
+                    self._repl, self._repl, self._cache_shardings))
+            else:
+                fn = jax.jit(run)
+            self._fns[key] = fn
         return fn
 
     def step(self, batch: StepBatch) -> StepOutput:
@@ -180,23 +238,38 @@ class ModelRunner:
     # --- block maintenance --------------------------------------------------
     def apply_perm(self, perm: np.ndarray) -> None:
         """Apply a pool defrag permutation to the device block pools
-        (new storage row i = old row perm[i])."""
+        (new storage row i = old row perm[i]). Block ids are GLOBAL under
+        sharding — the gather runs along the unsharded block axis, so
+        every shard permutes its local head slice identically."""
         p = jnp.asarray(perm)
         self.cache["units"] = jax.tree.map(
             lambda a: jnp.take(a, p, axis=1), self.cache["units"])
+        self._pin_cache_sharding()
 
     def copy_blocks(self, pairs) -> None:
         """Copy-on-write: duplicate pool storage rows src -> dst across
         every layer's block pools (all leaves, int8 scales included).
         The host side (paged_kv.cow_for_write) already rewrote the block
         table; this mirrors the bytes so the writer's private copy starts
-        bit-identical to the shared original."""
+        bit-identical to the shared original. Like apply_perm, this is a
+        block-axis op: under sharding each device copies its own head
+        slice of the block — no cross-device traffic."""
         if not pairs:
             return
         src = jnp.asarray([p[0] for p in pairs], jnp.int32)
         dst = jnp.asarray([p[1] for p in pairs], jnp.int32)
         self.cache["units"] = jax.tree.map(
             lambda a: a.at[:, dst].set(a[:, src]), self.cache["units"])
+        self._pin_cache_sharding()
+
+    def _pin_cache_sharding(self) -> None:
+        """Re-commit the pool leaves to their mesh shardings after an
+        eager block-maintenance op (a no-op when GSPMD already kept the
+        layout, and on single-device runners)."""
+        if self._cache_shardings is not None:
+            self.cache["units"] = jax.tree.map(
+                jax.device_put, self.cache["units"],
+                self._cache_shardings["units"])
 
 
 __all__ = ["BACKENDS", "DECODE", "IDLE", "ModelRunner", "PREFILL",

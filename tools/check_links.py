@@ -1,0 +1,65 @@
+"""Intra-repo markdown link check (CI gate for README + docs/).
+
+Scans the given markdown files (default: README.md and docs/*.md) for
+``[text](target)`` links, resolves every non-URL target against the
+file's directory (and the repo root as a fallback for absolute-ish
+paths), and exits 1 listing the dead ones. External http(s)/mailto links
+and pure #anchors are skipped — this gate is about the repo's own docs
+tree never pointing at files that moved or were renamed.
+
+Run: python tools/check_links.py [file.md ...]
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — target up to the first unescaped ')'; tolerate titles
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(path: str) -> list:
+    dead = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        cand = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(cand) \
+                and not os.path.exists(os.path.join(REPO, rel)):
+            line = text[:m.start()].count("\n") + 1
+            dead.append((path, line, target))
+    return dead
+
+
+def main() -> None:
+    files = sys.argv[1:]
+    if not files:
+        files = [os.path.join(REPO, "README.md")] \
+            + sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
+    dead = []
+    n = 0
+    for path in files:
+        n += 1
+        dead.extend(check_file(path))
+    for path, line, target in dead:
+        print(f"{os.path.relpath(path, REPO)}:{line}: dead link -> "
+              f"{target}")
+    if dead:
+        raise SystemExit(1)
+    print(f"checked {n} files: all intra-repo links resolve")
+
+
+if __name__ == "__main__":
+    main()
