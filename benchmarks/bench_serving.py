@@ -32,13 +32,16 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import ServeConfig
+from repro.configs.base import ObsConfig, ServeConfig
 from repro.models import Model
+from repro.obs import write_perfetto
 from repro.serve.engine import Engine
 from repro.serve.scheduler import Request
 
 _DIR = os.path.dirname(os.path.abspath(__file__))
 ART = os.path.join(_DIR, "BENCH_serving.json")
+ART_TRACE = os.path.join(_DIR, "TRACE_serving.trace.json")
+ART_TRACE_QUICK = os.path.join(_DIR, "TRACE_serving_quick.trace.json")
 ART_QUICK = os.path.join(_DIR, "BENCH_serving_quick.json")
 ART_SWEEP = os.path.join(_DIR, "BENCH_sweep.json")
 ART_SWEEP_QUICK = os.path.join(_DIR, "BENCH_sweep_quick.json")
@@ -109,14 +112,18 @@ def run_trace(eng: Engine, trace):
 
 
 def bench_engine(cfg, params, paged: bool, seed=0, n_requests=N_REQUESTS,
-                 max_new=MAX_NEW, shared_prefix_frac=0.0):
+                 max_new=MAX_NEW, shared_prefix_frac=0.0, obs=False):
     # shared-prefix traffic lengthens prompts (sys prompt + tail) and, on
     # the paged engine, turns the radix prefix cache on — the system
-    # prompt should cost its prefill once, not per request
+    # prompt should cost its prefill once, not per request. ``obs``
+    # enables repro.obs tracing: the summary then carries per-tick
+    # host/device attribution and pad-waste (the reset_metrics() below
+    # restarts the trace window with the measurement window).
     scfg = ServeConfig(max_batch=4,
                        max_seq=128 if shared_prefix_frac > 0 else 96,
                        paged=paged, block_size=8, prefill_chunk=16,
-                       prefix_cache=paged and shared_prefix_frac > 0)
+                       prefix_cache=paged and shared_prefix_frac > 0,
+                       obs=ObsConfig(enabled=True) if obs else ObsConfig())
     eng = Engine(cfg, params, scfg)
     # warm the decode jit (both modes) so compile time isn't billed to the
     # trace; per-prompt-length prefill re-jits stay billed to the seed
@@ -124,9 +131,10 @@ def bench_engine(cfg, params, paged: bool, seed=0, n_requests=N_REQUESTS,
     warm = Request(rid=-1, prompt=np.arange(4, dtype=np.int32), max_new=2)
     eng.run([warm], max_steps=50)
     eng.reset_metrics()
-    return run_trace(eng, make_trace(cfg, seed, n_requests=n_requests,
-                                     max_new=max_new,
-                                     shared_prefix_frac=shared_prefix_frac))
+    s = run_trace(eng, make_trace(cfg, seed, n_requests=n_requests,
+                                  max_new=max_new,
+                                  shared_prefix_frac=shared_prefix_frac))
+    return s, eng
 
 
 SWEEP_BATCHES = (2, 4, 8)
@@ -255,13 +263,21 @@ def run(quick: bool = False, shared_prefix_frac: float = 0.0):
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    seed_s = bench_engine(cfg, params, paged=False, n_requests=n_requests,
-                          max_new=max_new,
-                          shared_prefix_frac=shared_prefix_frac)
-    paged_s = bench_engine(cfg, params, paged=True, n_requests=n_requests,
-                           max_new=max_new,
-                           shared_prefix_frac=shared_prefix_frac)
+    seed_s, _ = bench_engine(cfg, params, paged=False,
+                             n_requests=n_requests, max_new=max_new,
+                             shared_prefix_frac=shared_prefix_frac)
+    # obs on the paged run: the ROADMAP's async-engine item needs a bench
+    # separating host overhead per tick from device time per tick — these
+    # are the columns that gate it (repro.obs; docs/observability.md)
+    paged_s, paged_eng = bench_engine(
+        cfg, params, paged=True, n_requests=n_requests, max_new=max_new,
+        shared_prefix_frac=shared_prefix_frac, obs=True)
     speedup = paged_s["tokens_per_s"] / max(seed_s["tokens_per_s"], 1e-9)
+    ticks = paged_s.get("ticks") or {}
+
+    trace_path = ART_TRACE_QUICK if quick else ART_TRACE
+    write_perfetto(paged_eng.tracer, trace_path,
+                   registry=paged_eng.metrics.registry)
 
     report = {
         "trace": {"n_requests": n_requests, "max_new": max_new,
@@ -272,6 +288,7 @@ def run(quick: bool = False, shared_prefix_frac: float = 0.0):
         "seed_engine": seed_s,
         "paged_engine": paged_s,
         "tokens_per_s_speedup": speedup,
+        "perfetto_trace": os.path.basename(trace_path),
     }
     # quick (CI smoke) runs must not clobber the committed full-trace
     # artifact the README cites
@@ -286,6 +303,14 @@ def run(quick: bool = False, shared_prefix_frac: float = 0.0):
                      f"p99_ttft_ms={s['ttft_p99_ms']:.0f};"
                      f"p50_ttft_ms={s['ttft_p50_ms']:.0f};"
                      f"evictions={s['evictions']}"))
+    if ticks.get("n_ticks"):
+        rows.append((
+            "serving_tick_attribution", 0.0,
+            f"host_ms_per_tick={ticks['host_ms_per_tick']:.2f};"
+            f"device_ms_per_tick={ticks['device_ms_per_tick']:.2f};"
+            f"pad_waste_frac={ticks['pad_waste_frac']:.3f}"))
+    # the speedup stays the LAST row: benchmarks.run's quick index takes
+    # the final row as the suite's acceptance headline
     rows.append(("serving_paged_speedup", 0.0,
                  f"tokens_per_s_ratio={speedup:.2f}x;target>=1.5x"))
     return rows

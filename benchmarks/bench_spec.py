@@ -24,7 +24,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import ServeConfig, SpecConfig
+from repro.configs.base import ObsConfig, ServeConfig, SpecConfig
 from repro.models import Model
 from repro.serve.engine import Engine
 from repro.serve.scheduler import Request
@@ -57,7 +57,10 @@ def bench_engine(cfg, params, spec, reqs, scfg_kw, repeats: int = 1):
     """Run the trace ``repeats`` times on one warmed engine config and
     keep the fastest run (tokens/s is wall-clock and shared CPU hosts are
     noisy; acceptance counters are deterministic across repeats)."""
-    scfg = ServeConfig(spec=spec, **scfg_kw)
+    # tracing on BOTH runs (same fencing overhead both sides, so the
+    # speedup ratio stays fair): the per-phase columns attribute a
+    # regression to draft host cost vs verify device cost
+    scfg = ServeConfig(spec=spec, obs=ObsConfig(enabled=True), **scfg_kw)
     best = None
     for _ in range(max(repeats, 1)):
         eng = Engine(cfg, params, scfg)
@@ -116,12 +119,18 @@ def run(quick: bool = False):
 
     rows = []
     for name, s in (("paged_baseline", base), ("ngram", spec)):
+        ticks = s.get("ticks") or {}
+        phases = s.get("phase_ms_per_tick") or {}
         rows.append((f"spec_{name}",
                      s["wall_s"] / max(s["generated_tokens"], 1) * 1e6,
                      f"tok_s={s['decode_tokens_per_s']:.1f};"
                      f"verify_steps={s['spec_steps']};"
                      f"accept={s['spec_acceptance_rate']:.2f};"
-                     f"tok_per_verify={s['spec_tokens_per_verify']:.2f}"))
+                     f"tok_per_verify={s['spec_tokens_per_verify']:.2f};"
+                     f"host_ms={ticks.get('host_ms_per_tick', 0) or 0:.2f};"
+                     f"device_ms="
+                     f"{ticks.get('device_ms_per_tick', 0) or 0:.2f};"
+                     f"draft_ms={phases.get('draft', 0.0):.2f}"))
     rows.append(("spec_ngram_speedup", 0.0,
                  f"tokens_per_s_ratio={speedup:.2f}x;target>=1.5x"))
     return rows

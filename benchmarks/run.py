@@ -37,6 +37,10 @@ QUICK_SUITES = ["bench_serving", "bench_spec", "bench_prefix"]
 QUICK_ARTIFACTS = {"bench_serving": "BENCH_serving_quick.json",
                    "bench_spec": "BENCH_spec_quick.json",
                    "bench_prefix": "BENCH_prefix_quick.json"}
+# extra per-suite artifacts referenced from the quick index (the
+# Perfetto trace bench_serving writes alongside its summary; uploaded
+# as a CI artifact by the bench-smoke job)
+QUICK_EXTRAS = {"bench_serving": "TRACE_serving_quick.trace.json"}
 
 
 def write_quick_index(results: dict) -> None:
@@ -49,6 +53,7 @@ def write_quick_index(results: dict) -> None:
     index = {}
     for suite, rows in results.items():
         art = QUICK_ARTIFACTS.get(suite)
+        extra = QUICK_EXTRAS.get(suite)
         index[suite] = {
             "file": art if art and os.path.exists(os.path.join(_DIR, art))
             else None,
@@ -56,6 +61,8 @@ def write_quick_index(results: dict) -> None:
             "headline_metric": rows[-1][2] if rows else None,
             "rows": {name: derived for name, _, derived in rows},
         }
+        if extra and os.path.exists(os.path.join(_DIR, extra)):
+            index[suite]["trace"] = extra
     with open(ART_INDEX, "w") as f:
         json.dump(index, f, indent=1)
     print(f"# wrote {ART_INDEX}", file=sys.stderr)

@@ -193,6 +193,44 @@ class SpecConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Tracing & telemetry (repro.obs).
+
+    Disabled by default: with ``enabled=False`` every instrumentation
+    hook in the engine/runner resolves to a shared no-op singleton
+    (repro.obs.trace.NULL_TRACER) — no span objects are allocated, no
+    device fences are inserted, and the hot tick path pays only a
+    handful of no-op attribute calls (asserted < 2% of tick time in
+    tier-1).
+
+    With ``enabled=True`` the engine records:
+
+      * per-tick PHASE SPANS (schedule -> draft -> batch-assemble ->
+        device-dispatch -> device-wait -> sample-sync -> postprocess),
+        with ``block_until_ready`` fencing between dispatch and wait so
+        host-overhead-per-tick and device-time-per-tick are separately
+        attributable, plus per-row-kind (prefill/decode/verify) and
+        padding-waste breakdowns per tick;
+      * per-request LIFECYCLE EVENTS (arrival, admission, prefix hit,
+        prefill chunks, first token, preemption/replay, spec
+        verify/rollback, COW, finish) — one timeline per request.
+
+    Exporters (repro.obs.export): Chrome-trace/Perfetto JSON, JSONL
+    structured event log, Prometheus text (the metrics registry is
+    always live, tracing on or off)."""
+
+    enabled: bool = False
+    tick_spans: bool = True         # per-tick phase spans
+    timeline: bool = True           # per-request lifecycle events
+    fence_device: bool = True       # block_until_ready between dispatch
+    #                                 and wait (host/device attribution)
+    jax_annotations: bool = False   # also emit jax.profiler
+    #                                 TraceAnnotations per span
+    max_events: int = 262_144       # storage bound: spans+events beyond
+    #                                 this are counted (dropped), not kept
+
+
+@dataclasses.dataclass(frozen=True)
 class MeshConfig:
     """Device mesh for sharded serving (paged engine only).
 
@@ -258,6 +296,11 @@ class ServeConfig:
     # and the KV block pool's head axis over the mesh's 'model' axis;
     # greedy output stays token-identical to the single-device engine
     mesh: Optional[MeshConfig] = None
+    # tracing & telemetry (repro.obs): per-tick phase spans, request
+    # lifecycle timelines, Perfetto/JSONL/Prometheus exporters. The
+    # default is a no-op tracer; greedy output is token-identical
+    # tracing on or off (tracing only observes, never schedules)
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
 
     @property
     def blocks_per_seq(self) -> int:

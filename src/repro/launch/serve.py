@@ -67,6 +67,19 @@ def main():
                     help="with --mesh: also shard the gathered decode KV "
                          "sequence over 'model' and merge via the "
                          "LSE-combine collective")
+    # --- observability (repro.obs; docs/observability.md) ---
+    ap.add_argument("--obs", action="store_true",
+                    help="enable tracing & telemetry (per-tick phase "
+                         "spans, request timelines, host/device "
+                         "attribution in the output)")
+    ap.add_argument("--trace-out", default=None, metavar="PREFIX",
+                    help="write PREFIX.trace.json (Perfetto/Chrome "
+                         "trace — open at https://ui.perfetto.dev) and "
+                         "PREFIX.events.jsonl (structured log); "
+                         "implies --obs")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="serve Prometheus text metrics on GET "
+                         ":PORT/metrics from a daemon thread")
     # --- per-request SamplingParams (applied to every demo request) ---
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples on-device")
@@ -98,13 +111,23 @@ def main():
         from repro.configs.base import MeshConfig
         mesh = MeshConfig(model=args.mesh,
                           shard_kv_seq=args.shard_kv_seq)
+    obs = None
+    if args.obs or args.trace_out:
+        from repro.configs.base import ObsConfig
+        obs = ObsConfig(enabled=True)
     scfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
                        sparse_decode=not args.dense, paged=args.paged,
                        block_size=args.block_size,
                        prefill_chunk=args.prefill_chunk,
                        policy=args.policy, spec=spec,
-                       attn_backend=args.attn_backend, mesh=mesh)
+                       attn_backend=args.attn_backend, mesh=mesh,
+                       **({"obs": obs} if obs is not None else {}))
     eng = Engine(cfg, params, scfg)
+    if args.metrics_port:
+        from repro.obs import start_metrics_server
+        start_metrics_server(lambda: eng.metrics.registry,
+                             args.metrics_port)
+        print(f"[serve] metrics on :{args.metrics_port}/metrics")
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p,
                         repetition_penalty=args.repetition_penalty,
@@ -143,6 +166,14 @@ def main():
                 "spec_steps": s["spec_steps"],
                 "spec_acceptance_rate": s["spec_acceptance_rate"],
                 "spec_tokens_per_verify": s["spec_tokens_per_verify"]})
+    if eng.tracer.enabled:
+        out["ticks"] = eng.tracer.tick_summary()
+    if args.trace_out:
+        from repro.obs import write_jsonl, write_perfetto
+        trace = write_perfetto(eng.tracer, args.trace_out + ".trace.json",
+                               registry=eng.metrics.registry)
+        events = write_jsonl(eng.tracer, args.trace_out + ".events.jsonl")
+        out["trace_files"] = [trace, events]
     print(json.dumps(out, indent=1))
 
 

@@ -1,0 +1,39 @@
+"""Tracing & telemetry for the serving stack (docs/observability.md).
+
+NeCTAr's evaluation attributes time and traffic to the right unit —
+near-core vs near-memory accelerator, weight bytes vs KV bytes. This
+package is the same discipline at the software level: every engine tick
+is decomposed into phase spans with host/device attribution, every
+request carries a lifecycle timeline, and every subsystem's counters
+live in one registry that all exporters read.
+
+  trace     Tracer / NULL_TRACER: per-tick phase spans (schedule ->
+            draft -> batch_assemble -> device_dispatch -> device_wait ->
+            sample_sync -> postprocess), request lifecycle events,
+            per-tick host/device/padding aggregates. Disabled mode is a
+            shared no-op singleton — near-zero overhead, asserted in
+            tier-1.
+  registry  Counter/Gauge/Histogram registry: the shared substrate
+            engine, scheduler, pool, prefix cache, and spec metrics
+            register into; metrics.summary() and every exporter read
+            from it.
+  export    Perfetto/Chrome-trace JSON (one lane per engine phase, one
+            per request), JSONL structured log, Prometheus text +
+            scrape endpoint (launch.serve --metrics-port/--trace-out).
+
+Turn on with ``ServeConfig(obs=ObsConfig(enabled=True))``; greedy
+output is token-identical tracing on or off (tracing observes, never
+schedules).
+"""
+
+from repro.obs.export import (perfetto_trace, start_metrics_server,
+                              write_jsonl, write_perfetto)
+from repro.obs.registry import Counter, Gauge, Histogram, Registry
+from repro.obs.trace import (NULL_TRACER, Event, NullTracer, Span, Tracer,
+                             make_tracer)
+
+__all__ = [
+    "Counter", "Event", "Gauge", "Histogram", "NULL_TRACER", "NullTracer",
+    "Registry", "Span", "Tracer", "make_tracer", "perfetto_trace",
+    "start_metrics_server", "write_jsonl", "write_perfetto",
+]

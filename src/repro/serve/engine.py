@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models import Model
+from repro.obs import make_tracer
 from repro.serve import kv_cache, metrics as metrics_mod, paged_kv, sampling
 from repro.serve.metrics import StepStats  # noqa: F401  (compat re-export)
 from repro.serve.runner import DECODE, PREFILL, VERIFY, ModelRunner
@@ -67,7 +68,13 @@ class Engine:
         self.scfg = scfg
         self.model = Model(cfg)
         self.params = params
+        # tracing & telemetry (repro.obs): NULL_TRACER unless
+        # ObsConfig(enabled=True) — the instrumented tick path below
+        # calls through unconditionally, and the null tracer makes
+        # every hook a shared no-op (overhead asserted in tier-1)
+        self.tracer = make_tracer(scfg.obs)
         self.metrics = metrics_mod.MetricsCollector(cfg, scfg)
+        self.metrics.tracer = self.tracer
         self._requests: Dict[int, Request] = {}
         self._rids = itertools.count()
         self.spec = scfg.spec
@@ -126,6 +133,8 @@ class Engine:
         measurement window — pool STATE (blocks, refcounts, the radix
         tree itself) is untouched."""
         self.metrics = metrics_mod.MetricsCollector(self.cfg, self.scfg)
+        self.metrics.tracer = self.tracer
+        self.tracer.reset()            # same window as the collector
         if self.scfg.paged:
             self.metrics.pool = self.pool
             self.metrics.prefix = self.prefix
@@ -198,10 +207,14 @@ class Engine:
             getattr(self, "_accept_rngs", {}).pop(rid, None)
 
     def step(self) -> List[int]:
-        """One engine tick; returns the rids that finished this tick."""
-        if self.scfg.paged:
-            return self._tick_paged()
-        return self._step_slots()
+        """One engine tick; returns the rids that finished this tick.
+        Under tracing (ServeConfig.obs) the whole tick runs inside a
+        ``tick`` span whose exit folds host/device attribution into
+        ``tracer.tick_stats``."""
+        with self.tracer.tick():
+            if self.scfg.paged:
+                return self._tick_paged()
+            return self._step_slots()
 
     # ------------------------------------------------------------------
     # sampling plumbing (shared by both modes)
@@ -296,7 +309,7 @@ class Engine:
         self.metrics.mesh = self._mesh_summary()
         self.runner = ModelRunner(self.model, self.params, scfg,
                                   dtype=jnp.float32, mesh=self.mesh,
-                                  policy=self._policy)
+                                  policy=self._policy, tracer=self.tracer)
         self._kv_per_tok = paged_kv.kv_bytes_per_token(self.cfg,
                                                        scfg.kv_quant)
         if self.spec is not None:
@@ -356,7 +369,9 @@ class Engine:
         if not self.sched.submit(req):
             return False                       # queue full: shed load
         self._requests[req.rid] = req
-        self.metrics.on_arrival(req.rid, len(np.asarray(req.prompt)))
+        n_prompt = len(np.asarray(req.prompt))
+        self.metrics.on_arrival(req.rid, n_prompt)
+        self.tracer.event(req.rid, "arrival", prompt_len=n_prompt)
         return True
 
     def _ensure_blocks(self, e: SchedEntry, upto_len: int) -> str:
@@ -376,6 +391,8 @@ class Engine:
                         f"request of {upto_len} tokens")
                 return "defer"
             self.metrics.on_preemption(victim.req.rid)
+            self.tracer.event(victim.req.rid, "preempted",
+                              by=e.req.rid, at_tokens=victim.ctx_len)
             self.sched.preempt(victim)
         return "ok"
 
@@ -407,6 +424,7 @@ class Engine:
         if status != "stop":
             if first:
                 self.metrics.on_first_token(e.req.rid)
+                self.tracer.event(e.req.rid, "first_token")
             else:
                 self.metrics.on_token(e.req.rid)
         if status != "ok":
@@ -423,55 +441,67 @@ class Engine:
           4. one batched sample + host-side commit (acceptance, stops).
         """
         finished: List[int] = []
-        for e in self.sched.admit():
-            self._seed_presence(e.slot, e.req)
-            if self.prefix is not None \
-                    and not e.req.sampling.prompt_logprobs:
-                # prompt_logprobs requests never consult the index (the
-                # scheduler skips the match) — counting them as misses
-                # would diverge from the index's own hit-rate counters
-                self.metrics.on_prefix_lookup(e.req.rid, e.cached_len)
-        spec = self.spec
-        S_spec = spec.k_max + 1 if spec is not None else 0
-        K = 0
-        if spec is not None:
-            K = self.kctl.k if spec.adaptive else min(spec.k, spec.k_max)
-
-        # ---- 1) capacity resolution -----------------------------------
-        prefill_plan: List[Tuple[SchedEntry, int, int]] = []
-        for e in self.sched.prefill_entries():
-            if e.req.rid not in self.sched.active:
-                continue                       # evicted making room above
-            total = len(e.prefill_tokens())
-            valid = min(self.scfg.prefill_chunk, total - e.pos)
-            st = self._ensure_blocks(e, e.pos + valid)
-            if st == "never":
-                self._finish(e, finished)      # prompt can't fit: give up
-            elif st == "ok":
-                prefill_plan.append((e, e.pos, valid))
-        deferred = set()
-        for e in list(self.sched.decode_entries()):
-            if e.req.rid not in self.sched.active:
-                continue
+        tr = self.tracer
+        with tr.span("schedule"):
+            with tr.span("admit"):
+                for e in self.sched.admit():
+                    self._seed_presence(e.slot, e.req)
+                    tr.event(e.req.rid, "admitted", slot=e.slot,
+                             cached=e.cached_len, replay=e.replay)
+                    if self.prefix is not None \
+                            and not e.req.sampling.prompt_logprobs:
+                        # prompt_logprobs requests never consult the index
+                        # (the scheduler skips the match) — counting them
+                        # as misses would diverge from the index's own
+                        # hit-rate counters
+                        self.metrics.on_prefix_lookup(e.req.rid,
+                                                      e.cached_len)
+                        if e.cached_len > 0:
+                            tr.event(e.req.rid, "prefix_hit",
+                                     cached_tokens=e.cached_len)
+            spec = self.spec
+            S_spec = spec.k_max + 1 if spec is not None else 0
+            K = 0
             if spec is not None:
-                # cover the worst-case speculative or resync tail FIRST:
-                # drafting costs real work, so rows that end up deferred
-                # must not burn it; over-reservation for short proposals
-                # is returned by the post-commit truncate below
-                need = min(len(e.resync), S_spec) if e.resync \
-                    else min(K, max(self.scfg.max_seq - e.ctx_len - 2,
-                                    0)) + 1
-            else:
-                need = 1
-            st = self._ensure_blocks(e, e.ctx_len + need)
-            if st == "never":
-                self._finish(e, finished)      # context ceiling reached
-            elif st == "defer":
-                deferred.add(e.req.rid)        # wait for capacity
-        prefill_plan = [(e, pos, v) for e, pos, v in prefill_plan
-                        if e.req.rid in self.sched.active]
-        run_rows = [e for e in self.sched.decode_entries()
-                    if e.req.rid not in deferred]
+                K = self.kctl.k if spec.adaptive \
+                    else min(spec.k, spec.k_max)
+
+            # ---- 1) capacity resolution -------------------------------
+            prefill_plan: List[Tuple[SchedEntry, int, int]] = []
+            for e in self.sched.prefill_entries():
+                if e.req.rid not in self.sched.active:
+                    continue                   # evicted making room above
+                total = len(e.prefill_tokens())
+                valid = min(self.scfg.prefill_chunk, total - e.pos)
+                st = self._ensure_blocks(e, e.pos + valid)
+                if st == "never":
+                    self._finish(e, finished)  # prompt can't fit: give up
+                elif st == "ok":
+                    prefill_plan.append((e, e.pos, valid))
+            deferred = set()
+            for e in list(self.sched.decode_entries()):
+                if e.req.rid not in self.sched.active:
+                    continue
+                if spec is not None:
+                    # cover the worst-case speculative or resync tail
+                    # FIRST: drafting costs real work, so rows that end up
+                    # deferred must not burn it; over-reservation for
+                    # short proposals is returned by the post-commit
+                    # truncate below
+                    need = min(len(e.resync), S_spec) if e.resync \
+                        else min(K, max(self.scfg.max_seq - e.ctx_len - 2,
+                                        0)) + 1
+                else:
+                    need = 1
+                st = self._ensure_blocks(e, e.ctx_len + need)
+                if st == "never":
+                    self._finish(e, finished)  # context ceiling reached
+                elif st == "defer":
+                    deferred.add(e.req.rid)    # wait for capacity
+            prefill_plan = [(e, pos, v) for e, pos, v in prefill_plan
+                            if e.req.rid in self.sched.active]
+            run_rows = [e for e in self.sched.decode_entries()
+                        if e.req.rid not in deferred]
 
         # ---- 2) drafting (spec only) ----------------------------------
         # rows replaying after eviction re-feed committed tokens through
@@ -481,55 +511,77 @@ class Engine:
         # and could flip a later greedy argmax.
         proposals: Dict[int, tuple] = {}
         if spec is not None and run_rows:
-            items = []
-            for e in run_rows:
-                if e.resync:
-                    proposals[e.req.rid] = (
-                        "resync", np.asarray(e.resync[:S_spec], np.int32),
-                        None)
-                    continue
-                budget = min(K, self.scfg.max_seq - e.ctx_len - 2)
-                ctx = np.concatenate([
-                    np.asarray(e.req.prompt, np.int32),
-                    np.asarray(e.req.tokens_out, np.int32)])
-                items.append((e.req.rid, ctx, max(budget, 0)))
-            for (rid, _, _), (toks, qd) in zip(items, self._propose(items)):
-                proposals[rid] = ("draft", np.asarray(toks, np.int32), qd)
+            with tr.span("draft", rows=len(run_rows), k=K):
+                items = []
+                for e in run_rows:
+                    if e.resync:
+                        proposals[e.req.rid] = (
+                            "resync",
+                            np.asarray(e.resync[:S_spec], np.int32), None)
+                        continue
+                    budget = min(K, self.scfg.max_seq - e.ctx_len - 2)
+                    ctx = np.concatenate([
+                        np.asarray(e.req.prompt, np.int32),
+                        np.asarray(e.req.tokens_out, np.int32)])
+                    items.append((e.req.rid, ctx, max(budget, 0)))
+                for (rid, _, _), (toks, qd) in zip(items,
+                                                   self._propose(items)):
+                    proposals[rid] = ("draft", np.asarray(toks, np.int32),
+                                      qd)
+                    tr.event(rid, "spec_draft", k=len(toks))
 
         if not prefill_plan and not run_rows:
             return finished
 
         # ---- 3) one unified batched step ------------------------------
-        rows: List[Tuple[int, int, np.ndarray, int]] = []
-        for e, pos, valid in prefill_plan:
-            toks = e.prefill_tokens()[pos:pos + valid]
-            rows.append((e.slot, PREFILL, np.asarray(toks, np.int32), pos))
-        for e in run_rows:
-            if spec is None:
-                rows.append((e.slot, DECODE,
-                             np.asarray([e.req.tokens_out[-1]], np.int32),
-                             e.ctx_len))
-                continue
-            kind, toks, _ = proposals[e.req.rid]
-            seq = toks if kind == "resync" else np.concatenate(
-                [np.asarray([e.req.tokens_out[-1]], np.int32), toks])
-            rows.append((e.slot, VERIFY, seq, e.ctx_len))
-            # pin across the step: a concurrent defrag must not move
-            # blocks an in-flight device table has captured
-            self.pool.pin(e.slot)
-        # copy-on-write BEFORE the tables snapshot: any row whose write
-        # span lands in a block referenced elsewhere (prefix-shared block,
-        # rollback into a shared partial tail) gets a private copy so
-        # sibling requests can never observe its writes
-        cow: List[Tuple[int, int]] = []
-        for slot, _, toks, start in rows:
-            cow.extend(self.pool.cow_for_write(slot, start, len(toks)))
-        if cow:
-            self.runner.copy_blocks(cow)
-        batch = self.runner.new_batch(max(len(r[2]) for r in rows),
-                                      self.pool.tables())
-        for slot, phase, toks, start in rows:
-            batch.add_row(slot, phase, toks, start)
+        with tr.span("batch_assemble"):
+            rows: List[Tuple[int, int, np.ndarray, int]] = []
+            for e, pos, valid in prefill_plan:
+                toks = e.prefill_tokens()[pos:pos + valid]
+                rows.append((e.slot, PREFILL, np.asarray(toks, np.int32),
+                             pos))
+            for e in run_rows:
+                if spec is None:
+                    rows.append((e.slot, DECODE,
+                                 np.asarray([e.req.tokens_out[-1]],
+                                            np.int32),
+                                 e.ctx_len))
+                    continue
+                kind, toks, _ = proposals[e.req.rid]
+                seq = toks if kind == "resync" else np.concatenate(
+                    [np.asarray([e.req.tokens_out[-1]], np.int32), toks])
+                rows.append((e.slot, VERIFY, seq, e.ctx_len))
+                # pin across the step: a concurrent defrag must not move
+                # blocks an in-flight device table has captured
+                self.pool.pin(e.slot)
+            # copy-on-write BEFORE the tables snapshot: any row whose
+            # write span lands in a block referenced elsewhere (prefix-
+            # shared block, rollback into a shared partial tail) gets a
+            # private copy so sibling requests can never observe writes
+            slot_rid = {e.slot: e.req.rid
+                        for e in list(self.sched.active.values())}
+            cow: List[Tuple[int, int]] = []
+            for slot, _, toks, start in rows:
+                copies = self.pool.cow_for_write(slot, start, len(toks))
+                if copies:
+                    tr.event(slot_rid.get(slot, -1), "cow",
+                             n_blocks=len(copies))
+                cow.extend(copies)
+            if cow:
+                self.runner.copy_blocks(cow)
+            width = max(len(r[2]) for r in rows)
+            batch = self.runner.new_batch(width, self.pool.tables())
+            for slot, phase, toks, start in rows:
+                batch.add_row(slot, phase, toks, start)
+            valid_tokens = sum(len(r[2]) for r in rows)
+            denom = self.scfg.max_batch * width
+            tr.tick_attrs(
+                rows_prefill=len(prefill_plan),
+                rows_decode=len(run_rows) if spec is None else 0,
+                rows_verify=len(run_rows) if spec is not None else 0,
+                width=width, valid_tokens=valid_tokens,
+                pad_waste_frac=1.0 - valid_tokens / denom if denom
+                else 0.0)
         out = self.runner.step(batch)
 
         # ---- 4) sample + commit ---------------------------------------
@@ -544,39 +596,46 @@ class Engine:
             sample_pairs.extend((e.slot, e.req) for e in run_rows)
         tok_np = lp_np = None
         if sample_pairs:
-            tok_np, lp_np = self._sample_rows(sample_pairs,
-                                              out.last_logits)
+            with tr.span("sample_sync", rows=len(sample_pairs)):
+                tok_np, lp_np = self._sample_rows(sample_pairs,
+                                                  out.last_logits)
 
         # prefill rows: advance the frontier; a completing row emits its
         # first token (sampled with ITS params — no more greedy-only)
-        for e, pos, valid in prefill_plan:
-            self._record_prompt_logprobs(e, out, pos, valid)
-            e.pos = pos + valid
-            self.metrics.on_prefill_chunk(valid)
-            if e.req.rid not in completing:
-                continue
-            e.ctx_len = e.pos
-            e.state = State.RUNNING
-            # prompt KV is final: publish the full blocks to the prefix
-            # index so concurrent same-prefix requests share them NOW
-            # (not only after this request completes)
-            self.sched.index_prefix(e, e.prefill_tokens(), e.pos)
-            if e.replay:
-                e.replay = False               # next token already known
-                if e.resync_replay:
-                    # prompt KV restored; generated KV re-derives through
-                    # verify steps (bit-identical to how it was first
-                    # written) before drafting resumes
-                    e.resync = [int(t) for t in e.req.tokens_out[:-1]]
-                    e.resync_replay = False
-            else:
-                self._commit_emitted(e, self._one_token(tok_np, e.slot),
-                                     lp_np[e.slot], finished, first=True)
+        with tr.span("postprocess"):
+            for e, pos, valid in prefill_plan:
+                self._record_prompt_logprobs(e, out, pos, valid)
+                e.pos = pos + valid
+                self.metrics.on_prefill_chunk(valid)
+                tr.event(e.req.rid, "prefill_chunk", pos=pos, valid=valid)
+                if e.req.rid not in completing:
+                    continue
+                e.ctx_len = e.pos
+                e.state = State.RUNNING
+                # prompt KV is final: publish the full blocks to the
+                # prefix index so concurrent same-prefix requests share
+                # them NOW (not only after this request completes)
+                self.sched.index_prefix(e, e.prefill_tokens(), e.pos)
+                if e.replay:
+                    e.replay = False           # next token already known
+                    tr.event(e.req.rid, "replay_done",
+                             resync=e.resync_replay)
+                    if e.resync_replay:
+                        # prompt KV restored; generated KV re-derives
+                        # through verify steps (bit-identical to how it
+                        # was first written) before drafting resumes
+                        e.resync = [int(t) for t in e.req.tokens_out[:-1]]
+                        e.resync_replay = False
+                else:
+                    self._commit_emitted(e,
+                                         self._one_token(tok_np, e.slot),
+                                         lp_np[e.slot], finished,
+                                         first=True)
 
-        if spec is None:
-            self._commit_decode(run_rows, tok_np, lp_np, finished)
-        else:
-            self._commit_verify(run_rows, proposals, out, finished)
+            if spec is None:
+                self._commit_decode(run_rows, tok_np, lp_np, finished)
+            else:
+                self._commit_verify(run_rows, proposals, out, finished)
         return finished
 
     def _record_prompt_logprobs(self, e: SchedEntry, out, pos: int,
@@ -661,6 +720,8 @@ class Engine:
                 e.ctx_len += m
                 del e.resync[:m]
                 self.pool.unpin(e.slot)
+                self.tracer.event(e.req.rid, "spec_resync", n=m,
+                                  remaining=len(e.resync))
                 continue
             row_logits = out.row_logits(e.slot)[:m + 1]
             sp = self._sp(e.req)
@@ -686,6 +747,7 @@ class Engine:
             emitted = emitted[:space]
             P = len(np.asarray(e.req.prompt))
             alive = True
+            row_emitted = 0
             for j, t in enumerate(emitted):
                 lp = 0.0
                 if sp.logprobs:
@@ -693,14 +755,22 @@ class Engine:
                     lp = float(np.log(np.maximum(p[int(t)], 1e-30)))
                 alive = self._commit_emitted(e, int(t), lp, finished)
                 emitted_total += 1
+                row_emitted += 1
                 if not alive:
                     break
+            self.metrics.on_spec_request(e.req.rid, m, a, row_emitted)
+            self.tracer.event(e.req.rid, "spec_verify", drafted=m,
+                              accepted=a, emitted=row_emitted)
             # committed frontier: the last emitted token's KV is written
             # by the NEXT verify step (steady-state invariant); stop
             # truncation shrinks tokens_out, so re-derive rather than add
             e.ctx_len = P + max(len(e.req.tokens_out) - 1, 0)
             # rollback: free whole blocks past the committed frontier
-            self.pool.truncate(e.slot, e.ctx_len)
+            rolled = self.pool.truncate(e.slot, e.ctx_len)
+            if a < m:
+                self.tracer.event(e.req.rid, "spec_rollback",
+                                  rejected=m - a,
+                                  freed_blocks=rolled or 0)
             self.pool.unpin(e.slot)
             if alive and e.ctx_len + 1 > self.scfg.max_seq:
                 self._finish(e, finished)
@@ -716,6 +786,8 @@ class Engine:
 
     def _finish(self, e: SchedEntry, finished: List[int]):
         self.metrics.on_finish(e.req.rid)
+        self.tracer.event(e.req.rid, "finish",
+                          n_tokens=len(e.req.tokens_out))
         self.sched.finish(e)
         if self.drafter is not None:
             self.drafter.forget(e.req.rid)
@@ -749,6 +821,8 @@ class Engine:
         self._active.pop(req.rid, None)
         self._host_rngs.pop(req.rid, None)
         self.metrics.on_finish(req.rid)
+        self.tracer.event(req.rid, "finish",
+                          n_tokens=len(req.tokens_out))
 
     def _add_request_slots(self, req: Request) -> bool:
         slot = self.alloc.alloc(req.rid)
@@ -756,7 +830,10 @@ class Engine:
             return False
         self._requests[req.rid] = req
         self._active[req.rid] = req
-        self.metrics.on_arrival(req.rid, len(np.asarray(req.prompt)))
+        n_prompt = len(np.asarray(req.prompt))
+        self.metrics.on_arrival(req.rid, n_prompt)
+        self.tracer.event(req.rid, "arrival", prompt_len=n_prompt)
+        self.tracer.event(req.rid, "admitted", slot=slot)
         # prefill into a batch-1 temp cache, then splice that row into the
         # live cache at ``slot`` (slots advance independently via lens[b])
         prompt = jnp.asarray(req.prompt)[None]
@@ -783,6 +860,7 @@ class Engine:
         status = self._append_token(req, slot, tok, lp)
         if status != "stop":
             self.metrics.on_first_token(req.rid)
+            self.tracer.event(req.rid, "first_token")
         if status != "ok":                     # same checks the paged
             self._finish_slot(req)             # path makes after prefill
             self._done_at_admit.append(req.rid)
@@ -804,28 +882,41 @@ class Engine:
         self._done_at_admit = []
         if not self._active:
             return finished
+        tr = self.tracer
         reqs = list(self._active.values())
         slots = {req.rid: self.alloc.active[req.rid] for req in reqs}
         B = self.scfg.max_batch
-        shape = (B, 1, self.cfg.n_codebooks) if self.cfg.n_codebooks \
-            else (B, 1)
-        tok = np.zeros(shape, np.int32)
-        for req in reqs:
-            tok[slots[req.rid], 0] = req.tokens_out[-1]
-        logits, self.cache = self._decode(self.params, jnp.asarray(tok),
-                                          self.cache)
-        tok_np, lp_np = self._sample_rows(
-            [(slots[req.rid], req) for req in reqs], logits[:, 0])
+        with tr.span("batch_assemble"):
+            shape = (B, 1, self.cfg.n_codebooks) if self.cfg.n_codebooks \
+                else (B, 1)
+            tok = np.zeros(shape, np.int32)
+            for req in reqs:
+                tok[slots[req.rid], 0] = req.tokens_out[-1]
+            tr.tick_attrs(rows_prefill=0, rows_decode=len(reqs),
+                          rows_verify=0, width=1, valid_tokens=len(reqs),
+                          pad_waste_frac=1.0 - len(reqs) / B if B
+                          else 0.0)
+        with tr.span("device_dispatch", rows=len(reqs)):
+            logits, self.cache = self._decode(self.params,
+                                              jnp.asarray(tok),
+                                              self.cache)
+        if tr.enabled and tr.cfg.fence_device:
+            with tr.span("device_wait"):
+                jax.block_until_ready(logits)
+        with tr.span("sample_sync", rows=len(reqs)):
+            tok_np, lp_np = self._sample_rows(
+                [(slots[req.rid], req) for req in reqs], logits[:, 0])
         done_now = []
-        for req in reqs:
-            slot = slots[req.rid]
-            status = self._append_token(req, slot,
-                                        self._one_token(tok_np, slot),
-                                        lp_np[slot])
-            if status != "stop":
-                self.metrics.on_token(req.rid)
-            if status != "ok":
-                self._finish_slot(req)
-                done_now.append(req.rid)
-        self.metrics.on_decode_step(len(reqs))
+        with tr.span("postprocess"):
+            for req in reqs:
+                slot = slots[req.rid]
+                status = self._append_token(req, slot,
+                                            self._one_token(tok_np, slot),
+                                            lp_np[slot])
+                if status != "stop":
+                    self.metrics.on_token(req.rid)
+                if status != "ok":
+                    self._finish_slot(req)
+                    done_now.append(req.rid)
+            self.metrics.on_decode_step(len(reqs))
         return finished + done_now

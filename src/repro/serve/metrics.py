@@ -1,7 +1,20 @@
 """Serving metrics: per-request TTFT/TPOT, percentile latency, tokens/s,
 and the paper's Table-II off-chip traffic counters (weight bytes, KV
 bytes, sparsity savings) — lifted out of the engine so both the legacy
-slot path and the paged scheduler path report identically."""
+slot path and the paged scheduler path report identically.
+
+Since the obs subsystem (repro.obs), every number lives in ONE shared
+``obs.Registry`` of counters/gauges/histograms: the collector's event
+hooks increment registry counters (the legacy attribute names —
+``decode_steps``, ``evictions``, ``spec_steps``, ... — remain as
+read-only properties over them), the pool / prefix-index / mesh stats
+dicts are spliced in as pull-style gauge groups, and ``summary()``,
+the Prometheus text endpoint, and the Perfetto trace metadata all read
+the same registry — no more separately-wired dicts per subsystem.
+
+Empty windows report ``None`` (explicit null), never a fake 0: a
+zero-request or all-preempted run has no TTFT percentile, and
+``tokens_per_s`` of an empty window is unknown, not zero."""
 
 from __future__ import annotations
 
@@ -12,6 +25,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.obs.registry import Registry
 from repro.serve import kv_cache
 
 
@@ -80,6 +94,13 @@ class RequestMetrics:
     n_generated: int = 0
     preemptions: int = 0
     cached_prompt_tokens: int = 0   # prefix-cache hit size at admission
+    # --- speculative decode, per request (groundwork for the ROADMAP
+    # self-disabling-speculation item: the adaptive-K controller needs
+    # the realized per-request win, not the fleet mean) ---
+    spec_drafted: int = 0           # draft tokens verified for this req
+    spec_accepted: int = 0          # ... accepted
+    spec_emitted: int = 0           # tokens committed via verify passes
+    spec_verifies: int = 0          # verify passes this request rode
 
     @property
     def ttft(self) -> Optional[float]:
@@ -102,13 +123,45 @@ class RequestMetrics:
         return (self.finished_at - self.first_token_at) \
             / (self.n_generated - 1)
 
+    @property
+    def spec_acceptance(self) -> Optional[float]:
+        """Realized per-request draft acceptance rate (None: no spec)."""
+        if self.spec_drafted == 0:
+            return None
+        return self.spec_accepted / self.spec_drafted
 
-def percentile(values: List[float], p: float) -> float:
-    return float(np.percentile(np.asarray(values), p)) if values else 0.0
+    @property
+    def spec_tokens_per_verify(self) -> Optional[float]:
+        """Realized tokens committed per verify pass for THIS request —
+        the quantity speculation must beat 1.0 on to be worth its draft
+        cost (ROADMAP: self-disabling speculation)."""
+        if self.spec_verifies == 0:
+            return None
+        return self.spec_emitted / self.spec_verifies
+
+
+def percentile(values: List[float], p: float) -> Optional[float]:
+    """Percentile of a sample, or ``None`` for an empty one — an empty
+    measurement window has no percentile, and reporting 0.0 used to
+    make zero-request runs look infinitely fast."""
+    if not values:
+        return None
+    return float(np.percentile(np.asarray(values), p))
+
+
+def _ms(v: Optional[float]) -> Optional[float]:
+    return None if v is None else v * 1e3
 
 
 class MetricsCollector:
-    """Accumulates per-request and per-step serving metrics."""
+    """Accumulates per-request and per-step serving metrics.
+
+    Every scalar lives in ``self.registry`` (obs.Registry); the legacy
+    attribute names (``decode_steps``, ``evictions``, ``spec_steps``,
+    ...) are read-only properties over the registry counters, so code
+    and tests written against the old dict-of-ints keep working while
+    the Prometheus/Perfetto exporters and ``summary()`` read one shared
+    source of truth."""
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig,
                  clock=time.monotonic):
@@ -117,23 +170,132 @@ class MetricsCollector:
         self.clock = clock
         self.requests: Dict[int, RequestMetrics] = {}
         self.step_stats: List[StepStats] = []
-        self.decode_steps = 0
-        self.prefill_chunks = 0
-        self.evictions = 0
+        self.registry = Registry()
+        r = self.registry
+        self._c_decode = r.counter("engine_decode_steps_total",
+                                   "non-speculative decode ticks")
+        self._c_chunks = r.counter("engine_prefill_chunks_total",
+                                   "chunked-prefill rows processed")
+        self._c_prefill_tok = r.counter("engine_prefill_tokens_total",
+                                        "prompt tokens prefilled")
+        self._c_evict = r.counter("sched_preemptions_total",
+                                  "preemption-by-recompute evictions")
+        self._c_arrive = r.counter("request_arrivals_total")
+        self._c_finish = r.counter("request_finished_total")
+        self._c_tokens = r.counter("request_generated_tokens_total",
+                                   "committed output tokens")
+        self._h_ttft = r.histogram("request_ttft_seconds",
+                                   "time to first token")
+        self._h_lat = r.histogram("request_latency_seconds",
+                                  "arrival to finish")
+        self._h_tpot = r.histogram("request_tpot_seconds",
+                                   "decode cadence after first token")
         # --- prefix cache (serve.prefix_cache) ---
-        self.prefix_lookups = 0      # admissions that consulted the index
-        self.prefix_hits = 0         # ... that matched >= 1 block
-        self.prefix_cached_tokens = 0  # prompt tokens served from cache
-        # live gauges (set by the paged engine; None on the legacy path)
-        self.pool = None             # PagedKVCache — block-pool pressure
-        self.prefix = None           # RadixPrefixCache — index counters
-        self.mesh = {}               # sharded serving: launch.mesh info
+        self._c_plook = r.counter("prefix_lookups_total",
+                                  "admissions that consulted the index")
+        self._c_phit = r.counter("prefix_hits_total",
+                                 "... that matched >= 1 block")
+        self._c_ptok = r.counter("prefix_cached_tokens_total",
+                                 "prompt tokens served from cache")
         # --- speculative decode (repro.spec) ---
-        self.spec_steps = 0          # verify passes
-        self.spec_drafted = 0        # draft tokens proposed
-        self.spec_accepted = 0       # draft tokens accepted
-        self.spec_emitted = 0        # tokens committed via verify passes
+        self._c_sstep = r.counter("spec_verify_steps_total",
+                                  "draft->verify passes")
+        self._c_sdraft = r.counter("spec_drafted_tokens_total")
+        self._c_saccept = r.counter("spec_accepted_tokens_total")
+        self._c_semit = r.counter("spec_emitted_tokens_total",
+                                  "tokens committed via verify passes")
+        self._h_saccept = r.histogram(
+            "spec_request_acceptance_ratio",
+            "per-request realized draft acceptance",
+            buckets=tuple(i / 10 for i in range(11)))
+        self._h_stpv = r.histogram(
+            "spec_request_tokens_per_verify",
+            "per-request realized tokens committed per verify pass",
+            buckets=tuple(float(i) for i in range(1, 17)))
+        # --- paper Table-II off-chip traffic ---
+        self._c_wbytes = r.counter("traffic_weight_bytes_total")
+        self._c_kvbytes = r.counter("traffic_kv_bytes_total")
+        self._c_savings = r.counter("traffic_sparse_savings_bytes_total")
+        # live gauges (set by the paged engine; None on the legacy path):
+        # assigning pool/prefix/mesh splices their stats dicts into the
+        # registry as pull-style gauge groups
+        self._pool = None            # PagedKVCache — block-pool pressure
+        self._prefix = None          # RadixPrefixCache — index counters
+        self._mesh: dict = {}        # sharded serving: launch.mesh info
+        self.tracer = None           # obs.Tracer when tracing is on
         self._t0: Optional[float] = None
+
+    # --- registry-backed live gauges -------------------------------------
+    @property
+    def pool(self):
+        return self._pool
+
+    @pool.setter
+    def pool(self, pool) -> None:
+        self._pool = pool
+        if pool is not None:
+            self.registry.gauge_group("pool", pool.stats)
+
+    @property
+    def prefix(self):
+        return self._prefix
+
+    @prefix.setter
+    def prefix(self, prefix) -> None:
+        self._prefix = prefix
+        if prefix is not None:
+            self.registry.gauge_group("prefix_index", prefix.stats)
+
+    @property
+    def mesh(self) -> dict:
+        return self._mesh
+
+    @mesh.setter
+    def mesh(self, info: dict) -> None:
+        self._mesh = info
+        if info:
+            self.registry.gauge_group("mesh", lambda: self._mesh)
+
+    # --- legacy attribute names over registry counters --------------------
+    @property
+    def decode_steps(self) -> int:
+        return self._c_decode.value
+
+    @property
+    def prefill_chunks(self) -> int:
+        return self._c_chunks.value
+
+    @property
+    def evictions(self) -> int:
+        return self._c_evict.value
+
+    @property
+    def prefix_lookups(self) -> int:
+        return self._c_plook.value
+
+    @property
+    def prefix_hits(self) -> int:
+        return self._c_phit.value
+
+    @property
+    def prefix_cached_tokens(self) -> int:
+        return self._c_ptok.value
+
+    @property
+    def spec_steps(self) -> int:
+        return self._c_sstep.value
+
+    @property
+    def spec_drafted(self) -> int:
+        return self._c_sdraft.value
+
+    @property
+    def spec_accepted(self) -> int:
+        return self._c_saccept.value
+
+    @property
+    def spec_emitted(self) -> int:
+        return self._c_semit.value
 
     # --- request lifecycle events ---
     def on_arrival(self, rid: int, prompt_len: int,
@@ -141,6 +303,7 @@ class MetricsCollector:
         at = self.clock() if at is None else at
         if self._t0 is None:
             self._t0 = at
+        self._c_arrive.inc()
         self.requests[rid] = RequestMetrics(rid=rid, arrival=at,
                                             prompt_len=prompt_len)
 
@@ -149,24 +312,38 @@ class MetricsCollector:
         if r.first_token_at is None:
             r.first_token_at = self.clock()
         r.n_generated += 1
+        self._c_tokens.inc()
 
     def on_token(self, rid: int):
         self.requests[rid].n_generated += 1
+        self._c_tokens.inc()
 
     def on_finish(self, rid: int):
-        self.requests[rid].finished_at = self.clock()
+        r = self.requests[rid]
+        r.finished_at = self.clock()
+        self._c_finish.inc()
+        if r.ttft is not None:
+            self._h_ttft.observe(r.ttft)
+        if r.latency is not None:
+            self._h_lat.observe(r.latency)
+        if r.tpot is not None:
+            self._h_tpot.observe(r.tpot)
+        if r.spec_acceptance is not None:
+            self._h_saccept.observe(r.spec_acceptance)
+        if r.spec_tokens_per_verify is not None:
+            self._h_stpv.observe(r.spec_tokens_per_verify)
 
     def on_preemption(self, rid: int):
         self.requests[rid].preemptions += 1
-        self.evictions += 1
+        self._c_evict.inc()
 
     def on_prefix_lookup(self, rid: int, cached_tokens: int):
         """One admission-time radix lookup; ``cached_tokens`` is the
         matched block-aligned prefix length (0 = miss)."""
-        self.prefix_lookups += 1
+        self._c_plook.inc()
         if cached_tokens > 0:
-            self.prefix_hits += 1
-            self.prefix_cached_tokens += cached_tokens
+            self._c_phit.inc()
+            self._c_ptok.inc(cached_tokens)
         r = self.requests.get(rid)
         if r is not None:
             r.cached_prompt_tokens = max(r.cached_prompt_tokens,
@@ -175,12 +352,13 @@ class MetricsCollector:
     # --- step events ---
     def on_decode_step(self, n_tokens: int,
                        kv_bytes: Optional[float] = None):
-        self.decode_steps += 1
-        self.step_stats.append(
-            traffic_step(self.cfg, self.scfg, n_tokens, kv_bytes=kv_bytes))
+        self._c_decode.inc()
+        self._traffic(traffic_step(self.cfg, self.scfg, n_tokens,
+                                   kv_bytes=kv_bytes))
 
     def on_prefill_chunk(self, n_tokens: int):
-        self.prefill_chunks += 1
+        self._c_chunks.inc()
+        self._c_prefill_tok.inc(n_tokens)
 
     def on_spec_step(self, n_rows: int, drafted: int, accepted: int,
                      emitted: int, kv_bytes: Optional[float] = None,
@@ -190,14 +368,34 @@ class MetricsCollector:
         buys on a memory-bound target). ``draft_weight_bytes`` adds the
         drafter's own weight stream (0 for n-gram, the draft model's
         stream for model/selfspec) so Table-II totals stay honest."""
-        self.spec_steps += 1
-        self.spec_drafted += drafted
-        self.spec_accepted += accepted
-        self.spec_emitted += emitted
+        self._c_sstep.inc()
+        self._c_sdraft.inc(drafted)
+        self._c_saccept.inc(accepted)
+        self._c_semit.inc(emitted)
         stats = traffic_step(self.cfg, self.scfg, emitted,
                              kv_bytes=kv_bytes)
         stats.weight_bytes += draft_weight_bytes
+        self._traffic(stats)
+
+    def on_spec_request(self, rid: int, drafted: int, accepted: int,
+                        emitted: int):
+        """Per-request share of one verify pass (fleet totals go through
+        on_spec_step). ``emitted`` counts COMMITTED tokens — what landed
+        in tokens_out — so per-request counters reconcile exactly with
+        token counts (asserted in tier-1)."""
+        r = self.requests.get(rid)
+        if r is None:
+            return
+        r.spec_drafted += drafted
+        r.spec_accepted += accepted
+        r.spec_emitted += emitted
+        r.spec_verifies += 1
+
+    def _traffic(self, stats: StepStats) -> None:
         self.step_stats.append(stats)
+        self._c_wbytes.inc(stats.weight_bytes)
+        self._c_kvbytes.inc(stats.kv_bytes)
+        self._c_savings.inc(stats.sparse_savings_bytes)
 
     # --- summary ---
     def summary(self) -> dict:
@@ -208,22 +406,31 @@ class MetricsCollector:
         tpots = [r.tpot for r in done if r.tpot is not None]
         n_tok = sum(r.n_generated for r in done)
         wall = (max(r.finished_at for r in done) - self._t0) \
-            if done and self._t0 is not None else 0.0
+            if done and self._t0 is not None else None
         # TTFT split by prefix-cache outcome: the headline win of prefix
         # sharing is that hit requests skip cached-prefix prefill chunks
         ttft_hit = [r.ttft for r in done
                     if r.ttft is not None and r.cached_prompt_tokens > 0]
         ttft_miss = [r.ttft for r in done
                      if r.ttft is not None and r.cached_prompt_tokens == 0]
-        return {
+        spec_req = {
+            r.rid: {"acceptance": r.spec_acceptance,
+                    "tokens_per_verify": r.spec_tokens_per_verify,
+                    "drafted": r.spec_drafted,
+                    "emitted": r.spec_emitted}
+            for r in done if r.spec_verifies > 0}
+        out = {
             "n_finished": len(done),
             "generated_tokens": n_tok,
-            "tokens_per_s": n_tok / wall if wall > 0 else 0.0,
-            "ttft_p50_ms": percentile(ttfts, 50) * 1e3,
-            "ttft_p99_ms": percentile(ttfts, 99) * 1e3,
-            "latency_p50_ms": percentile(lats, 50) * 1e3,
-            "latency_p99_ms": percentile(lats, 99) * 1e3,
-            "tpot_p50_ms": percentile(tpots, 50) * 1e3,
+            # None (not 0.0) for an empty window: a zero-request or
+            # all-preempted run has no throughput, and its percentile
+            # latencies are unknown, not zero
+            "tokens_per_s": (n_tok / wall) if wall else None,
+            "ttft_p50_ms": _ms(percentile(ttfts, 50)),
+            "ttft_p99_ms": _ms(percentile(ttfts, 99)),
+            "latency_p50_ms": _ms(percentile(lats, 50)),
+            "latency_p99_ms": _ms(percentile(lats, 99)),
+            "tpot_p50_ms": _ms(percentile(tpots, 50)),
             "decode_steps": self.decode_steps,
             "prefill_chunks": self.prefill_chunks,
             "evictions": self.evictions,
@@ -232,25 +439,32 @@ class MetricsCollector:
                                      / max(self.spec_drafted, 1)),
             "spec_tokens_per_verify": (self.spec_emitted
                                        / max(self.spec_steps, 1)),
-            "weight_bytes": sum(s.weight_bytes for s in self.step_stats),
-            "kv_bytes": sum(s.kv_bytes for s in self.step_stats),
-            "sparse_savings_bytes": sum(s.sparse_savings_bytes
-                                        for s in self.step_stats),
+            # realized per-request speculation outcomes (empty without
+            # spec): the self-disabling-speculation controller's input
+            "spec_per_request": spec_req,
+            "weight_bytes": self._c_wbytes.value,
+            "kv_bytes": self._c_kvbytes.value,
+            "sparse_savings_bytes": self._c_savings.value,
             # --- prefix cache ---
             "prefix_lookups": self.prefix_lookups,
             "prefix_hits": self.prefix_hits,
             "prefix_hit_rate": (self.prefix_hits
                                 / max(self.prefix_lookups, 1)),
             "prefix_cached_tokens": self.prefix_cached_tokens,
-            "ttft_hit_p50_ms": percentile(ttft_hit, 50) * 1e3,
-            "ttft_miss_p50_ms": percentile(ttft_miss, 50) * 1e3,
+            "ttft_hit_p50_ms": _ms(percentile(ttft_hit, 50)),
+            "ttft_miss_p50_ms": _ms(percentile(ttft_miss, 50)),
             # --- block-pool pressure (observable BEFORE admission stalls:
             # high_water_frac near 1 or rising fragmentation means the
             # next long prompt defers or evicts) ---
             "kv_pool": self.pool.stats() if self.pool is not None else {},
             "prefix_index": (self.prefix.stats()
-                             if self.prefix is not None else {}),
+                            if self.prefix is not None else {}),
             # --- sharded serving (ServeConfig.mesh): axes + shard count,
             # {} on a single device ---
             "mesh": self.mesh,
         }
+        # --- per-tick host/device attribution (obs tracing on) ---
+        if self.tracer is not None and self.tracer.enabled:
+            out["ticks"] = self.tracer.tick_summary()
+            out["phase_ms_per_tick"] = self.tracer.phase_ms_per_tick()
+        return out

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.dist import sharding as shd
+from repro.obs.trace import NULL_TRACER
 
 # row phases (StepBatch.phase values)
 IDLE, PREFILL, DECODE, VERIFY = 0, 1, 2, 3
@@ -119,12 +120,15 @@ class ModelRunner:
     a StepBatch per tick and calls ``step``."""
 
     def __init__(self, model, params, scfg: ServeConfig,
-                 dtype=jnp.float32, mesh=None, policy=None):
+                 dtype=jnp.float32, mesh=None, policy=None, tracer=None):
         """``mesh``/``policy`` (a jax Mesh + dist.sharding.ShardingPolicy)
         turn on sharded serving: params and the paged pool are device_put
         to their mesh shardings here, and every compiled step pins them
         via out_shardings. Single-device serving passes neither and pays
-        nothing."""
+        nothing. ``tracer`` (repro.obs) wraps each step in
+        device_dispatch/device_wait spans; the fence that makes device
+        time attributable only runs when tracing is enabled — the
+        untraced path keeps async dispatch untouched."""
         cfg: ModelConfig = model.cfg
         if scfg.attn_backend not in BACKENDS:
             raise ValueError(f"unknown attn_backend "
@@ -144,6 +148,7 @@ class ModelRunner:
         self.scfg = scfg
         self.mesh = mesh
         self.policy = policy if policy is not None else shd.ShardingPolicy()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.cache = model.init_paged_cache(
             scfg.max_batch, scfg.pool_blocks, scfg.block_size,
             scfg.blocks_per_seq, dtype, int8_kv=scfg.kv_quant)
@@ -227,12 +232,21 @@ class ModelRunner:
         the bucketed jit, return per-position and last-valid logits."""
         width = batch.tokens.shape[1]
         has_prefill = bool(np.any(batch.phase == PREFILL))
-        self.cache["lens"] = jnp.asarray(batch.row_start)
-        self.cache["block_tables"] = jnp.asarray(batch.tables)
-        logits, last, self.cache = self._fn(width, has_prefill)(
-            self.params, jnp.asarray(batch.tokens), self.cache,
-            jnp.asarray(batch.n_valid),
-            jnp.asarray(batch.phase == PREFILL))
+        tr = self.tracer
+        with tr.span("device_dispatch", width=width,
+                     has_prefill=has_prefill):
+            self.cache["lens"] = jnp.asarray(batch.row_start)
+            self.cache["block_tables"] = jnp.asarray(batch.tables)
+            logits, last, self.cache = self._fn(width, has_prefill)(
+                self.params, jnp.asarray(batch.tokens), self.cache,
+                jnp.asarray(batch.n_valid),
+                jnp.asarray(batch.phase == PREFILL))
+        if tr.enabled and tr.cfg.fence_device:
+            # fence so device_wait covers actual execution, not just
+            # dispatch — host/device attribution depends on this; the
+            # untraced path never blocks (async dispatch preserved)
+            with tr.span("device_wait"):
+                jax.block_until_ready((logits, last))
         return StepOutput(logits=logits, last_logits=last)
 
     # --- block maintenance --------------------------------------------------

@@ -1,0 +1,460 @@
+"""Tracing & telemetry (repro.obs): span nesting, request timelines
+under preemption/replay and speculative rollback, Perfetto/JSONL export
+validity, registry/exporter parity, summary() empty-window semantics,
+the disabled-mode fast path, and greedy token-identity tracing on/off."""
+
+import importlib.util
+import json
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ObsConfig, ServeConfig, SpecConfig
+from repro.models import Model
+from repro.obs import (NULL_TRACER, Registry, Tracer, make_tracer,
+                       perfetto_trace, write_jsonl, write_perfetto)
+from repro.obs.trace import NULL_SPAN
+from repro.serve import metrics as metrics_mod
+from repro.serve.engine import Engine
+from repro.serve.scheduler import Request
+
+_TOOLS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools", "check_trace.py")
+_spec = importlib.util.spec_from_file_location("check_trace", _TOOLS)
+check_trace = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_trace)
+
+
+@pytest.fixture(scope="module")
+def nectar():
+    cfg = get_config("nectar-relu-llama-1.7m")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=int(n), dtype=np.int32)
+            for n in lengths]
+
+
+def _serve(cfg, params, prompts, max_new=8, **scfg_kw):
+    eng = Engine(cfg, params, ServeConfig(**scfg_kw))
+    reqs = [Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    done = eng.run(reqs, max_steps=2000)
+    return {i: [int(t) for t in r.tokens_out] for i, r in done.items()}, eng
+
+
+OBS = ObsConfig(enabled=True)
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+
+
+def test_span_nesting_and_ordering():
+    """Spans record at exit with correct depth; tick_stats attributes
+    device_wait to device_ms and the rest to host_ms."""
+    tr = Tracer(OBS)
+    with tr.tick():
+        with tr.span("schedule"):
+            with tr.span("admit"):
+                pass
+        with tr.span("device_wait"):
+            time.sleep(0.002)
+        tr.tick_attrs(width=4, pad_waste_frac=0.5)
+    assert [s.name for s in tr.spans] == ["admit", "schedule",
+                                          "device_wait", "tick"]
+    by = {s.name: s for s in tr.spans}
+    assert by["admit"].depth == 2
+    assert by["schedule"].depth == 1
+    assert by["tick"].depth == 0
+    # containment: child spans lie inside their parents
+    assert by["schedule"].t0 <= by["admit"].t0
+    assert by["admit"].t1 <= by["schedule"].t1
+    assert by["tick"].t0 <= by["schedule"].t0
+    [t] = tr.tick_stats
+    assert t["tick"] == 0 and t["width"] == 4
+    assert t["device_ms"] >= 2.0
+    assert t["host_ms"] + t["device_ms"] == pytest.approx(t["dur_ms"])
+    assert tr.tick_summary()["pad_waste_frac"] == 0.5
+
+
+def test_tracer_max_events_bound():
+    """Past ObsConfig.max_events new records drop and are COUNTED — a
+    truncated trace must be detectable, never silently wrapped."""
+    tr = Tracer(ObsConfig(enabled=True, max_events=4))
+    for i in range(10):
+        tr.event(0, "e", i=i)
+    assert len(tr.events) == 4
+    assert tr.dropped == 6
+    tr.reset()
+    assert tr.dropped == 0 and not tr.events
+
+
+def test_tick_summary_empty_is_none():
+    tr = Tracer(OBS)
+    s = tr.tick_summary()
+    assert s["n_ticks"] == 0
+    assert s["host_ms_per_tick"] is None
+    assert s["device_ms_per_tick"] is None
+    assert s["pad_waste_frac"] is None
+
+
+# ---------------------------------------------------------------------------
+# disabled-mode fast path
+
+
+def test_null_tracer_shared_singletons():
+    """make_tracer(disabled) returns the module singleton; its span() is
+    the shared no-op CM — no allocation on the disabled path."""
+    assert make_tracer(None) is NULL_TRACER
+    assert make_tracer(ObsConfig(enabled=False)) is NULL_TRACER
+    assert NULL_TRACER.span("x", a=1) is NULL_SPAN
+    assert NULL_TRACER.tick() is NULL_SPAN
+    NULL_TRACER.event(0, "arrival")          # no-op, records nothing
+    assert NULL_TRACER.events == ()
+    assert not NULL_TRACER.enabled
+
+
+def test_disabled_overhead_under_2pct(nectar):
+    """Acceptance: the per-tick cost of the disabled tracer hooks (one
+    tick() + the phase span()/event() calls a busy tick makes) is < 2%
+    of a real measured tick. The hooks are shared no-op singletons, so
+    this holds by construction — the assert pins it against regression."""
+    cfg, _, params = nectar
+    eng = Engine(cfg, params, ServeConfig(
+        paged=True, max_batch=2, max_seq=64, block_size=8,
+        prefill_chunk=16))
+    assert eng.tracer is NULL_TRACER
+    reqs = [Request(rid=i, prompt=p, max_new=4)
+            for i, p in enumerate(_prompts(cfg, [8, 8]))]
+    eng.run(reqs, max_steps=200)             # warm the jit buckets
+    reqs2 = [Request(rid=10 + i, prompt=p, max_new=8)
+             for i, p in enumerate(_prompts(cfg, [8, 8], seed=1))]
+    t0 = time.perf_counter()
+    n_ticks = 0
+    pending = list(reqs2)
+    while pending or eng._busy():
+        while pending and eng.add_request(pending[0]):
+            pending.pop(0)
+        eng.step()
+        n_ticks += 1
+    tick_s = (time.perf_counter() - t0) / max(n_ticks, 1)
+
+    # one tick's worth of disabled hooks, many times over
+    N = 2000
+    tr = NULL_TRACER
+    t0 = time.perf_counter()
+    for _ in range(N):
+        with tr.tick():
+            with tr.span("schedule"):
+                with tr.span("admit"):
+                    tr.event(0, "admitted", slot=0)
+            with tr.span("batch_assemble"):
+                tr.tick_attrs(width=1, pad_waste_frac=0.0)
+            with tr.span("device_dispatch", width=1, has_prefill=False):
+                pass
+            with tr.span("sample_sync", rows=2):
+                pass
+            with tr.span("postprocess"):
+                tr.event(0, "first_token")
+    hook_s = (time.perf_counter() - t0) / N
+    assert hook_s < 0.02 * tick_s, (hook_s, tick_s)
+
+
+def test_greedy_tokens_identical_tracing_on_off(nectar):
+    """Acceptance: tracing observes, never schedules — greedy output is
+    token-identical with obs on and off (the device fence changes timing
+    only)."""
+    cfg, _, params = nectar
+    prompts = _prompts(cfg, [5, 21, 9])
+    kw = dict(max_batch=2, max_seq=64, paged=True, block_size=8,
+              prefill_chunk=16)
+    off, _ = _serve(cfg, params, prompts, **kw)
+    on, eng = _serve(cfg, params, prompts, obs=OBS, **kw)
+    assert off == on
+    assert eng.tracer.n_ticks > 0 and eng.tracer.spans
+
+
+# ---------------------------------------------------------------------------
+# request timelines
+
+
+def _names(tracer, rid):
+    return [e.name for e in tracer.timeline(rid)]
+
+
+def test_timeline_lifecycle_complete(nectar):
+    cfg, _, params = nectar
+    _, eng = _serve(cfg, params, _prompts(cfg, [5, 40]), obs=OBS,
+                    max_batch=2, max_seq=64, paged=True, block_size=8,
+                    prefill_chunk=16)
+    for rid in (0, 1):
+        names = _names(eng.tracer, rid)
+        assert names[0] == "arrival"
+        assert names[-1] == "finish"
+        assert "admitted" in names and "first_token" in names
+        assert names.count("finish") == 1
+        assert names.index("admitted") < names.index("first_token")
+    # the 40-token prompt needed multiple prefill chunks
+    assert _names(eng.tracer, 1).count("prefill_chunk") >= 2
+
+
+def test_timeline_preemption_and_replay(nectar):
+    """A preempted request's timeline shows preempted -> re-admitted ->
+    replayed prefill -> replay_done, and still exactly one finish."""
+    cfg, _, params = nectar
+    _, eng = _serve(cfg, params, _prompts(cfg, [20, 20]), max_new=16,
+                    obs=OBS, max_batch=2, max_seq=64, paged=True,
+                    block_size=8, prefill_chunk=8, n_kv_blocks=8)
+    tr = eng.tracer
+    victims = {e.rid for e in tr.events if e.name == "preempted"}
+    assert victims, "trace did not provoke a preemption"
+    for rid in victims:
+        names = _names(tr, rid)
+        i = names.index("preempted")
+        tail = names[i:]
+        assert "admitted" in tail and "replay_done" in tail
+        assert tail.index("admitted") < tail.index("replay_done")
+        assert names.count("finish") == 1 and names[-1] == "finish"
+
+
+def test_timeline_spec_verify_and_rollback(nectar):
+    """Speculative rows log spec_draft/spec_verify per pass; rejected
+    tails log spec_rollback; per-event counts reconcile with the
+    registry totals."""
+    cfg, _, params = nectar
+    _, eng = _serve(cfg, params, _prompts(cfg, [12, 12]), max_new=10,
+                    obs=OBS, max_batch=2, max_seq=96, paged=True,
+                    block_size=8, prefill_chunk=16,
+                    spec=SpecConfig(drafter="ngram", k=3))
+    tr = eng.tracer
+    verifies = [e for e in tr.events if e.name == "spec_verify"]
+    assert verifies
+    reg = eng.metrics.registry
+    assert sum(e.attrs["drafted"] for e in verifies) \
+        == reg.value("spec_drafted_tokens_total")
+    assert sum(e.attrs["emitted"] for e in verifies) \
+        == reg.value("spec_emitted_tokens_total")
+    for e in verifies:
+        assert 0 <= e.attrs["accepted"] <= e.attrs["drafted"]
+    for e in tr.events:
+        if e.name == "spec_rollback":
+            assert e.attrs["rejected"] > 0
+
+
+def test_spec_per_request_reconciles_with_tokens(nectar):
+    """Acceptance: per-request realized spec counters reconcile exactly —
+    emitted sums match the fleet counter, and each request's emitted
+    tokens equal its tokens_out minus the prefill-emitted first token."""
+    cfg, _, params = nectar
+    toks, eng = _serve(cfg, params, _prompts(cfg, [12, 12, 12]),
+                       max_new=10, obs=OBS, max_batch=2, max_seq=96,
+                       paged=True, block_size=8, prefill_chunk=16,
+                       spec=SpecConfig(drafter="ngram", k=3))
+    s = eng.metrics.summary()
+    per_req = s["spec_per_request"]
+    assert per_req
+    reg = eng.metrics.registry
+    assert sum(r["emitted"] for r in per_req.values()) \
+        == reg.value("spec_emitted_tokens_total")
+    assert sum(r["drafted"] for r in per_req.values()) \
+        == reg.value("spec_drafted_tokens_total")
+    for rid, r in per_req.items():
+        # verify passes emit everything after the first (prefill) token
+        assert r["emitted"] == len(toks[rid]) - 1
+        assert r["acceptance"] is None or 0.0 <= r["acceptance"] <= 1.0
+        assert r["tokens_per_verify"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# exporters
+
+
+def test_perfetto_export_valid_and_monotonic(nectar, tmp_path):
+    cfg, _, params = nectar
+    _, eng = _serve(cfg, params, _prompts(cfg, [5, 30]), obs=OBS,
+                    max_batch=2, max_seq=64, paged=True, block_size=8,
+                    prefill_chunk=16)
+    trace = perfetto_trace(eng.tracer, eng.metrics.registry)
+    evs = [e for e in trace["traceEvents"] if e["ph"] != "M"]
+    assert evs
+    assert all(b["ts"] >= a["ts"] for a, b in zip(evs, evs[1:]))
+    assert all(e["dur"] >= 0 for e in evs if e["ph"] == "X")
+    # one engine lane per phase name, one request lane per rid
+    lanes = {e["args"]["name"] for e in trace["traceEvents"]
+             if e["ph"] == "M" and e.get("pid") == 1
+             and e["name"] == "thread_name"}
+    assert {"tick", "schedule", "device_dispatch", "device_wait",
+            "sample_sync", "postprocess"} <= lanes
+    assert trace["metadata"]["n_ticks"] == eng.tracer.n_ticks
+    assert trace["metadata"]["metrics"]["request_finished_total"] == 2
+
+    p = write_perfetto(eng.tracer, str(tmp_path / "t.trace.json"),
+                       registry=eng.metrics.registry)
+    assert check_trace.check_perfetto(p) == []
+    j = write_jsonl(eng.tracer, str(tmp_path / "t.events.jsonl"))
+    assert check_trace.check_jsonl(j) == []
+    with open(j) as f:
+        kinds = [json.loads(ln)["kind"] for ln in f]
+    assert kinds[0] == "meta"
+    assert {"span", "event", "tick"} <= set(kinds)
+
+
+def test_check_trace_catches_corruption(tmp_path):
+    bad = tmp_path / "bad.trace.json"
+    bad.write_text(json.dumps({"traceEvents": [
+        {"ph": "X", "ts": 10.0, "dur": 1.0},
+        {"ph": "X", "ts": 5.0, "dur": -2.0},
+        {"ph": "?", "ts": 6.0},
+    ]}))
+    errs = check_trace.check_perfetto(str(bad))
+    assert any("not monotonic" in e for e in errs)
+    assert any("bad dur" in e for e in errs)
+    assert any("unknown ph" in e for e in errs)
+    badl = tmp_path / "bad.events.jsonl"
+    badl.write_text(
+        json.dumps({"kind": "event", "rid": 0, "name": "finish",
+                    "ts_us": 1.0}) + "\n"
+        + json.dumps({"kind": "event", "rid": 0, "name": "arrival",
+                      "ts_us": 2.0}) + "\n")
+    errs = check_trace.check_jsonl(str(badl))
+    assert any("precedes" in e for e in errs)
+    assert any("no meta header" in e for e in errs)
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+
+def test_registry_basics_and_parity():
+    reg = Registry()
+    c = reg.counter("x_events_total", help="things")
+    c.inc()
+    c.inc(3)
+    assert reg.counter("x_events_total") is c      # get-or-create
+    g = reg.gauge("x_depth")
+    g.set(7)
+    reg.gauge_group("pool", lambda: {"free": 5, "name": "skip-me",
+                                     "frag": 0.25})
+    h = reg.histogram("x_wait_seconds", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(10.0)
+    snap = reg.collect()
+    assert snap["x_events_total"] == 4
+    assert snap["x_depth"] == 7
+    assert snap["pool_free"] == 5 and snap["pool_frag"] == 0.25
+    assert "pool_name" not in snap                 # non-numeric skipped
+    assert snap["x_wait_seconds"]["count"] == 3
+    assert snap["x_wait_seconds"]["mean"] == pytest.approx(10.55 / 3)
+
+    text = reg.prometheus_text()
+    assert "# TYPE x_events_total counter" in text
+    assert "x_events_total 4" in text
+    assert "# HELP x_events_total things" in text
+    assert 'x_wait_seconds_bucket{le="0.1"} 1' in text
+    assert 'x_wait_seconds_bucket{le="+Inf"} 3' in text
+    assert "x_wait_seconds_count 3" in text
+    assert "pool_free 5" in text
+
+    with pytest.raises(ValueError):
+        reg.gauge("x_events_total")                # type mismatch
+
+
+def test_registry_dead_gauge_group_survives():
+    reg = Registry()
+
+    def boom():
+        raise RuntimeError("gone")
+
+    reg.gauge_group("dead", boom)
+    reg.counter("ok_total").inc()
+    assert reg.collect()["ok_total"] == 1          # scrape survives
+    assert "dead" not in reg.prometheus_text()
+
+
+def test_engine_registry_matches_summary(nectar):
+    """Exporter parity: summary(), registry.collect(), and the
+    Prometheus text all read the same numbers."""
+    cfg, _, params = nectar
+    _, eng = _serve(cfg, params, _prompts(cfg, [5, 30]), obs=OBS,
+                    max_batch=2, max_seq=64, paged=True, block_size=8,
+                    prefill_chunk=16, prefix_cache=True)
+    s = eng.metrics.summary()
+    reg = eng.metrics.registry
+    snap = reg.collect()
+    assert snap["engine_decode_steps_total"] == s["decode_steps"]
+    assert snap["engine_prefill_chunks_total"] == s["prefill_chunks"]
+    assert snap["sched_preemptions_total"] == s["evictions"]
+    assert snap["request_finished_total"] == s["n_finished"]
+    assert snap["prefix_lookups_total"] == s["prefix_lookups"]
+    assert snap["traffic_weight_bytes_total"] == s["weight_bytes"]
+    # pull-style gauge groups mirror the live stats dicts
+    pool = eng.pool.stats()
+    for k, v in pool.items():
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            continue
+        assert snap[f"pool_{k}"] == v, k
+    text = reg.prometheus_text()
+    assert f"request_finished_total {s['n_finished']}" in text
+    assert f"engine_decode_steps_total {s['decode_steps']}" in text
+
+
+# ---------------------------------------------------------------------------
+# summary() empty-window semantics (satellite: zero-request edge cases)
+
+
+def test_summary_zero_requests_is_null_not_zero(nectar):
+    cfg, _, params = nectar
+    col = metrics_mod.MetricsCollector(cfg, ServeConfig(paged=True))
+    s = col.summary()
+    assert s["n_finished"] == 0
+    assert s["tokens_per_s"] is None
+    assert s["ttft_p50_ms"] is None
+    assert s["ttft_p99_ms"] is None
+    assert s["latency_p50_ms"] is None
+    assert s["tpot_p50_ms"] is None
+    assert s["ttft_hit_p50_ms"] is None
+    # ratio guards intentionally stay 0.0 (benchmarks format them)
+    assert s["spec_acceptance_rate"] == 0.0
+    assert s["prefix_hit_rate"] == 0.0
+
+
+def test_summary_unfinished_requests_are_null(nectar):
+    """Arrivals with no finishes (the all-preempted / still-running
+    window): percentiles and throughput must be None, and the arrival
+    is still counted."""
+    cfg, _, params = nectar
+    col = metrics_mod.MetricsCollector(cfg, ServeConfig(paged=True))
+    col.on_arrival(0, 10)
+    col.on_preemption(0)
+    s = col.summary()
+    assert s["n_finished"] == 0 and s["evictions"] == 1
+    assert s["tokens_per_s"] is None
+    assert s["ttft_p50_ms"] is None and s["latency_p99_ms"] is None
+    assert col.registry.value("request_arrivals_total") == 1
+    assert col.registry.value("request_finished_total") == 0
+
+
+def test_legacy_engine_timeline_and_summary(nectar):
+    """The legacy slot path traces too (arrival/first_token/finish plus
+    tick spans) — the obs subsystem is not paged-only."""
+    cfg, _, params = nectar
+    _, eng = _serve(cfg, params, _prompts(cfg, [5, 9]), obs=OBS,
+                    max_batch=2, max_seq=64, paged=False)
+    tr = eng.tracer
+    for rid in (0, 1):
+        names = _names(tr, rid)
+        assert names[0] == "arrival" and names[-1] == "finish"
+        assert "first_token" in names
+    assert {"tick", "device_dispatch", "sample_sync"} \
+        <= {s.name for s in tr.spans}
+    assert eng.metrics.summary()["ticks"]["n_ticks"] == tr.n_ticks

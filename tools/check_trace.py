@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Validate repro.obs trace artifacts (CI gate; see docs/observability.md).
+
+    python tools/check_trace.py TRACE.trace.json [EVENTS.events.jsonl]
+
+Checks, for the Perfetto/Chrome-trace JSON:
+
+  * the file parses and ``traceEvents`` is a non-empty list;
+  * every event has a known phase (``X``/``i``/``M``), numeric ``ts``,
+    and ``X`` events a non-negative ``dur``;
+  * non-metadata events are sorted by ``ts`` (monotonic timeline — the
+    Perfetto UI tolerates disorder, this repo's exporter must not).
+
+And for the JSONL event log:
+
+  * every line parses as JSON with a known ``kind``
+    (meta/span/event/tick);
+  * per request id, lifecycle ordering holds:
+    arrival <= admitted <= first_token <= finish (when present);
+  * a ``meta`` header exists and its ``dropped`` count is reported
+    (a truncated trace is a warning, not a failure).
+
+Importable: ``check_perfetto(path)`` / ``check_jsonl(path)`` return a
+list of error strings (empty = valid). The CLI exits 0 iff all files
+validate.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+KNOWN_PH = {"X", "i", "M", "B", "E", "C"}
+# lifecycle milestones with a required ordering; other event names
+# (prefill_chunk, preempted, spec_*, cow, replay_done) may repeat and
+# interleave freely
+ORDERED = ("arrival", "admitted", "first_token", "finish")
+KNOWN_KINDS = {"meta", "span", "event", "tick"}
+
+
+def check_perfetto(path: str) -> List[str]:
+    errs: List[str] = []
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable trace JSON: {e}"]
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: traceEvents missing or empty"]
+    last_ts = None
+    n_spans = 0
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph not in KNOWN_PH:
+            errs.append(f"{path}: event {i}: unknown ph {ph!r}")
+            continue
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            errs.append(f"{path}: event {i}: non-numeric ts {ts!r}")
+            continue
+        if ph == "X":
+            n_spans += 1
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errs.append(f"{path}: event {i}: bad dur {dur!r}")
+        if last_ts is not None and ts < last_ts:
+            errs.append(f"{path}: event {i}: ts {ts} < previous "
+                        f"{last_ts} (not monotonic)")
+        last_ts = ts
+    if not n_spans:
+        errs.append(f"{path}: no complete ('X') span events")
+    meta = trace.get("metadata", {})
+    if meta.get("dropped"):
+        print(f"[check_trace] warning: {path}: {meta['dropped']} "
+              f"records dropped (ObsConfig.max_events reached)")
+    return errs
+
+
+def check_jsonl(path: str) -> List[str]:
+    errs: List[str] = []
+    milestones: dict = {}          # rid -> {name: first ts_us}
+    saw_meta = False
+    try:
+        f = open(path)
+    except OSError as e:
+        return [f"{path}: unreadable: {e}"]
+    with f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                errs.append(f"{path}:{ln}: bad JSON: {e}")
+                continue
+            kind = rec.get("kind")
+            if kind not in KNOWN_KINDS:
+                errs.append(f"{path}:{ln}: unknown kind {kind!r}")
+                continue
+            if kind == "meta":
+                saw_meta = True
+                if rec.get("dropped"):
+                    print(f"[check_trace] warning: {path}: "
+                          f"{rec['dropped']} records dropped")
+            elif kind == "event":
+                name = rec.get("name")
+                if name in ORDERED:
+                    ms = milestones.setdefault(rec.get("rid"), {})
+                    ms.setdefault(name, rec.get("ts_us", 0.0))
+    if not saw_meta:
+        errs.append(f"{path}: no meta header line")
+    for rid, ms in sorted(milestones.items()):
+        chain = [(n, ms[n]) for n in ORDERED if n in ms]
+        for (n0, t0), (n1, t1) in zip(chain, chain[1:]):
+            if t1 < t0:
+                errs.append(f"{path}: rid {rid}: {n1} at {t1}us "
+                            f"precedes {n0} at {t0}us")
+        if "finish" in ms and "arrival" not in ms:
+            errs.append(f"{path}: rid {rid}: finish without arrival")
+    return errs
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    errs: List[str] = []
+    for path in argv:
+        if path.endswith(".jsonl"):
+            errs += check_jsonl(path)
+        else:
+            errs += check_perfetto(path)
+    for e in errs:
+        print(f"[check_trace] FAIL: {e}")
+    if not errs:
+        print(f"[check_trace] OK: {len(argv)} file(s) valid")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
