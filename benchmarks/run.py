@@ -12,35 +12,90 @@
 Run: PYTHONPATH=src python -m benchmarks.run [--only <name>] [--quick]
 
 ``--quick`` is the CI smoke mode: it runs only the serving-path suites
-(bench_serving, bench_spec, bench_prefix) on tiny traces — fast enough
-for the tier-1 workflow, so the benchmark scripts themselves can't
-silently rot. It also writes one consolidated ``BENCH_quick.json`` index
-(suite -> artifact file -> headline metrics) so the perf trajectory
-stays machine-readable across PRs without parsing per-suite schemas
-(docs/benchmarks.md documents all of them).
+(bench_serving, bench_spec, bench_prefix, serving_roofline) on tiny
+traces — fast enough for the tier-1 workflow, so the benchmark scripts
+themselves can't silently rot. It also writes one consolidated
+``BENCH_quick.json`` index (suite -> artifact file -> headline metrics)
+so the perf trajectory stays machine-readable across PRs without
+parsing per-suite schemas (docs/benchmarks.md documents all of them),
+and appends one record per run to ``benchmarks/history/quick.jsonl``
+(timestamp + machine fingerprint + every row) — the append-only log
+``tools/bench_compare.py`` and the CI perf-gate read trends from.
 """
 
 import argparse
 import json
 import os
+import platform
 import sys
+import time
 import traceback
 
 _DIR = os.path.dirname(os.path.abspath(__file__))
 ART_INDEX = os.path.join(_DIR, "BENCH_quick.json")
+HISTORY = os.path.join(_DIR, "history", "quick.jsonl")
+DRYRUN_DIR = os.path.join(_DIR, "artifacts", "dryrun")
 
 SUITES = ["bench_matmul", "bench_sparsity", "bench_prefetch", "bench_e2e",
-          "bench_serving", "bench_spec", "bench_prefix", "roofline_report"]
+          "bench_serving", "bench_spec", "bench_prefix",
+          "serving_roofline", "roofline_report"]
 # serving-path suites accepting a quick=... kwarg (the CI smoke subset)
-QUICK_SUITES = ["bench_serving", "bench_spec", "bench_prefix"]
+QUICK_SUITES = ["bench_serving", "bench_spec", "bench_prefix",
+                "serving_roofline"]
 # per-suite artifact written in --quick mode (relative to benchmarks/)
 QUICK_ARTIFACTS = {"bench_serving": "BENCH_serving_quick.json",
                    "bench_spec": "BENCH_spec_quick.json",
-                   "bench_prefix": "BENCH_prefix_quick.json"}
+                   "bench_prefix": "BENCH_prefix_quick.json",
+                   "serving_roofline": "BENCH_serving_roofline_quick.json"}
 # extra per-suite artifacts referenced from the quick index (the
-# Perfetto trace bench_serving writes alongside its summary; uploaded
-# as a CI artifact by the bench-smoke job)
-QUICK_EXTRAS = {"bench_serving": "TRACE_serving_quick.trace.json"}
+# Perfetto traces written alongside the summaries; uploaded as CI
+# artifacts by the bench-smoke / perf-gate jobs)
+QUICK_EXTRAS = {"bench_serving": "TRACE_serving_quick.trace.json",
+                "serving_roofline": "TRACE_roofline_quick.trace.json"}
+
+
+def machine_fingerprint() -> dict:
+    """Coarse machine identity stamped into history records and
+    baselines: enough to tell 'different machine' from 'regression'
+    (tools/bench_compare.py warns when it differs from the baseline's
+    instead of hard-failing)."""
+    import jax
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "cpus": os.cpu_count(),
+    }
+
+
+def append_history(results: dict) -> None:
+    """Append one JSONL record for this --quick run: ISO timestamp,
+    machine fingerprint, git commit (if resolvable), and every suite's
+    rows. Append-only: CI uploads the record as an artifact; the
+    committed file carries one record per landed PR."""
+    os.makedirs(os.path.dirname(HISTORY), exist_ok=True)
+    commit = None
+    try:
+        import subprocess
+        commit = subprocess.run(
+            ["git", "-C", _DIR, "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except Exception:  # noqa: BLE001 — fingerprint only, never fatal
+        pass
+    rec = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "commit": commit,
+        "fingerprint": machine_fingerprint(),
+        "suites": {suite: {name: {"us": round(us, 1), "derived": derived}
+                           for name, us, derived in rows}
+                   for suite, rows in results.items()},
+    }
+    with open(HISTORY, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(f"# appended history record to {HISTORY}", file=sys.stderr)
 
 
 def write_quick_index(results: dict) -> None:
@@ -63,6 +118,16 @@ def write_quick_index(results: dict) -> None:
         }
         if extra and os.path.exists(os.path.join(_DIR, extra)):
             index[suite]["trace"] = extra
+    # roofline_report needs dry-run artifacts (repro.launch.dryrun) that
+    # the quick subset never generates — record WHY the suite is absent
+    # instead of silently omitting it, so cross-PR tooling can tell
+    # "skipped" from "rotted away"
+    if "roofline_report" not in index:
+        has_dryrun = (os.path.isdir(DRYRUN_DIR)
+                      and any(f.endswith(".json")
+                              for f in os.listdir(DRYRUN_DIR)))
+        if not has_dryrun:
+            index["roofline_report"] = {"skipped": "no dryrun artifacts"}
     with open(ART_INDEX, "w") as f:
         json.dump(index, f, indent=1)
     print(f"# wrote {ART_INDEX}", file=sys.stderr)
@@ -101,6 +166,7 @@ def main() -> None:
             traceback.print_exc()
     if args.quick:
         write_quick_index(results)
+        append_history(results)
     if failed:
         print(f"# FAILED suites: {failed}", file=sys.stderr)
         raise SystemExit(1)

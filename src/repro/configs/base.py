@@ -220,6 +220,14 @@ class ObsConfig:
     always live, tracing on or off)."""
 
     enabled: bool = False
+    profile: bool = False           # roofline attainment profiling
+    #                                 (obs.profile): per-width-bucket
+    #                                 static cost (compiled-executable
+    #                                 FLOPs/bytes, per-named_scope) joined
+    #                                 with measured device_wait time.
+    #                                 Implies enabled (needs the fenced
+    #                                 tick spans); off the hot path — the
+    #                                 cost twin compiles lazily per bucket.
     tick_spans: bool = True         # per-tick phase spans
     timeline: bool = True           # per-request lifecycle events
     fence_device: bool = True       # block_until_ready between dispatch

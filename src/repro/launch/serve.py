@@ -80,6 +80,13 @@ def main():
     ap.add_argument("--metrics-port", type=int, default=0,
                     help="serve Prometheus text metrics on GET "
                          ":PORT/metrics from a daemon thread")
+    ap.add_argument("--profile", action="store_true",
+                    help="roofline attainment profiling (implies --obs; "
+                         "paged only): per width bucket, compiled-"
+                         "executable FLOPs/bytes joined with measured "
+                         "device time -> achieved GFLOP/s, GB/s, and %% "
+                         "of the active hardware roofline, printed as a "
+                         "table (docs/observability.md)")
     # --- per-request SamplingParams (applied to every demo request) ---
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples on-device")
@@ -112,9 +119,9 @@ def main():
         mesh = MeshConfig(model=args.mesh,
                           shard_kv_seq=args.shard_kv_seq)
     obs = None
-    if args.obs or args.trace_out:
+    if args.obs or args.trace_out or args.profile:
         from repro.configs.base import ObsConfig
-        obs = ObsConfig(enabled=True)
+        obs = ObsConfig(enabled=True, profile=args.profile)
     scfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
                        sparse_decode=not args.dense, paged=args.paged,
                        block_size=args.block_size,
@@ -168,10 +175,16 @@ def main():
                 "spec_tokens_per_verify": s["spec_tokens_per_verify"]})
     if eng.tracer.enabled:
         out["ticks"] = eng.tracer.tick_summary()
+    if args.profile:
+        from repro.obs import attainment_table
+        rows = eng.profiler.report(eng.tracer.tick_stats)
+        out["bucket_attainment"] = rows
+        print(attainment_table(rows))
     if args.trace_out:
         from repro.obs import write_jsonl, write_perfetto
         trace = write_perfetto(eng.tracer, args.trace_out + ".trace.json",
-                               registry=eng.metrics.registry)
+                               registry=eng.metrics.registry,
+                               profiler=eng.profiler)
         events = write_jsonl(eng.tracer, args.trace_out + ".events.jsonl")
         out["trace_files"] = [trace, events]
     print(json.dumps(out, indent=1))

@@ -64,14 +64,23 @@ def ffn_step(p, cfg: ModelConfig, x, is_prefill, has_prefill: bool = True):
     # runs over a replicated d_ff against the output-sharded w_down — a
     # concatenation instead of a psum of partials (the sparse gather path
     # is psum-free already; the dense branch is not without this)
+    #
+    # named_scope: the profiling contract (obs.costmodel attributes HLO
+    # op cost by scope name). "ffn_dense" covers the dense MXU path plus
+    # the mixed-tick shared up/gate hidden; "ffn_sparse" the gathered
+    # decode path. Metadata only — no math change.
     if not cfg.relu_sparse:
-        return constrain_tp_exact(ffn_forward(p, cfg, x))
+        with jax.named_scope("ffn_dense"):
+            return constrain_tp_exact(ffn_forward(p, cfg, x))
     if not has_prefill:
-        return constrain_tp_exact(ffn_decode(p, cfg, x))
-    h = sparsity.ffn_hidden(x, p["w_up"], "relu", p.get("w_gate"))
-    h = constrain_tp_exact(h)
+        with jax.named_scope("ffn_sparse"):
+            return constrain_tp_exact(ffn_decode(p, cfg, x))
+    with jax.named_scope("ffn_dense"):
+        h = sparsity.ffn_hidden(x, p["w_up"], "relu", p.get("w_gate"))
+        h = constrain_tp_exact(h)
+        down_d = sparsity.down_dense(h, p["w_down"])
     k = sparsity.active_fraction_to_k(cfg.d_ff, cfg.sparse_k_frac)
+    with jax.named_scope("ffn_sparse"):
+        down_s = sparsity.down_sparse(h, p["w_down"], k)
     return constrain_tp_exact(
-        jnp.where(is_prefill[:, None, None],
-                  sparsity.down_dense(h, p["w_down"]),
-                  sparsity.down_sparse(h, p["w_down"], k)))
+        jnp.where(is_prefill[:, None, None], down_d, down_s))

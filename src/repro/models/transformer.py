@@ -106,7 +106,14 @@ def block_step_paged(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
     take the dense path, decode/verify rows the sparse-gather decode path
     — verify must score each position with EXACTLY the decode-step math
     (sparse gather under relu_sparse) or greedy spec output would drift
-    from the non-speculative engine."""
+    from the non-speculative engine.
+
+    The ``jax.named_scope`` annotations ("attn", "ffn_dense",
+    "ffn_sparse" inside ffn_step, "logits" in forward_step) are the
+    profiling contract (obs.costmodel): scope names survive into the
+    compiled HLO op metadata, which is how per-scope FLOP/byte
+    attribution in the roofline attainment report is computed. They add
+    metadata only — the math (and greedy token streams) is unchanged."""
     if kind == "shared_attn":
         p = ctx["shared_params"]
     if kind in ("attn", "shared_attn", "moe"):
@@ -115,17 +122,19 @@ def block_step_paged(kind, p, cfg: ModelConfig, x, ctx, cache: dict):
         # into the norm's mean reduction — a psum whose accumulation
         # order would perturb the residual stream (and through int8 KV
         # quantization rounding, the emitted tokens)
-        h = constrain_tp_exact(layers.rms_norm(x, p["norm1"],
-                                               cfg.norm_eps))
-        a, new_cache = attention.attn_step_paged(
-            p["attn"], cfg, h, ctx["cos"], ctx["sin"], cache, ctx["lens"],
-            ctx["n_valid"], ctx["tables"], ctx["block_size"],
-            backend=ctx["backend"])
-        x = x + a
+        with jax.named_scope("attn"):
+            h = constrain_tp_exact(layers.rms_norm(x, p["norm1"],
+                                                   cfg.norm_eps))
+            a, new_cache = attention.attn_step_paged(
+                p["attn"], cfg, h, ctx["cos"], ctx["sin"], cache,
+                ctx["lens"], ctx["n_valid"], ctx["tables"],
+                ctx["block_size"], backend=ctx["backend"])
+            x = x + a
         h = constrain_tp_exact(layers.rms_norm(x, p["norm2"],
                                                cfg.norm_eps))
         if kind == "moe":
-            y, _ = moe.moe_forward(p["moe"], cfg, h)
+            with jax.named_scope("ffn_dense"):
+                y, _ = moe.moe_forward(p["moe"], cfg, h)
         else:
             y = ffn.ffn_step(p["ffn"], cfg, h, ctx["is_prefill"],
                              has_prefill=ctx["has_prefill"])
@@ -472,11 +481,28 @@ def forward_step(params, cfg: ModelConfig, tokens, cache, n_valid,
             new_caches[f"b{j}"] = nc
         return x, new_caches
 
-    x, new_units = jax.lax.scan(unit_body, x,
-                                (params["units"], cache["units"]))
-    x = constrain_tp_exact(
-        layers.rms_norm(x, params["final_norm"], cfg.norm_eps))
-    logits = project_logits(params, cfg, x)
+    if cfg.unroll:
+        # loop-free twin of the scan below (same math, same cache
+        # layout). obs.costmodel lowers the step with unroll=True so
+        # compiled.cost_analysis() and the HLO-text scope attribution
+        # count every unit — XLA reports a while-loop body ONCE
+        # regardless of trip count, which would undercount the stack
+        # n_units-fold.
+        new_unit_list = []
+        for i in range(cfg.n_units):
+            u_p = jax.tree.map(lambda a: a[i], params["units"])
+            u_c = jax.tree.map(lambda a: a[i], cache["units"])
+            x, nc = unit_body(x, (u_p, u_c))
+            new_unit_list.append(nc)
+        new_units = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *new_unit_list)
+    else:
+        x, new_units = jax.lax.scan(unit_body, x,
+                                    (params["units"], cache["units"]))
+    with jax.named_scope("logits"):
+        x = constrain_tp_exact(
+            layers.rms_norm(x, params["final_norm"], cfg.norm_eps))
+        logits = project_logits(params, cfg, x)
     return logits, {"lens": lens,
                     "block_tables": cache["block_tables"],
                     "units": new_units}

@@ -20,6 +20,13 @@ live in one registry that all exporters read.
   export    Perfetto/Chrome-trace JSON (one lane per engine phase, one
             per request), JSONL structured log, Prometheus text +
             scrape endpoint (launch.serve --metrics-port/--trace-out).
+  costmodel Static cost of the compiled serving step per width bucket:
+            cost_analysis() totals + per-jax.named_scope FLOP/byte
+            attribution parsed from the optimized HLO (unrolled twin).
+  profile   Roofline attainment (ObsConfig.profile / launch.serve
+            --profile): static cost joined with measured device_wait
+            time -> per-bucket achieved GFLOP/s, GB/s, arithmetic
+            intensity, and % of the active hardware spec's roofline.
 
 Turn on with ``ServeConfig(obs=ObsConfig(enabled=True))``; greedy
 output is token-identical tracing on or off (tracing observes, never
@@ -28,12 +35,14 @@ schedules).
 
 from repro.obs.export import (perfetto_trace, start_metrics_server,
                               write_jsonl, write_perfetto)
+from repro.obs.profile import ServingProfiler, attainment_table
 from repro.obs.registry import Counter, Gauge, Histogram, Registry
 from repro.obs.trace import (NULL_TRACER, Event, NullTracer, Span, Tracer,
                              make_tracer)
 
 __all__ = [
     "Counter", "Event", "Gauge", "Histogram", "NULL_TRACER", "NullTracer",
-    "Registry", "Span", "Tracer", "make_tracer", "perfetto_trace",
-    "start_metrics_server", "write_jsonl", "write_perfetto",
+    "Registry", "ServingProfiler", "Span", "Tracer", "attainment_table",
+    "make_tracer", "perfetto_trace", "start_metrics_server",
+    "write_jsonl", "write_perfetto",
 ]

@@ -36,12 +36,16 @@ def _us(t: float) -> float:
     return round(t * 1e6, 3)
 
 
-def perfetto_trace(tracer: Tracer, registry: Optional[Registry] = None
-                   ) -> dict:
+def perfetto_trace(tracer: Tracer, registry: Optional[Registry] = None,
+                   profiler=None) -> dict:
     """Tracer record -> Chrome trace-event JSON (dict; json.dump it).
     Events are sorted by timestamp (monotonic ts is asserted by
     tools/check_trace.py). Registry counters ride along in
-    ``metadata`` so a trace file is self-describing."""
+    ``metadata`` so a trace file is self-describing. ``profiler`` (an
+    obs.profile.ServingProfiler) adds per-tick COUNTER tracks ("C"
+    events on the engine process: achieved_gflops / achieved_gbs /
+    roofline_attainment) — the time-resolved view of the per-bucket
+    attainment table."""
     events = []
     meta = [
         {"ph": "M", "pid": ENGINE_PID, "name": "process_name",
@@ -85,6 +89,12 @@ def perfetto_trace(tracer: Tracer, registry: Optional[Registry] = None
         if e.attrs:
             ev["args"].update(e.attrs)
         events.append(ev)
+    # --- roofline counter tracks (obs.profile) ---
+    if profiler is not None:
+        for name, t0, val in profiler.tick_counters(tracer.tick_stats):
+            events.append({"ph": "C", "pid": ENGINE_PID, "name": name,
+                           "ts": _us(t0),
+                           "args": {"value": round(float(val), 6)}})
     events.sort(key=lambda ev: (ev["ts"], ev.get("dur", 0.0)))
     trace = {
         "traceEvents": meta + events,
@@ -104,9 +114,10 @@ def perfetto_trace(tracer: Tracer, registry: Optional[Registry] = None
 
 
 def write_perfetto(tracer: Tracer, path: str,
-                   registry: Optional[Registry] = None) -> str:
+                   registry: Optional[Registry] = None,
+                   profiler=None) -> str:
     with open(path, "w") as f:
-        json.dump(perfetto_trace(tracer, registry), f)
+        json.dump(perfetto_trace(tracer, registry, profiler=profiler), f)
     return path
 
 

@@ -18,6 +18,15 @@ Gauge groups adapt the existing pull-style stats dicts: registering
 ``gauge_group("pool", pool.stats)`` exposes every key of ``stats()`` as
 a ``pool_<key>`` gauge, evaluated at collect time — the pool keeps
 owning its numbers, the registry owns discovery and export.
+
+Labeled gauge groups are the two-level variant for per-entity series
+(per width bucket, per request): ``labeled_gauge_group("bucket_
+attainment", "bucket", fn)`` with ``fn() -> {label_value: {suffix:
+value}}`` exposes ``bucket_attainment_<suffix>{bucket="<value>"}``.
+Label VALUES pass through ``escape_label_value`` (backslash, quote,
+newline — the Prometheus text-format escapes), so entity names the
+registry doesn't control (request ids, bucket labels) can't corrupt
+the exposition.
 """
 
 from __future__ import annotations
@@ -27,6 +36,20 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 # default latency buckets (seconds): 1ms .. ~33s, x2 steps
 DEFAULT_BUCKETS = tuple(0.001 * 2 ** i for i in range(16))
+
+
+def escape_label_value(v: str) -> str:
+    """Prometheus text-format label-value escaping: backslash FIRST
+    (escaping the escapes an earlier pass introduced would double
+    them), then double-quote and newline."""
+    return str(v).replace("\\", "\\\\").replace('"', '\\"') \
+        .replace("\n", "\\n")
+
+
+def escape_help(v: str) -> str:
+    """HELP-line escaping: backslash and newline only (quotes are legal
+    in help text)."""
+    return str(v).replace("\\", "\\\\").replace("\n", "\\n")
 
 
 class Counter:
@@ -109,6 +132,8 @@ class Registry:
     def __init__(self):
         self._metrics: Dict[str, object] = {}
         self._groups: Dict[str, Callable[[], dict]] = {}
+        # prefix -> (label name, fn() -> {label value: {suffix: value}})
+        self._labeled: Dict[str, tuple] = {}
 
     def _get(self, cls, name: str, **kw):
         m = self._metrics.get(name)
@@ -140,6 +165,14 @@ class Registry:
         skipped (export formats are numeric)."""
         self._groups[prefix] = fn
 
+    def labeled_gauge_group(self, prefix: str, label: str,
+                            fn: Callable[[], dict]) -> None:
+        """Per-entity gauge series: ``fn() -> {label_value: {suffix:
+        value}}`` exposes ``<prefix>_<suffix>{<label>="<value>"}``
+        gauges, re-evaluated at each collect/scrape. Label values are
+        escaped at exposition time — callers pass raw strings."""
+        self._labeled[prefix] = (label, fn)
+
     # --- reads ------------------------------------------------------------
     def _group_values(self) -> Dict[str, float]:
         out = {}
@@ -152,6 +185,31 @@ class Registry:
                 if isinstance(v, bool) or not isinstance(v, (int, float)):
                     continue
                 out[f"{prefix}_{k}"] = v
+        return out
+
+    def _labeled_series(self) -> List[tuple]:
+        """Flattened labeled-group samples: (metric name, label name,
+        raw label value, value), suffix-major so exposition can emit
+        one TYPE line per metric name."""
+        out: List[tuple] = []
+        for prefix, (label, fn) in self._labeled.items():
+            try:
+                d = fn()
+            except Exception:   # noqa: BLE001 — a dead gauge must not
+                continue        # take down the whole scrape
+            series: Dict[str, List[tuple]] = {}
+            for lv, metrics in d.items():
+                if not isinstance(metrics, dict):
+                    continue
+                for k, v in metrics.items():
+                    if isinstance(v, bool) \
+                            or not isinstance(v, (int, float)):
+                        continue
+                    series.setdefault(f"{prefix}_{k}", []).append(
+                        (str(lv), v))
+            for name in sorted(series):
+                for lv, v in sorted(series[name]):
+                    out.append((name, label, lv, v))
         return out
 
     def collect(self) -> Dict[str, object]:
@@ -168,6 +226,8 @@ class Registry:
             else:
                 out[name] = m.value
         out.update(self._group_values())
+        for name, label, lv, v in self._labeled_series():
+            out[f'{name}{{{label}="{escape_label_value(lv)}"}}'] = v
         return out
 
     def value(self, name: str, default=0):
@@ -179,7 +239,7 @@ class Registry:
         lines: List[str] = []
         for name, m in sorted(self._metrics.items()):
             if m.help:
-                lines.append(f"# HELP {name} {m.help}")
+                lines.append(f"# HELP {name} {escape_help(m.help)}")
             if isinstance(m, Counter):
                 lines.append(f"# TYPE {name} counter")
                 lines.append(f"{name} {m.value}")
@@ -196,7 +256,15 @@ class Registry:
         for name, v in sorted(self._group_values().items()):
             lines.append(f"# TYPE {name} gauge")
             lines.append(f"{name} {v}")
+        last = None
+        for name, label, lv, v in self._labeled_series():
+            if name != last:
+                lines.append(f"# TYPE {name} gauge")
+                last = name
+            lines.append(
+                f'{name}{{{label}="{escape_label_value(lv)}"}} {v}')
         return "\n".join(lines) + "\n"
 
 
-__all__ = ["Counter", "DEFAULT_BUCKETS", "Gauge", "Histogram", "Registry"]
+__all__ = ["Counter", "DEFAULT_BUCKETS", "Gauge", "Histogram", "Registry",
+           "escape_help", "escape_label_value"]

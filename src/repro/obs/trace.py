@@ -293,8 +293,10 @@ class Tracer:
 
 def make_tracer(cfg: Optional[ObsConfig]):
     """ObsConfig -> NULL_TRACER (disabled; the shared no-op singleton)
-    or a fresh recording Tracer."""
-    if cfg is None or not cfg.enabled:
+    or a fresh recording Tracer. ``profile`` implies tracing: attainment
+    joins static cost with the fenced device_wait spans, so a profiling
+    run without the spans would have nothing to measure."""
+    if cfg is None or not (cfg.enabled or cfg.profile):
         return NULL_TRACER
     return Tracer(cfg)
 

@@ -34,6 +34,41 @@ V5E = Chip(
     vmem_bytes=128 * 1024 * 1024 // 8,  # 16 MiB usable VMEM
 )
 
+# Nominal CPU-host spec for serving-side attainment on machines without
+# accelerators (CI, dev boxes): a generous modern server socket — AVX2-
+# class f32 matmul throughput and dual-channel-plus DRAM bandwidth. The
+# numbers are deliberately on the high side so measured CPU runs land
+# strictly below the roofline (attainment stays in (0, 1]); they bound
+# optimism, not a specific SKU. obs.profile clamps at 1.0 and flags if a
+# machine ever beats them.
+CPU_HOST = Chip(
+    name="cpu-host",
+    peak_flops=2e12,
+    peak_int8_ops=4e12,
+    hbm_bw=100e9,              # DRAM, not HBM — same roofline role
+    ici_bw=0.0,
+    ici_links=0,
+    dcn_bw=12.5e9,
+    hbm_gib=64.0,
+    vmem_bytes=32 * 1024 * 1024,   # ~L2+L3 slice per core complex
+)
+
+CHIPS = {c.name: c for c in (V5E, CPU_HOST)}
+
+
+def active_chip(backend: str | None = None) -> Chip:
+    """The hardware spec attainment is judged against: V5E on a TPU
+    backend, the nominal CPU-host spec otherwise. ``backend`` overrides
+    autodetection (a chip name from CHIPS also works — profiling a CPU
+    trace against the TPU roofline is how "how far from the real target
+    are we" reads)."""
+    if backend in CHIPS:
+        return CHIPS[backend]
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    return V5E if backend == "tpu" else CPU_HOST
+
 
 def ridge_point(chip: Chip = V5E, dtype_bits: int = 16) -> float:
     """FLOPs/byte at the memory/compute knee."""

@@ -75,6 +75,7 @@ class Engine:
         self.tracer = make_tracer(scfg.obs)
         self.metrics = metrics_mod.MetricsCollector(cfg, scfg)
         self.metrics.tracer = self.tracer
+        self.profiler = None           # obs.ServingProfiler (obs.profile)
         self._requests: Dict[int, Request] = {}
         self._rids = itertools.count()
         self.spec = scfg.spec
@@ -88,6 +89,10 @@ class Engine:
         if self.spec is not None and not scfg.paged:
             raise ValueError("speculative decode (ServeConfig.spec) "
                              "requires the paged engine (paged=True)")
+        if scfg.obs.profile and not scfg.paged:
+            raise ValueError("roofline profiling (ObsConfig.profile) "
+                             "profiles the unified ModelRunner step — "
+                             "paged=True only")
         if self.spec is not None and (cfg.n_codebooks or cfg.mrope):
             raise ValueError(
                 f"{cfg.name}: speculative decode supports plain token "
@@ -135,6 +140,10 @@ class Engine:
         self.metrics = metrics_mod.MetricsCollector(self.cfg, self.scfg)
         self.metrics.tracer = self.tracer
         self.tracer.reset()            # same window as the collector
+        if self.profiler is not None:
+            # static bucket costs survive the window reset — the
+            # compiled executables didn't change, only the measurement
+            self.metrics.profiler = self.profiler
         if self.scfg.paged:
             self.metrics.pool = self.pool
             self.metrics.prefix = self.prefix
@@ -310,6 +319,14 @@ class Engine:
         self.runner = ModelRunner(self.model, self.params, scfg,
                                   dtype=jnp.float32, mesh=self.mesh,
                                   policy=self._policy, tracer=self.tracer)
+        if scfg.obs.profile:
+            # roofline attainment (obs.profile): static per-bucket cost
+            # joins the tracer's fenced device_wait spans. Construction
+            # is cheap — the cost twin compiles lazily per observed
+            # bucket, never inside a tick.
+            from repro.obs.profile import ServingProfiler
+            self.profiler = ServingProfiler(self.runner)
+            self.metrics.profiler = self.profiler
         self._kv_per_tok = paged_kv.kv_bytes_per_token(self.cfg,
                                                        scfg.kv_quant)
         if self.spec is not None:
@@ -569,11 +586,17 @@ class Engine:
                 cow.extend(copies)
             if cow:
                 self.runner.copy_blocks(cow)
-            width = max(len(r[2]) for r in rows)
-            batch = self.runner.new_batch(width, self.pool.tables())
+            max_valid = max(len(r[2]) for r in rows)
+            batch = self.runner.new_batch(max_valid, self.pool.tables())
             for slot, phase, toks, start in rows:
                 batch.add_row(slot, phase, toks, start)
             valid_tokens = sum(len(r[2]) for r in rows)
+            # width = the COMPILED bucket (batch token width), not the
+            # max valid length: the device executes the padded bucket
+            # shape, so pad_waste must charge bucket padding too, and
+            # the roofline profiler joins tick time to static cost by
+            # exactly this (width, has_prefill) jit key
+            width = batch.tokens.shape[1]
             denom = self.scfg.max_batch * width
             tr.tick_attrs(
                 rows_prefill=len(prefill_plan),

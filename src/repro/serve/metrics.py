@@ -143,9 +143,15 @@ class RequestMetrics:
 def percentile(values: List[float], p: float) -> Optional[float]:
     """Percentile of a sample, or ``None`` for an empty one — an empty
     measurement window has no percentile, and reporting 0.0 used to
-    make zero-request runs look infinitely fast."""
+    make zero-request runs look infinitely fast. A SINGLE-sample window
+    reports that sample exactly for every p (p50 == p99 == the one
+    observation): one finished request is a real measurement, not an
+    empty window — the explicit-null rule must not swallow it, and the
+    exact value avoids interpolation noise in equality-pinning tests."""
     if not values:
         return None
+    if len(values) == 1:
+        return float(values[0])
     return float(np.percentile(np.asarray(values), p))
 
 
@@ -223,6 +229,7 @@ class MetricsCollector:
         self._prefix = None          # RadixPrefixCache — index counters
         self._mesh: dict = {}        # sharded serving: launch.mesh info
         self.tracer = None           # obs.Tracer when tracing is on
+        self._profiler = None        # obs.ServingProfiler (obs.profile)
         self._t0: Optional[float] = None
 
     # --- registry-backed live gauges -------------------------------------
@@ -255,6 +262,21 @@ class MetricsCollector:
         self._mesh = info
         if info:
             self.registry.gauge_group("mesh", lambda: self._mesh)
+
+    @property
+    def profiler(self):
+        return self._profiler
+
+    @profiler.setter
+    def profiler(self, profiler) -> None:
+        """Attaching the roofline profiler (obs.profile) exposes its
+        per-bucket attainment as ``bucket_attainment_<metric>{bucket=
+        "..."}`` labeled gauges — re-pulled from the live tracer at
+        every scrape — and as the ``bucket_attainment`` summary group."""
+        self._profiler = profiler
+        if profiler is not None:
+            self.registry.labeled_gauge_group(
+                "bucket_attainment", "bucket", profiler.gauges)
 
     # --- legacy attribute names over registry counters --------------------
     @property
@@ -467,4 +489,8 @@ class MetricsCollector:
         if self.tracer is not None and self.tracer.enabled:
             out["ticks"] = self.tracer.tick_summary()
             out["phase_ms_per_tick"] = self.tracer.phase_ms_per_tick()
+            # --- roofline attainment per width bucket (obs.profile) ---
+            if self._profiler is not None:
+                out["bucket_attainment"] = self._profiler.report(
+                    self.tracer.tick_stats)
         return out

@@ -381,6 +381,62 @@ def test_registry_dead_gauge_group_survives():
     assert "dead" not in reg.prometheus_text()
 
 
+def test_prometheus_label_value_escaping():
+    """Exposition escaping: label values from the wild (request ids
+    with quotes, backslashes, newlines) must round-trip per the
+    Prometheus text format — backslash escaped FIRST, then quote, then
+    newline — and HELP lines escape backslash/newline."""
+    from repro.obs.registry import escape_help, escape_label_value
+    assert escape_label_value('plain') == 'plain'
+    assert escape_label_value('sa"id') == 'sa\\"id'
+    assert escape_label_value('a\\b') == 'a\\\\b'
+    assert escape_label_value('two\nlines') == 'two\\nlines'
+    # order matters: the backslash introduced by quote-escaping must
+    # not itself get re-escaped
+    assert escape_label_value('\\"') == '\\\\\\"'
+    assert escape_help('why\\so\nserious "ok"') == \
+        'why\\\\so\\nserious "ok"'
+
+    reg = Registry()
+    evil = 'req\\7 say "hi"\nplease'
+    reg.labeled_gauge_group("bucket_attainment", "bucket",
+                            lambda: {evil: {"attainment": 0.5}})
+    text = reg.prometheus_text()
+    want = ('bucket_attainment_attainment{bucket='
+            '"req\\\\7 say \\"hi\\"\\nplease"} 0.5')
+    assert want in text
+    assert "\nreq" not in text                     # no raw newline leaked
+
+
+def test_prometheus_labeled_gauges_help_type_and_repull():
+    """Labeled gauge groups: one TYPE line per metric name (not per
+    series), every plain metric keeps HELP/TYPE, and the group callable
+    is re-evaluated at EVERY scrape — a Prometheus poll sees current
+    values, not registration-time ones."""
+    reg = Registry()
+    reg.counter("x_total", help="with help").inc()
+    pulls = {"n": 0}
+
+    def fn():
+        pulls["n"] += 1
+        return {"decode": {"attain": pulls["n"]},
+                "prefill16": {"attain": pulls["n"] * 10}}
+
+    reg.labeled_gauge_group("bucket", "bucket", fn)
+    t1 = reg.prometheus_text()
+    assert "# HELP x_total with help" in t1
+    assert "# TYPE x_total counter" in t1
+    assert t1.count("# TYPE bucket_attain gauge") == 1
+    assert 'bucket_attain{bucket="decode"} 1' in t1
+    assert 'bucket_attain{bucket="prefill16"} 10' in t1
+    t2 = reg.prometheus_text()                     # second scrape
+    assert 'bucket_attain{bucket="decode"} 2' in t2
+    assert pulls["n"] == 2
+    # collect() parity: the labeled series land in the snapshot too
+    snap = reg.collect()
+    assert snap['bucket_attain{bucket="decode"}'] == 3
+
+
 def test_engine_registry_matches_summary(nectar):
     """Exporter parity: summary(), registry.collect(), and the
     Prometheus text all read the same numbers."""

@@ -1,0 +1,225 @@
+#!/usr/bin/env python
+"""Perf-regression sentinel: gate a --quick benchmark run against the
+committed baseline (docs/benchmarks.md).
+
+    python tools/bench_compare.py \
+        [--current benchmarks/BENCH_quick.json] \
+        [--baseline benchmarks/baselines/quick.json] [--update]
+
+Reads the BENCH_quick.json index (suite -> rows -> derived string),
+parses every ``key=value`` segment into numeric metrics, and compares
+each against the baseline with NOISE-AWARE rules rather than exact
+equality:
+
+  * direction per metric — throughput/attainment/acceptance metrics
+    must not DROP, latency/waste metrics must not RISE; metrics with no
+    recognized direction are informational and never gate;
+  * relative thresholds per metric family (tight for tokens/s, wider
+    for roofline attainment which shares the CI box with siblings), and
+    the baseline may override any of them via its ``noise`` map;
+  * absolute floors for small timings — a 3x swing between 40us and
+    120us of scheduler time is scheduler jitter, not a regression, so
+    time-dimension metrics below the floor never gate;
+  * machine awareness — if the current machine fingerprint differs
+    from the baseline's, thresholds double and absolute time metrics
+    stop gating (only unitless ratios/identities still do), so a CI
+    runner change doesn't masquerade as a perf cliff.
+
+``--update`` rewrites the baseline from the current index (stamping
+fingerprint + commit). Exit codes: 0 = no regression, 1 = regression
+(one line per offending metric), 2 = usage/schema error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_CURRENT = os.path.join(_REPO, "benchmarks", "BENCH_quick.json")
+DEFAULT_BASELINE = os.path.join(_REPO, "benchmarks", "baselines",
+                                "quick.json")
+
+# metric-family substrings -> (direction, rel_tol). direction +1 means
+# higher is better (gate on drops), -1 lower is better (gate on rises).
+# First match wins; keys are matched case-insensitively.
+FAMILIES = [
+    ("tok_s", +1, 0.15),
+    ("tokens_per_s", +1, 0.15),
+    ("speedup", +1, 0.15),
+    ("identity", +1, 0.0),        # token identity is exact or broken
+    ("ok", +1, 0.0),
+    ("attain", +1, 0.40),         # roofline attainment on a shared CI box
+    ("gflops", +1, 0.40),
+    ("gbs", +1, 0.40),
+    ("accept", +1, 0.25),
+    ("hit", +1, 0.25),
+    ("per_verify", +1, 0.25),
+    ("saved", +1, 0.25),
+    ("ai", 0, 0.0),               # static property, informational
+    ("ttft", -1, 0.35),
+    ("tpot", -1, 0.35),
+    ("_ms", -1, 0.35),
+    ("_us", -1, 0.35),
+    ("waste", -1, 0.35),
+]
+DEFAULT_REL_TOL = 0.25
+# absolute floors: a time metric where BOTH sides sit under the floor is
+# jitter territory and never gates
+ABS_FLOOR = {"_ms": 1.0, "_us": 1000.0, "ttft": 1.0, "tpot": 1.0}
+
+
+def parse_derived(derived: str) -> dict:
+    """'tok_s=105.0;bound=memory_s;identity=True;8.38x' ->
+    {'tok_s': 105.0, 'identity': 1.0}. Non-numeric values and bare
+    segments (the '8.38x' speedup suffix) are skipped — they are
+    human-facing annotations, not gateable metrics."""
+    out = {}
+    for seg in str(derived).split(";"):
+        key, eq, val = seg.partition("=")
+        if not eq:
+            continue
+        key, val = key.strip(), val.strip()
+        if val in ("True", "False"):
+            out[key] = 1.0 if val == "True" else 0.0
+            continue
+        try:
+            out[key] = float(val.rstrip("x%"))
+        except ValueError:
+            continue
+    return out
+
+
+def family_of(key: str):
+    k = key.lower()
+    for sub, direction, tol in FAMILIES:
+        if sub in k:
+            return direction, tol, sub
+    return 0, DEFAULT_REL_TOL, None
+
+
+def floor_of(key: str) -> float:
+    k = key.lower()
+    for sub, floor in ABS_FLOOR.items():
+        if sub in k:
+            return floor
+    return 0.0
+
+
+def index_metrics(index: dict) -> dict:
+    """BENCH_quick.json index -> {suite: {row: {metric: value}}},
+    skipping suites recorded as skipped."""
+    out = {}
+    for suite, entry in index.items():
+        if not isinstance(entry, dict) or "skipped" in entry:
+            continue
+        rows = entry.get("rows") or {}
+        out[suite] = {name: parse_derived(derived)
+                      for name, derived in rows.items()}
+    return out
+
+
+def compare(base: dict, cur_index: dict, same_machine: bool,
+            noise: dict) -> list:
+    """Return a list of regression strings (empty = clean)."""
+    regressions = []
+    cur = index_metrics(cur_index)
+    for suite, rows in base.items():
+        for row, metrics in rows.items():
+            cur_metrics = cur.get(suite, {}).get(row)
+            if cur_metrics is None:
+                regressions.append(
+                    f"{suite}/{row}: row missing from current run")
+                continue
+            for key, b in metrics.items():
+                c = cur_metrics.get(key)
+                if c is None:
+                    regressions.append(
+                        f"{suite}/{row}/{key}: metric missing "
+                        f"(baseline={b:g})")
+                    continue
+                direction, tol, fam = family_of(key)
+                if direction == 0:
+                    continue
+                tol = noise.get(key, noise.get(fam or "", tol))
+                floor = floor_of(key)
+                if floor and max(abs(b), abs(c)) < floor:
+                    continue            # sub-floor timing: jitter
+                if not same_machine:
+                    if floor:
+                        continue        # absolute timings don't transfer
+                    tol = tol * 2
+                delta = (c - b) / max(abs(b), 1e-12)
+                if direction * delta < -tol:
+                    arrow = "dropped" if direction > 0 else "rose"
+                    regressions.append(
+                        f"{suite}/{row}/{key}: {arrow} "
+                        f"{abs(delta) * 100:.1f}% "
+                        f"(baseline={b:g} current={c:g} tol={tol:.0%})")
+    return regressions
+
+
+def fingerprint() -> dict:
+    sys.path.insert(0, _REPO)
+    from benchmarks.run import machine_fingerprint
+    return machine_fingerprint()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default=DEFAULT_CURRENT)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current index")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.current):
+        print(f"bench_compare: no current index at {args.current} "
+              "(run: python -m benchmarks.run --quick)", file=sys.stderr)
+        return 2
+    with open(args.current) as f:
+        cur_index = json.load(f)
+
+    if args.update:
+        base = {
+            "created": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "fingerprint": fingerprint(),
+            "noise": {},
+            "suites": index_metrics(cur_index),
+        }
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(base, f, indent=1, sort_keys=True)
+        print(f"bench_compare: baseline updated -> {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"bench_compare: no baseline at {args.baseline} "
+              "(create one with --update)", file=sys.stderr)
+        return 2
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    same_machine = base.get("fingerprint") == fingerprint()
+    if not same_machine:
+        print("bench_compare: machine fingerprint differs from baseline "
+              "— doubling thresholds, skipping absolute timings",
+              file=sys.stderr)
+    regressions = compare(base.get("suites", {}), cur_index,
+                          same_machine, base.get("noise") or {})
+    if regressions:
+        print(f"bench_compare: {len(regressions)} regression(s) vs "
+              f"{os.path.basename(args.baseline)}:")
+        for r in regressions:
+            print(f"  REGRESSION {r}")
+        return 1
+    n = sum(len(rows) for rows in base.get("suites", {}).values())
+    print(f"bench_compare: OK — {n} baseline rows within noise bands")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,8 +6,14 @@
 Checks, for the Perfetto/Chrome-trace JSON:
 
   * the file parses and ``traceEvents`` is a non-empty list;
-  * every event has a known phase (``X``/``i``/``M``), numeric ``ts``,
-    and ``X`` events a non-negative ``dur``;
+  * every event has a known phase (``X``/``i``/``M``/``C``), numeric
+    ``ts``, and ``X`` events a non-negative ``dur``;
+  * counter ("C") rows carry a name and a finite numeric
+    ``args.value`` — the roofline tracks obs.profile emits;
+  * with ``--expect-counters NAME[,NAME...]``, every named counter
+    track must be present (the CI perf-gate passes the three roofline
+    counters so a silent profiler regression can't ship an empty
+    trace);
   * non-metadata events are sorted by ``ts`` (monotonic timeline — the
     Perfetto UI tolerates disorder, this repo's exporter must not).
 
@@ -39,7 +45,7 @@ ORDERED = ("arrival", "admitted", "first_token", "finish")
 KNOWN_KINDS = {"meta", "span", "event", "tick"}
 
 
-def check_perfetto(path: str) -> List[str]:
+def check_perfetto(path: str, expect_counters=()) -> List[str]:
     errs: List[str] = []
     try:
         with open(path) as f:
@@ -51,6 +57,7 @@ def check_perfetto(path: str) -> List[str]:
         return [f"{path}: traceEvents missing or empty"]
     last_ts = None
     n_spans = 0
+    counters: dict = {}            # counter name -> sample count
     for i, ev in enumerate(events):
         ph = ev.get("ph")
         if ph not in KNOWN_PH:
@@ -67,12 +74,28 @@ def check_perfetto(path: str) -> List[str]:
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 errs.append(f"{path}: event {i}: bad dur {dur!r}")
+        elif ph == "C":
+            name = ev.get("name")
+            if not name:
+                errs.append(f"{path}: event {i}: counter without name")
+            val = (ev.get("args") or {}).get("value")
+            if (not isinstance(val, (int, float))
+                    or isinstance(val, bool)
+                    or val != val or val in (float("inf"), float("-inf"))):
+                errs.append(f"{path}: event {i}: counter {name!r} has "
+                            f"non-finite value {val!r}")
+            elif name:
+                counters[name] = counters.get(name, 0) + 1
         if last_ts is not None and ts < last_ts:
             errs.append(f"{path}: event {i}: ts {ts} < previous "
                         f"{last_ts} (not monotonic)")
         last_ts = ts
     if not n_spans:
         errs.append(f"{path}: no complete ('X') span events")
+    for name in expect_counters:
+        if not counters.get(name):
+            errs.append(f"{path}: expected counter track {name!r} "
+                        f"absent (have: {sorted(counters) or 'none'})")
     meta = trace.get("metadata", {})
     if meta.get("dropped"):
         print(f"[check_trace] warning: {path}: {meta['dropped']} "
@@ -126,19 +149,31 @@ def check_jsonl(path: str) -> List[str]:
 
 
 def main(argv: List[str]) -> int:
-    if not argv:
+    expect_counters: List[str] = []
+    paths: List[str] = []
+    it = iter(argv)
+    for a in it:
+        if a == "--expect-counters":
+            nxt = next(it, None)
+            if nxt is None:
+                print("[check_trace] --expect-counters needs an argument")
+                return 2
+            expect_counters += [n for n in nxt.split(",") if n]
+        else:
+            paths.append(a)
+    if not paths:
         print(__doc__)
         return 2
     errs: List[str] = []
-    for path in argv:
+    for path in paths:
         if path.endswith(".jsonl"):
             errs += check_jsonl(path)
         else:
-            errs += check_perfetto(path)
+            errs += check_perfetto(path, expect_counters=expect_counters)
     for e in errs:
         print(f"[check_trace] FAIL: {e}")
     if not errs:
-        print(f"[check_trace] OK: {len(argv)} file(s) valid")
+        print(f"[check_trace] OK: {len(paths)} file(s) valid")
     return 1 if errs else 0
 
 
