@@ -6,14 +6,15 @@
   Fig. 7 best-offset prefetcher        -> bench_prefetch
   Table II end-to-end 1.7M ReLU-Llama  -> bench_e2e
   serving + speculative decode         -> bench_serving, bench_spec
+  multi-replica fleet routing          -> bench_fleet
   Fig. 10 / roofline terms             -> roofline_report (needs dry-run
                                           artifacts; rows skipped if absent)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only <name>] [--quick]
 
 ``--quick`` is the CI smoke mode: it runs only the serving-path suites
-(bench_serving, bench_spec, bench_prefix, serving_roofline) on tiny
-traces — fast enough for the tier-1 workflow, so the benchmark scripts
+(bench_serving, bench_spec, bench_prefix, bench_fleet,
+serving_roofline) on tiny traces — fast enough for the tier-1 workflow, so the benchmark scripts
 themselves can't silently rot. It also writes one consolidated
 ``BENCH_quick.json`` index (suite -> artifact file -> headline metrics)
 so the perf trajectory stays machine-readable across PRs without
@@ -37,15 +38,16 @@ HISTORY = os.path.join(_DIR, "history", "quick.jsonl")
 DRYRUN_DIR = os.path.join(_DIR, "artifacts", "dryrun")
 
 SUITES = ["bench_matmul", "bench_sparsity", "bench_prefetch", "bench_e2e",
-          "bench_serving", "bench_spec", "bench_prefix",
+          "bench_serving", "bench_spec", "bench_prefix", "bench_fleet",
           "serving_roofline", "roofline_report"]
 # serving-path suites accepting a quick=... kwarg (the CI smoke subset)
 QUICK_SUITES = ["bench_serving", "bench_spec", "bench_prefix",
-                "serving_roofline"]
+                "bench_fleet", "serving_roofline"]
 # per-suite artifact written in --quick mode (relative to benchmarks/)
 QUICK_ARTIFACTS = {"bench_serving": "BENCH_serving_quick.json",
                    "bench_spec": "BENCH_spec_quick.json",
                    "bench_prefix": "BENCH_prefix_quick.json",
+                   "bench_fleet": "BENCH_fleet_quick.json",
                    "serving_roofline": "BENCH_serving_roofline_quick.json"}
 # extra per-suite artifacts referenced from the quick index (the
 # Perfetto traces written alongside the summaries; uploaded as CI

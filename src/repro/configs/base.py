@@ -319,6 +319,28 @@ class ServeConfig:
         return self.n_kv_blocks or self.max_batch * self.blocks_per_seq
 
 
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Multi-replica serving fleet (serve.fleet + serve.router).
+
+    One ServeConfig builds every replica (homogeneous fleet); this adds
+    the fleet-level knobs: replica count, routing policy, the router's
+    own overflow queue (requests wait HERE when every replica's
+    admission control is full, shed with FleetSaturated past the
+    bound), and session stickiness for multi-turn traffic. Requires
+    ``ServeConfig.paged`` — routing reads the paged scheduler's queue
+    depth and the radix prefix index."""
+
+    replicas: int = 1
+    router_policy: str = "affinity"   # affinity | round_robin | least_loaded
+    max_router_queue: int = 512       # bounded front-door overflow queue
+    session_affinity: bool = True     # same session id -> same replica
+    parallel_poll: bool = False       # tick replicas via a thread pool
+    #                                   (serialized engines are the
+    #                                   default: single-process fleets
+    #                                   gain capacity, not CPU)
+
+
 # --- assigned input shapes (seq_len, global_batch, kind) -------------------
 
 SHAPES = {

@@ -1,7 +1,14 @@
 """Elastic mesh handling: reshard a param tree onto a (possibly degraded)
 mesh, and compute the degraded mesh shape after replica loss. Values are
 preserved exactly — resharding is pure data movement (device_put between
-NamedShardings)."""
+NamedShardings); tests/test_elastic.py pins both properties.
+
+Serving wires this in through ``serve.fleet.Fleet``: ``scale_down``
+treats the fleet as the outermost (replicated) axis of a
+(replicas, model_shards) pod mesh and uses ``degrade_mesh`` to pick the
+surviving replica count, and ``reap`` calls ``reshard_params`` to
+re-pin each surviving mesh-sharded replica's weights after the drained
+replicas retire."""
 
 from __future__ import annotations
 

@@ -15,6 +15,7 @@ accelerators, force fake devices first:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -25,6 +26,7 @@ from repro.configs import get_config
 from repro.configs.base import ServeConfig
 from repro.models import Model
 from repro.serve.engine import Engine
+from repro.serve.router import build_fleet
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import Request
 from repro.train import checkpoint
@@ -58,6 +60,15 @@ def main():
                     help="paged attention read path: reference gather vs "
                          "the Pallas flash-decode kernel through block "
                          "tables")
+    # --- serving fleet (serve.fleet + serve.router; docs/fleet.md) ---
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a fleet of N engine replicas "
+                         "behind the prefix-affinity router (implies "
+                         "--paged + prefix cache; docs/fleet.md)")
+    ap.add_argument("--router-policy", default="affinity",
+                    choices=("affinity", "round_robin", "least_loaded"),
+                    help="fleet request placement: scored radix-prefix "
+                         "affinity (default), cycle, or queue depth only")
     ap.add_argument("--mesh", type=int, default=1,
                     help="model-axis shards for sharded serving (paged "
                          "engine; needs >= N visible devices — set "
@@ -129,6 +140,51 @@ def main():
                        policy=args.policy, spec=spec,
                        attn_backend=args.attn_backend, mesh=mesh,
                        **({"obs": obs} if obs is not None else {}))
+    if args.replicas > 1:
+        # fleet mode: N independent replicas behind the front-door
+        # router; the replica ServeConfig forces the paged engine +
+        # prefix cache (routing reads the scheduler queue and the
+        # radix index). Requests reuse the same demo trace.
+        scfg = dataclasses.replace(scfg, paged=True, prefix_cache=True)
+        router = build_fleet(cfg, params, scfg,
+                             n_replicas=args.replicas,
+                             policy=args.router_policy)
+        if args.metrics_port:
+            from repro.obs import start_metrics_server
+            start_metrics_server(lambda: router.registry,
+                                 args.metrics_port)
+            print(f"[serve] metrics on :{args.metrics_port}/metrics")
+        sp = SamplingParams(temperature=args.temperature,
+                            top_k=args.top_k, top_p=args.top_p,
+                            repetition_penalty=args.repetition_penalty,
+                            seed=args.sample_seed)
+        rng = np.random.default_rng(0)
+        t0 = time.time()
+        for i in range(args.requests):
+            router.submit(rng.integers(0, cfg.vocab,
+                                       size=4 + int(rng.integers(0, 8)),
+                                       dtype=np.int32),
+                          max_new=args.max_new, sampling=sp,
+                          session=f"demo-{i % max(args.requests // 2, 1)}")
+        done = router.drain_all()
+        dt = time.time() - t0
+        s = router.fleet_summary()
+        out = {
+            "requests": len(done),
+            "tokens": sum(len(r.tokens_out) for r in done.values()),
+            "tok_per_s_cpu": sum(len(r.tokens_out)
+                                 for r in done.values()) / dt,
+            "n_replicas": s["n_replicas"],
+            "prefix_hit_rate": s["prefix_hit_rate"],
+            "ttft_p99_ms": s["ttft_p99_ms"],
+            "fleet_queue_depth": s["fleet_queue_depth"],
+            "router": s["router"],
+            "per_replica_dispatched": {
+                i: h["dispatched"] for i, h in s["replicas"].items()},
+        }
+        print(json.dumps(out, indent=1))
+        return
+
     eng = Engine(cfg, params, scfg)
     if args.metrics_port:
         from repro.obs import start_metrics_server

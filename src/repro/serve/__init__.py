@@ -19,13 +19,23 @@ Public surface:
   * ``scheduler.Scheduler`` / ``Request`` — admission, chunked prefill,
     priorities, preemption-by-recompute.
   * ``metrics.MetricsCollector`` — TTFT/TPOT percentiles, Table-II
-    traffic counters, pool/prefix/mesh gauges (``summary()``).
+    traffic counters, pool/prefix/mesh gauges (``summary()``);
+    ``metrics.fleet_summary`` aggregates N replicas' collectors.
+  * ``fleet.Fleet`` / ``router.Router`` — multi-replica serving: replica
+    lifecycle (spawn/health/drain/reap, elastic scale-down through
+    dist.elastic) behind a front-door router that places requests by
+    queue depth, free KV blocks, and radix-prefix affinity
+    (docs/fleet.md); ``router.build_fleet`` is the one-call constructor.
 """
 
-from repro.serve import (api, engine, kv_cache, metrics,  # noqa: F401
-                         paged_kv, prefix_cache, runner, sampling,
-                         scheduler)
+from repro.serve import (api, engine, fleet, kv_cache,  # noqa: F401
+                         metrics, paged_kv, prefix_cache, router, runner,
+                         sampling, scheduler)
+from repro.serve.fleet import Fleet, Replica, ReplicaState  # noqa: F401
+from repro.serve.metrics import fleet_summary  # noqa: F401
 from repro.serve.prefix_cache import RadixPrefixCache  # noqa: F401
+from repro.serve.router import (FleetSaturated, Router,  # noqa: F401
+                                build_fleet)
 from repro.serve.runner import (ModelRunner, StepBatch,  # noqa: F401
                                 StepOutput)
 from repro.serve.sampling import SamplingParams  # noqa: F401

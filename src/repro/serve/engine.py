@@ -129,6 +129,17 @@ class Engine:
     def stats(self) -> List[StepStats]:
         return self.metrics.step_stats
 
+    @property
+    def admission_free(self) -> int:
+        """Admission headroom: how many more requests ``add_request``
+        would take RIGHT NOW before returning False. The fleet router
+        (serve.router) reads this instead of probing with a submit —
+        paged mode is the scheduler's bounded waiting queue, legacy mode
+        the free slot count."""
+        if self.scfg.paged:
+            return max(self.scfg.max_queue - self.sched.n_waiting, 0)
+        return len(self.alloc.free)
+
     def reset_metrics(self) -> None:
         """Fresh MetricsCollector wired to the live pool/prefix gauges
         (benchmarks call this after warmup so compile time isn't billed;

@@ -1,0 +1,78 @@
+"""dist.elastic: degraded-mesh shape math and reshard_params value
+preservation — the two contracts serve.fleet's elastic scale-down
+(``Fleet.scale_down`` / ``Fleet.reshard_surviving``) is built on."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs import get_config
+from repro.dist import elastic
+from repro.dist import sharding as shd
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def nectar():
+    cfg = get_config("nectar-relu-llama-1.7m")
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# degrade_mesh: outermost (replicated) axis shrinks, floored at 1; the
+# model axis is load-bearing and never changes
+
+
+@pytest.mark.parametrize("shape,n_failed,want", [
+    ((4, 2), 1, (3, 2)),      # lose one replica of a sharded pod
+    ((4, 2), 3, (1, 2)),      # lose all but one
+    ((2,), 5, (1,)),          # over-failing floors at one replica
+    ((1,), 1, (1,)),          # the last replica never degrades away
+    ((3, 2, 4), 2, (1, 2, 4)),  # only the outermost axis shrinks
+])
+def test_degrade_mesh(shape, n_failed, want):
+    assert elastic.degrade_mesh(shape, n_failed) == want
+
+
+def test_degrade_mesh_zero_failures_is_identity():
+    assert elastic.degrade_mesh((4, 2), 0) == (4, 2)
+
+
+# ---------------------------------------------------------------------------
+# reshard_params: pure data movement — every leaf value preserved
+# exactly, and re-applying it is a no-op
+
+
+def _mesh_1x1():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_reshard_params_preserves_values(nectar):
+    cfg, params = nectar
+    out = elastic.reshard_params(params, cfg, _mesh_1x1())
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, out)
+    # tree structure untouched
+    assert jax.tree.structure(out) == jax.tree.structure(params)
+
+
+def test_reshard_params_idempotent(nectar):
+    cfg, params = nectar
+    mesh = _mesh_1x1()
+    once = elastic.reshard_params(params, cfg, mesh)
+    twice = elastic.reshard_params(once, cfg, mesh)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), once, twice)
+
+
+def test_reshard_params_policy_passthrough(nectar):
+    """An explicit policy (the engine's own, in reshard_surviving) must
+    reshard without touching values, same as the fsdp default."""
+    cfg, params = nectar
+    out = elastic.reshard_params(params, cfg, _mesh_1x1(),
+                                 policy=shd.ShardingPolicy(exact_tp=True))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, out)

@@ -1,0 +1,255 @@
+"""Serving fleet (serve.fleet + serve.router): placement policies,
+prefix-affinity routing, session stickiness (including under preemption
+and drain), replica lifecycle, the bounded router queue, and aggregated
+fleet metrics. The load-bearing invariant throughout: the router only
+PLACES work — greedy outputs must be token-identical to a single
+engine serving the same prompts."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ServeConfig
+from repro.models import Model
+from repro.serve.api import StreamingServer
+from repro.serve.engine import Engine
+from repro.serve.fleet import Fleet, ReplicaState
+from repro.serve.router import FleetSaturated, build_fleet
+
+
+@pytest.fixture(scope="module")
+def nectar():
+    cfg = get_config("nectar-relu-llama-1.7m")
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _scfg(**kw):
+    """Paged replica config sized so the active set always fits the
+    pool (no preemption -> schedule-independent greedy output; see
+    bench_fleet's sizing note). Tests that WANT preemption override
+    n_kv_blocks down."""
+    base = dict(max_batch=2, max_seq=64, paged=True, prefix_cache=True,
+                block_size=4, n_kv_blocks=32, prefill_chunk=8,
+                max_queue=8)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _family_prompts(cfg, n, family_seed, shared=16, seed=1):
+    """n prompts sharing one ``shared``-token family prefix, each with
+    a unique short tail."""
+    rng = np.random.default_rng(family_seed)
+    head = rng.integers(0, cfg.vocab, size=shared, dtype=np.int32)
+    tails = np.random.default_rng(seed)
+    return [np.concatenate(
+                [head, tails.integers(0, cfg.vocab, size=3 + i % 3,
+                                      dtype=np.int32)])
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# construction
+
+
+def test_fleet_requires_paged(nectar):
+    cfg, params = nectar
+    with pytest.raises(ValueError, match="paged"):
+        Fleet(cfg, params, ServeConfig(max_batch=2, max_seq=64,
+                                       paged=False), n_replicas=2)
+
+
+# ---------------------------------------------------------------------------
+# the invariant: routing only places work
+
+
+def test_token_identity_vs_single_engine(nectar):
+    cfg, params = nectar
+    prompts = (_family_prompts(cfg, 3, family_seed=10)
+               + _family_prompts(cfg, 3, family_seed=20))
+    router = build_fleet(cfg, params, _scfg(), n_replicas=2,
+                         policy="affinity")
+    rids = [router.submit(p, max_new=4) for p in prompts]
+    router.drain_all()
+    fleet_out = [list(router.result(r).tokens_out) for r in rids]
+    # both replicas actually served something
+    assert all(rep.dispatched > 0 for rep in router.fleet.live())
+
+    eng = Engine(cfg, params, _scfg())
+    server = StreamingServer(eng)
+    ref_rids = [server.submit(p, max_new=4) for p in prompts]
+    server.drain(max_steps=10000)
+    ref_out = [list(eng._requests[r].tokens_out) for r in ref_rids]
+    assert fleet_out == ref_out
+
+
+# ---------------------------------------------------------------------------
+# placement policies
+
+
+def test_round_robin_cycles(nectar):
+    cfg, params = nectar
+    router = build_fleet(cfg, params, _scfg(), n_replicas=2,
+                         policy="round_robin")
+    prompts = _family_prompts(cfg, 4, family_seed=3)
+    rids = [router.submit(p, max_new=2) for p in prompts]
+    assert [router._placement[r] for r in rids] == [0, 1, 0, 1]
+
+
+def test_affinity_routes_to_warm_replica(nectar):
+    cfg, params = nectar
+    router = build_fleet(cfg, params, _scfg(), n_replicas=2,
+                         policy="affinity")
+    first, second = _family_prompts(cfg, 2, family_seed=7)
+    rid0 = router.submit(first, max_new=2)
+    router.drain_all()                    # finish -> prefix published
+    home = router._placement[rid0]
+    rid1 = router.submit(second, max_new=2)
+    assert router._placement[rid1] == home
+    last = router.decisions[-1]
+    assert last.reason == "affinity_hit" and last.matched_tokens > 0
+    router.drain_all()
+
+
+# ---------------------------------------------------------------------------
+# session stickiness
+
+
+def test_session_sticky_waits_for_full_replica(nectar):
+    cfg, params = nectar
+    # replica admission of 1: the second session request finds its
+    # replica full and must WAIT at the router, not migrate
+    router = build_fleet(cfg, params, _scfg(max_queue=1), n_replicas=2)
+    p1, p2 = _family_prompts(cfg, 2, family_seed=5)
+    rid1 = router.submit(p1, max_new=2, session="s")
+    home = router._placement[rid1]
+    rid2 = router.submit(p2, max_new=2, session="s")
+    assert rid2 not in router._placement      # queued, pinned to home
+    assert router.queue_depth == 1
+    router.drain_all()
+    assert router._placement[rid2] == home
+    assert router.fleet_summary()["router"]["sticky_hits"] >= 1
+
+
+def test_session_sticky_under_preemption(nectar):
+    cfg, params = nectar
+    # 8-block pool, two 5-block requests -> decode growth forces
+    # preemption; the session binding must survive it (preemption is a
+    # replica-internal reschedule, not a placement event)
+    router = build_fleet(cfg, params, _scfg(n_kv_blocks=8),
+                         n_replicas=2)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=10, dtype=np.int32)
+               for _ in range(3)]
+    rids = [router.submit(p, max_new=8, session="s") for p in prompts]
+    router.drain_all()
+    placed = {router._placement[r] for r in rids}
+    assert len(placed) == 1                   # all stayed home
+    home = placed.pop()
+    evicted = router.fleet.get(home).engine.metrics.summary()["evictions"]
+    assert evicted > 0                        # preemption really happened
+    assert all(len(router.result(r).tokens_out) == 8 for r in rids)
+
+
+def test_sticky_fallback_on_drain(nectar):
+    cfg, params = nectar
+    router = build_fleet(cfg, params, _scfg(), n_replicas=2)
+    p1, p2 = _family_prompts(cfg, 2, family_seed=9)
+    rid1 = router.submit(p1, max_new=2, session="s")
+    home = router._placement[rid1]
+    router.drain_all()
+    router.fleet.drain(home)
+    rid2 = router.submit(p2, max_new=2, session="s")
+    other = router._placement[rid2]
+    assert other != home                      # re-routed off the drain
+    assert router.sessions["s"] == other      # and re-bound there
+    assert router.fleet_summary()["router"]["session_rerouted"] >= 1
+    router.drain_all()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: drain / reap / results after removal
+
+
+def test_drain_finishes_inflight_then_reaps(nectar):
+    cfg, params = nectar
+    router = build_fleet(cfg, params, _scfg(), n_replicas=2)
+    prompts = _family_prompts(cfg, 4, family_seed=11)
+    rids = [router.submit(p, max_new=3) for p in prompts]
+    victim = router._placement[rids[0]]
+    router.fleet.drain(victim)
+    rep = router.fleet.get(victim)
+    assert rep.state is ReplicaState.DRAINING
+    assert not rep.accepting                  # no new work
+    assert rep.probe(prompts[0]) == 0         # prefixes stop attracting
+    router.drain_all()                        # in-flight work finishes
+    # poll's reap retired the idle drained replica...
+    assert victim not in router.fleet.replicas
+    assert router.fleet.get(victim).state is ReplicaState.STOPPED
+    # ...but its finished results stay retrievable
+    for r in rids:
+        assert len(router.result(r).tokens_out) == 3
+
+
+def test_scale_down_floors_at_one(nectar):
+    cfg, params = nectar
+    fleet = Fleet(cfg, params, _scfg(), n_replicas=3)
+    assert fleet.scale_down(1) == [2]         # youngest drains first
+    fleet.reap()                              # idle -> retired at once
+    assert sorted(fleet.replicas) == [0, 1]
+    assert fleet.scale_down(10) == [1]        # degrade_mesh floors at 1
+    fleet.reap()
+    assert sorted(fleet.replicas) == [0]
+    assert fleet.scale_down(1) == []          # never drains the last one
+    assert fleet.replicas[0].state is ReplicaState.ACTIVE
+
+
+# ---------------------------------------------------------------------------
+# bounded router queue (overflow satellite)
+
+
+def test_router_overflow_bounded_queue(nectar):
+    cfg, params = nectar
+    router = build_fleet(cfg, params, _scfg(max_queue=1), n_replicas=1,
+                         max_queue=2)
+    prompts = _family_prompts(cfg, 4, family_seed=13)
+    router.submit(prompts[0], max_new=2)      # fills the replica
+    router.submit(prompts[1], max_new=2)      # router queue 1/2
+    router.submit(prompts[2], max_new=2)      # router queue 2/2
+    assert router.registry.collect()["fleet_queue_depth"] == 2
+    with pytest.raises(FleetSaturated):
+        router.submit(prompts[3], max_new=2)
+    assert router.fleet_summary()["router"]["shed"] == 1
+    router.drain_all()                        # queue drains once slots free
+    assert router.queue_depth == 0
+
+
+def test_prompt_too_long_rejected_upfront(nectar):
+    cfg, params = nectar
+    router = build_fleet(cfg, params, _scfg(), n_replicas=2)
+    with pytest.raises(ValueError, match="max_seq"):
+        router.submit(np.zeros(64, np.int32), max_new=2)
+
+
+# ---------------------------------------------------------------------------
+# aggregated metrics
+
+
+def test_fleet_summary_aggregates(nectar):
+    cfg, params = nectar
+    router = build_fleet(cfg, params, _scfg(), n_replicas=2)
+    prompts = (_family_prompts(cfg, 2, family_seed=15)
+               + _family_prompts(cfg, 2, family_seed=16))
+    rids = [router.submit(p, max_new=3) for p in prompts]
+    router.drain_all()
+    s = router.fleet_summary()
+    assert s["n_replicas"] == 2
+    assert s["n_finished"] == len(rids)
+    assert s["generated_tokens"] == 3 * len(rids)
+    assert s["generated_tokens"] == sum(
+        r["generated_tokens"] for r in s["per_replica"].values())
+    assert s["tokens_per_s"] > 0
+    assert s["fleet_queue_depth"] == 0
+    assert s["router"]["dispatched"] == len(rids)
+    assert set(s["replicas"]) == {0, 1}
