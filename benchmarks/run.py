@@ -7,13 +7,14 @@
   Table II end-to-end 1.7M ReLU-Llama  -> bench_e2e
   serving + speculative decode         -> bench_serving, bench_spec
   multi-replica fleet routing          -> bench_fleet
+  disaggregated prefill/decode         -> bench_disagg
   Fig. 10 / roofline terms             -> roofline_report (needs dry-run
                                           artifacts; rows skipped if absent)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only <name>] [--quick]
 
 ``--quick`` is the CI smoke mode: it runs only the serving-path suites
-(bench_serving, bench_spec, bench_prefix, bench_fleet,
+(bench_serving, bench_spec, bench_prefix, bench_fleet, bench_disagg,
 serving_roofline) on tiny traces — fast enough for the tier-1 workflow, so the benchmark scripts
 themselves can't silently rot. It also writes one consolidated
 ``BENCH_quick.json`` index (suite -> artifact file -> headline metrics)
@@ -39,20 +40,22 @@ DRYRUN_DIR = os.path.join(_DIR, "artifacts", "dryrun")
 
 SUITES = ["bench_matmul", "bench_sparsity", "bench_prefetch", "bench_e2e",
           "bench_serving", "bench_spec", "bench_prefix", "bench_fleet",
-          "serving_roofline", "roofline_report"]
+          "bench_disagg", "serving_roofline", "roofline_report"]
 # serving-path suites accepting a quick=... kwarg (the CI smoke subset)
 QUICK_SUITES = ["bench_serving", "bench_spec", "bench_prefix",
-                "bench_fleet", "serving_roofline"]
+                "bench_fleet", "bench_disagg", "serving_roofline"]
 # per-suite artifact written in --quick mode (relative to benchmarks/)
 QUICK_ARTIFACTS = {"bench_serving": "BENCH_serving_quick.json",
                    "bench_spec": "BENCH_spec_quick.json",
                    "bench_prefix": "BENCH_prefix_quick.json",
                    "bench_fleet": "BENCH_fleet_quick.json",
+                   "bench_disagg": "BENCH_disagg_quick.json",
                    "serving_roofline": "BENCH_serving_roofline_quick.json"}
 # extra per-suite artifacts referenced from the quick index (the
 # Perfetto traces written alongside the summaries; uploaded as CI
 # artifacts by the bench-smoke / perf-gate jobs)
 QUICK_EXTRAS = {"bench_serving": "TRACE_serving_quick.trace.json",
+                "bench_disagg": "TRACE_disagg_quick.trace.json",
                 "serving_roofline": "TRACE_roofline_quick.trace.json"}
 
 

@@ -1,0 +1,137 @@
+"""Disaggregated prefill/decode demo: one prefill engine, one decode
+engine, handoff as a paged-KV block transfer (docs/disagg.md).
+
+Shows the pieces a monolithic engine can't:
+  * a long-prompt burst arriving mid-decode WITHOUT dragging the steady
+    decoders into prefill-wide mixed ticks — the monolithic engine run
+    next to it shows the artifact (decode rows padded to the compiled
+    prefill chunk width),
+  * the handoff timeline of one request on the shared tracer
+    (arrival -> handoff_ready -> handoff_adopt -> handoff_release ->
+    finish — one ordered stream across both engines),
+  * the wall-clock TPOT interference split
+    (tpot_p99_prefill_overlap_ms vs tpot_p99_steady_ms),
+  * the invariant: greedy disagg output is token-identical to the
+    monolithic engine, per request.
+
+    PYTHONPATH=src python examples/disagg_serve.py
+"""
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import DisaggConfig, ObsConfig, ServeConfig
+from repro.models import Model
+from repro.serve.disagg import DisaggCoordinator
+from repro.serve.engine import Engine
+from repro.serve.scheduler import Request
+
+
+def make_trace(cfg):
+    """3 steady decoders from tick 0 + two 48-token burst prompts
+    arriving mid-decode. Fresh Request objects per call (they mutate);
+    the seeded rng makes every call bitwise-identical."""
+    rng = np.random.default_rng(0)
+    arrivals = {0: [Request(rid=i,
+                            prompt=rng.integers(0, cfg.vocab, size=8,
+                                                dtype=np.int32),
+                            max_new=20)
+                    for i in range(3)]}
+    for i in range(2):
+        arrivals.setdefault(4 + i * 6, []).append(
+            Request(rid=100 + i,
+                    prompt=rng.integers(0, cfg.vocab, size=48,
+                                        dtype=np.int32),
+                    max_new=2))
+    return arrivals
+
+
+def drive(system, arrivals):
+    reqs = [r for rs in arrivals.values() for r in rs]
+    for t in range(2000):
+        for r in arrivals.get(t, ()):
+            assert system.add_request(r)
+        system.step()
+        if t >= max(arrivals) and all(r.done for r in reqs):
+            break
+    return {r.rid: list(map(int, r.tokens_out)) for r in reqs}
+
+
+def decode_width_waste(ticks):
+    """Padding charged to decode rows at the compiled tick width."""
+    num = den = mixed = 0
+    for t in ticks:
+        nd = t.get("rows_decode", 0)
+        if nd:
+            num += nd * (t.get("width", 1) - 1)
+            den += nd * t.get("width", 1)
+            mixed += bool(t.get("rows_prefill", 0))
+    return (num / den if den else 0.0), mixed
+
+
+def warm(system):
+    """Compile the trace's width buckets outside the measured window so
+    the TPOT split reads scheduling, not jit compilation."""
+    rng = np.random.default_rng(99)
+    system.run([Request(rid=-1, prompt=rng.integers(0, 1000, size=8,
+                                                    dtype=np.int32),
+                        max_new=2),
+                Request(rid=-2, prompt=rng.integers(0, 1000, size=48,
+                                                    dtype=np.int32),
+                        max_new=2)], max_steps=500)
+    system.forget(-1)
+    system.forget(-2)
+    system.reset_metrics()
+
+
+def main():
+    cfg = get_config("nectar-relu-llama-1.7m")
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(max_batch=4, max_seq=128, paged=True,
+                       block_size=8, n_kv_blocks=128, prefill_chunk=16,
+                       max_queue=8, obs=ObsConfig(enabled=True))
+
+    print("monolithic engine (shared batch, mixed ticks):")
+    mono = Engine(cfg, params, scfg)
+    warm(mono)
+    mono_toks = drive(mono, make_trace(cfg))
+    m_waste, m_mixed = decode_width_waste(mono.tracer.tick_stats)
+    ms = mono.metrics.summary()
+    print(f"    {m_mixed} mixed ticks, decode width waste "
+          f"{m_waste:.3f} (decode rows padded to chunk width 16)")
+
+    print("\ndisagg pool (dedicated engine per phase):")
+    coord = DisaggCoordinator(cfg, params, scfg, dcfg=DisaggConfig())
+    warm(coord)
+    dis_toks = drive(coord, make_trace(cfg))
+    d_waste, d_mixed = decode_width_waste(coord.tracer.tick_stats)
+    s = coord.metrics.summary()
+    print(f"    {d_mixed} mixed ticks, decode width waste "
+          f"{d_waste:.3f}, {s['n_handoffs']} handoffs "
+          f"({s['handoff_blocks']} KV blocks moved)")
+
+    # one burst request's lifecycle across BOTH engines, one timeline
+    print("\nhandoff timeline (burst rid 100, shared tracer):")
+    t0 = None
+    for ev in coord.tracer.timeline(100):
+        t0 = t0 if t0 is not None else ev.t
+        print(f"    +{(ev.t - t0) * 1e3:7.1f}ms  {ev.name:16s} "
+              f"{ev.attrs or ''}")
+
+    print("\nwall-clock TPOT split (serialized single-CPU host — the "
+          "overlap bucket\nshrinks only under parallel deployment; the "
+          "structural win is the waste above):")
+    for name, summ in (("monolithic", ms), ("disagg", s)):
+        print(f"    {name:10s} steady p99 "
+              f"{summ['tpot_p99_steady_ms']:7.1f}ms | prefill-overlap "
+              f"p99 {summ['tpot_p99_prefill_overlap_ms']:7.1f}ms")
+
+    assert mono_toks == dis_toks, "greedy identity broke"
+    print("\nidentity: disagg output token-identical to monolithic "
+          f"({sum(map(len, dis_toks.values()))} tokens) OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -320,6 +320,37 @@ class ServeConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class DisaggConfig:
+    """Disaggregated prefill/decode serving (serve.disagg).
+
+    The two phases have opposite rooflines — prefill is compute-bound,
+    decode weight-bandwidth-bound (the paper's near-core vs near-memory
+    accelerator split) — so the DisaggCoordinator runs each on its own
+    dedicated Engine and hands finished prefills over as a paged-KV
+    block transfer. These knobs size the PREFILL engine relative to the
+    decode engine's ServeConfig (which keeps the user-facing values):
+
+    ``prefill_batch`` / ``prefill_blocks`` — the prefill engine's
+    max_batch and KV pool size (0 = inherit the decode ServeConfig's).
+    Prefill slots are transient (a request holds one only until
+    handoff), so a small batch + a pool of a few in-flight prompts
+    usually suffices and keeps the prefill tick cheap.
+
+    ``direct_max_suffix`` — multi-turn fast path: when the DECODE
+    engine's radix index already covers a prompt up to its last
+    ``<= direct_max_suffix`` tokens, admission goes straight to the
+    decode engine (the remaining suffix is at most one chunk of prefill
+    there) instead of re-prefilling + re-copying blocks through a
+    handoff. 0 disables decode-direct placement.
+
+    Declarative and jax-free, like MeshConfig."""
+
+    prefill_batch: int = 0          # prefill engine max_batch (0=inherit)
+    prefill_blocks: int = 0         # prefill engine KV pool (0=inherit)
+    direct_max_suffix: int = 0      # decode-direct if cached suffix <= this
+
+
+@dataclasses.dataclass(frozen=True)
 class FleetConfig:
     """Multi-replica serving fleet (serve.fleet + serve.router).
 

@@ -69,6 +69,23 @@ def main():
                     choices=("affinity", "round_robin", "least_loaded"),
                     help="fleet request placement: scored radix-prefix "
                          "affinity (default), cycle, or queue depth only")
+    # --- disaggregated prefill/decode (serve.disagg; docs/disagg.md) ---
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: dedicated prefill + "
+                         "decode engines with paged-KV block handoff "
+                         "(implies --paged; with --replicas N every "
+                         "replica becomes a disagg pool)")
+    ap.add_argument("--disagg-prefill-batch", type=int, default=0,
+                    help="prefill engine max_batch (0 = inherit "
+                         "--max-batch; prefill slots are transient, a "
+                         "small batch usually suffices)")
+    ap.add_argument("--disagg-prefill-blocks", type=int, default=0,
+                    help="prefill engine KV pool blocks (0 = inherit)")
+    ap.add_argument("--direct-max-suffix", type=int, default=0,
+                    help="with --disagg: admit prompts whose uncached "
+                         "tail is <= N tokens straight onto the decode "
+                         "engine instead of handing off (multi-turn "
+                         "fast path; implies prefix cache; 0 = off)")
     ap.add_argument("--mesh", type=int, default=1,
                     help="model-axis shards for sharded serving (paged "
                          "engine; needs >= N visible devices — set "
@@ -140,6 +157,18 @@ def main():
                        policy=args.policy, spec=spec,
                        attn_backend=args.attn_backend, mesh=mesh,
                        **({"obs": obs} if obs is not None else {}))
+    dcfg = None
+    if args.disagg:
+        # disagg mode needs the paged engine (the handoff is a
+        # block-table transfer); --direct-max-suffix additionally needs
+        # the decode-side radix index to probe
+        from repro.configs.base import DisaggConfig
+        dcfg = DisaggConfig(prefill_batch=args.disagg_prefill_batch,
+                            prefill_blocks=args.disagg_prefill_blocks,
+                            direct_max_suffix=args.direct_max_suffix)
+        scfg = dataclasses.replace(
+            scfg, paged=True,
+            prefix_cache=scfg.prefix_cache or args.direct_max_suffix > 0)
     if args.replicas > 1:
         # fleet mode: N independent replicas behind the front-door
         # router; the replica ServeConfig forces the paged engine +
@@ -148,7 +177,7 @@ def main():
         scfg = dataclasses.replace(scfg, paged=True, prefix_cache=True)
         router = build_fleet(cfg, params, scfg,
                              n_replicas=args.replicas,
-                             policy=args.router_policy)
+                             policy=args.router_policy, disagg=dcfg)
         if args.metrics_port:
             from repro.obs import start_metrics_server
             start_metrics_server(lambda: router.registry,
@@ -185,7 +214,11 @@ def main():
         print(json.dumps(out, indent=1))
         return
 
-    eng = Engine(cfg, params, scfg)
+    if dcfg is not None:
+        from repro.serve.disagg import DisaggCoordinator
+        eng = DisaggCoordinator(cfg, params, scfg, dcfg=dcfg)
+    else:
+        eng = Engine(cfg, params, scfg)
     if args.metrics_port:
         from repro.obs import start_metrics_server
         start_metrics_server(lambda: eng.metrics.registry,
@@ -206,20 +239,29 @@ def main():
     done = eng.run(reqs, max_steps=10000)
     dt = time.time() - t0
     n_tok = sum(len(r.tokens_out) for r in done.values())
-    savings = sum(s.sparse_savings_bytes for s in eng.stats)
+    stats = (eng.prefill.stats + eng.decode.stats) if dcfg is not None \
+        else eng.stats
+    savings = sum(s.sparse_savings_bytes for s in stats)
     total_w = sum(s.weight_bytes + s.sparse_savings_bytes
-                  for s in eng.stats)
+                  for s in stats)
     out = {
         "requests": len(done),
         "tokens": n_tok,
         "tok_per_s_cpu": n_tok / dt,
         "weight_bytes_saved_frac": savings / max(total_w, 1),
     }
-    if args.paged:
+    if args.paged or args.disagg:
         s = eng.metrics.summary()
         out.update({"ttft_p99_ms": s["ttft_p99_ms"],
                     "tpot_p50_ms": s["tpot_p50_ms"],
                     "evictions": s["evictions"]})
+        if args.disagg:
+            out.update({
+                "n_handoffs": s["n_handoffs"],
+                "n_decode_direct": s["n_decode_direct"],
+                "tpot_p99_steady_ms": s.get("tpot_p99_steady_ms"),
+                "tpot_p99_prefill_overlap_ms":
+                    s.get("tpot_p99_prefill_overlap_ms")})
         if args.mesh > 1:
             out["mesh"] = s["mesh"]
             out["kv_pool_per_shard_bytes"] = \
@@ -233,14 +275,15 @@ def main():
         out["ticks"] = eng.tracer.tick_summary()
     if args.profile:
         from repro.obs import attainment_table
-        rows = eng.profiler.report(eng.tracer.tick_stats)
+        prof = eng.decode.profiler if dcfg is not None else eng.profiler
+        rows = prof.report(eng.tracer.tick_stats)
         out["bucket_attainment"] = rows
         print(attainment_table(rows))
     if args.trace_out:
         from repro.obs import write_jsonl, write_perfetto
         trace = write_perfetto(eng.tracer, args.trace_out + ".trace.json",
                                registry=eng.metrics.registry,
-                               profiler=eng.profiler)
+                               profiler=getattr(eng, "profiler", None))
         events = write_jsonl(eng.tracer, args.trace_out + ".events.jsonl")
         out["trace_files"] = [trace, events]
     print(json.dumps(out, indent=1))

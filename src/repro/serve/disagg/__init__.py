@@ -1,0 +1,14 @@
+"""Disaggregated prefill/decode serving (ROADMAP item; docs/disagg.md).
+
+Prefill is compute-bound, decode is weight-bandwidth-bound — the same
+opposite-roofline split NeCTAr resolves with near-core vs near-memory
+accelerators. The DisaggCoordinator runs each phase on its own dedicated
+Engine and moves finished prefills over as a paged-KV block transfer
+(PagedKVCache.export_blocks / import_blocks + the runner's block-axis
+copy), so decode ticks never share a batch with prefill chunks and the
+mixed-tick padding artifact disappears structurally.
+"""
+
+from repro.serve.disagg.coordinator import DisaggCoordinator, MergedCollector
+
+__all__ = ["DisaggCoordinator", "MergedCollector"]

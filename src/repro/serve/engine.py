@@ -23,8 +23,9 @@ contract (greedy stays bit-identical to the pre-SamplingParams argmax).
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +38,24 @@ from repro.serve import kv_cache, metrics as metrics_mod, paged_kv, sampling
 from repro.serve.metrics import StepStats  # noqa: F401  (compat re-export)
 from repro.serve.runner import DECODE, PREFILL, VERIFY, ModelRunner
 from repro.serve.scheduler import Request, SchedEntry, Scheduler, State
+
+
+@dataclasses.dataclass
+class HandoffPacket:
+    """Everything a decode engine needs to adopt a prefilled request
+    (serve.disagg). ``blocks`` are the SOURCE pool's physical block ids
+    covering [0, ctx_len) — valid while the source entry stays parked at
+    State.HANDOFF (its slot is pinned, so defrag can't move them).
+    ``draw_ctr`` carries the per-request sample-draw counter so seeded
+    sampling continues exactly where the prefill engine left off (the
+    token-identity contract); ``metrics`` is the live RequestMetrics
+    record, moved (not copied) so TTFT measured at prefill and TPOT
+    measured at decode land on one request row."""
+    req: Request
+    ctx_len: int
+    blocks: List[int]
+    draw_ctr: int
+    metrics: object = None
 
 
 class Engine:
@@ -59,11 +78,14 @@ class Engine:
     """
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
-                 drafter=None, draft_params=None):
+                 drafter=None, draft_params=None, tracer=None):
         """``scfg.spec`` turns on speculative decode (paged mode only).
         ``drafter`` injects a ready-made repro.spec.Drafter; otherwise one
         is built from the spec config (``draft_params`` supplies the
-        small-model weights for spec.drafter='model')."""
+        small-model weights for spec.drafter='model'). ``tracer``
+        injects a shared obs.Tracer (the disagg coordinator threads one
+        tracer through both its engines so request lifecycles and the
+        kv_handoff spans land in a single event stream)."""
         self.cfg = cfg
         self.scfg = scfg
         self.model = Model(cfg)
@@ -72,7 +94,8 @@ class Engine:
         # ObsConfig(enabled=True) — the instrumented tick path below
         # calls through unconditionally, and the null tracer makes
         # every hook a shared no-op (overhead asserted in tier-1)
-        self.tracer = make_tracer(scfg.obs)
+        self.tracer = tracer if tracer is not None \
+            else make_tracer(scfg.obs)
         self.metrics = metrics_mod.MetricsCollector(cfg, scfg)
         self.metrics.tracer = self.tracer
         self.profiler = None           # obs.ServingProfiler (obs.profile)
@@ -86,6 +109,14 @@ class Engine:
         self._presence = None if cfg.n_codebooks else \
             np.zeros((scfg.max_batch, cfg.vocab), bool)
         self._draw_ctr: Dict[int, int] = {}    # rid -> sample-draw counter
+        # disagg seam (serve.disagg): rids submitted for prefill-only —
+        # they park at State.HANDOFF instead of decoding here. The
+        # coordinator sets external_prefill_overlap each tick so the
+        # decode engine's interference split sees the PAIRED prefill
+        # engine's in-flight work.
+        self._handoff_rids: set = set()
+        self.external_prefill_overlap = False
+        self._tick_overlap = False
         if self.spec is not None and not scfg.paged:
             raise ValueError("speculative decode (ServeConfig.spec) "
                              "requires the paged engine (paged=True)")
@@ -454,7 +485,8 @@ class Engine:
                 self.metrics.on_first_token(e.req.rid)
                 self.tracer.event(e.req.rid, "first_token")
             else:
-                self.metrics.on_token(e.req.rid)
+                self.metrics.on_token(
+                    e.req.rid, prefill_overlap=self._tick_overlap)
         if status != "ok":
             self._finish(e, finished)
             return False
@@ -530,6 +562,11 @@ class Engine:
                             if e.req.rid in self.sched.active]
             run_rows = [e for e in self.sched.decode_entries()
                         if e.req.rid not in deferred]
+            # interference classification for this tick's committed
+            # tokens: prefill rows in THIS batch, or (disagg) prefill in
+            # flight on the paired engine
+            self._tick_overlap = bool(prefill_plan) \
+                or self.external_prefill_overlap
 
         # ---- 2) drafting (spec only) ----------------------------------
         # rows replaying after eviction re-feed committed tokens through
@@ -665,6 +702,15 @@ class Engine:
                                          self._one_token(tok_np, e.slot),
                                          lp_np[e.slot], finished,
                                          first=True)
+                # disagg: a prefill-only request parks at HANDOFF once
+                # its context is final (first token committed, or replay
+                # caught up) instead of entering decode here. Requests
+                # that already finished on the first token (stop/max) and
+                # spec entries mid-resync keep their normal lifecycle.
+                if e.req.rid in self._handoff_rids \
+                        and e.req.rid in self.sched.active \
+                        and not e.resync:
+                    self._park_handoff(e)
 
             if spec is None:
                 self._commit_decode(run_rows, tok_np, lp_np, finished)
@@ -835,6 +881,135 @@ class Engine:
         if perm is not None:
             self.runner.apply_perm(perm)
         return perm
+
+    # ------------------------------------------------------------------
+    # disaggregated prefill/decode handoff seam (serve.disagg)
+    #
+    # Lifecycle, driven by the DisaggCoordinator:
+    #   prefill engine:  submit_prefill -> [chunked prefill ticks] ->
+    #                    park at State.HANDOFF (slot pinned, blocks held)
+    #   coordinator:     export_handoff -> decode.adopt_handoff ->
+    #                    release_handoff
+    # A parked entry stays preemptable: eviction resets it to WAITING,
+    # export_handoff returns None, and the replayed prefill re-parks it —
+    # the coordinator just retries on a later tick.
+
+    def submit_prefill(self, req: Request) -> bool:
+        """Admit ``req`` for PREFILL ONLY: it runs chunked prefill here,
+        emits its first token, then parks at State.HANDOFF for a decode
+        engine to adopt (paged mode only)."""
+        if not self.scfg.paged:
+            raise ValueError("disagg handoff requires the paged engine")
+        if self.spec is not None:
+            raise ValueError(
+                "disagg prefill engines must not speculate — spec "
+                "drafting/verify is decode work (runs on the adopter)")
+        self._handoff_rids.add(req.rid)
+        if not self.add_request(req):
+            self._handoff_rids.discard(req.rid)
+            return False
+        return True
+
+    def _park_handoff(self, e: SchedEntry) -> None:
+        e.state = State.HANDOFF
+        # pin: the exported block ids must stay put until the importer
+        # copied them — defrag treats pinned slots' blocks as immovable
+        self.pool.pin(e.slot)
+        self.tracer.event(e.req.rid, "handoff_ready", ctx_len=e.ctx_len,
+                          n_blocks=len(self.pool.owned.get(e.slot, ())))
+
+    def handoff_ready(self) -> List[int]:
+        """rids parked at State.HANDOFF, ready for export_handoff."""
+        return sorted(rid for rid, e in self.sched.active.items()
+                      if e.state is State.HANDOFF)
+
+    def export_handoff(self, rid: int) -> Optional[HandoffPacket]:
+        """Snapshot a parked request for adoption. None when ``rid`` is
+        not (or no longer — mid-handoff preemption) parked; the entry
+        will re-park after its replay completes, retry then."""
+        e = self.sched.active.get(rid)
+        if e is None or e.state is not State.HANDOFF:
+            return None
+        return HandoffPacket(req=e.req, ctx_len=e.ctx_len,
+                             blocks=self.pool.export_blocks(e.slot),
+                             draw_ctr=self._draw_ctr.get(rid, 0),
+                             metrics=self.metrics.requests.get(rid))
+
+    def release_handoff(self, rid: int) -> None:
+        """Drop a parked request after a decode engine adopted it: free
+        the slot and block refs (the prompt's full blocks stay in THIS
+        engine's prefix index — indexed at prefill completion — so
+        same-prefix arrivals still skip their cached chunks). The
+        Request object itself lives on, owned by the adopter: neither
+        ``req.done`` nor finish-side metrics are touched here."""
+        e = self.sched.active.get(rid)
+        assert e is not None and e.state is State.HANDOFF, \
+            f"release_handoff({rid}): not parked"
+        self.pool.unpin(e.slot)
+        self.pool.free_slot(e.slot)
+        self.sched.slots.release(rid)
+        del self.sched.active[rid]
+        e.state = State.DONE
+        e.slot = None
+        self._requests.pop(rid, None)
+        self.metrics.requests.pop(rid, None)  # record moved with packet
+        self._draw_ctr.pop(rid, None)
+        self._handoff_rids.discard(rid)
+        self.tracer.event(rid, "handoff_release")
+
+    def adopt_handoff(self, packet: HandoffPacket, src_runner) -> bool:
+        """Adopt a prefilled request from another engine: allocate fresh
+        private blocks here, byte-copy the source blocks' KV
+        (bit-identical, int8 scales included), and register the request
+        as a RUNNING decode row whose next step feeds tokens_out[-1] at
+        position ctx_len — exactly the state a monolithic engine would
+        be in after prefill completion. All-or-nothing: False (state
+        unchanged) when no slot or not enough blocks are free; the
+        source stays parked, retry after decode capacity frees."""
+        req = packet.req
+        rid = req.rid
+        if rid in self.sched.active or not self.sched.slots.free:
+            return False
+        slot = self.sched.slots.alloc(rid)
+        dst = self.pool.import_blocks(slot, packet.ctx_len)
+        if dst is None:
+            self.pool.free_slot(slot)
+            self.sched.slots.release(rid)
+            return False
+        self.runner.import_blocks_from(src_runner, packet.blocks, dst)
+        e = SchedEntry(req=req, seq=self.sched._seq, state=State.RUNNING,
+                       slot=slot, pos=packet.ctx_len,
+                       ctx_len=packet.ctx_len)
+        self.sched._seq += 1
+        self.sched.active[rid] = e
+        self._requests[rid] = req
+        self._draw_ctr[rid] = packet.draw_ctr
+        self._seed_presence(slot, req)
+        m = packet.metrics
+        if m is None:
+            # source collector didn't track it (already reset/forgotten):
+            # synthesize a record so finish-side accounting still lands
+            self.metrics.on_arrival(rid,
+                                    len(np.asarray(req.prompt).reshape(-1)))
+            if req.tokens_out:
+                self.metrics.on_first_token(rid)
+                self.metrics.requests[rid].n_generated = len(req.tokens_out)
+        else:
+            self.metrics.requests[rid] = m
+        # transfer matched-prefix ownership: index the handed-off context
+        # in THIS engine's radix tree so decode-side multi-turn traffic
+        # (finish re-indexes prompt+response) and same-prefix adoptions
+        # reuse the imported blocks. Indexed full blocks below ctx_len
+        # are never written again (writes land past the frontier; COW
+        # guards the partial tail).
+        prompt = np.asarray(req.prompt).reshape(-1)
+        gen = np.asarray(req.tokens_out[:-1] if req.tokens_out else [],
+                         prompt.dtype)
+        self.sched.index_prefix(e, np.concatenate([prompt, gen]),
+                                packet.ctx_len)
+        self.tracer.event(rid, "handoff_adopt", slot=slot,
+                          n_blocks=len(dst), ctx_len=packet.ctx_len)
+        return True
 
     # ------------------------------------------------------------------
     # legacy fixed-slot mode (baseline / recurrent families)

@@ -72,7 +72,12 @@ class Replica:
 
     @property
     def queue_depth(self) -> int:
-        """In-flight load: waiting + active requests on this replica."""
+        """In-flight load: waiting + active requests on this replica.
+        Engine-shaped backends that span several schedulers (the disagg
+        coordinator) report their own combined depth."""
+        qd = getattr(self.engine, "queue_depth", None)
+        if qd is not None:
+            return qd
         sched = getattr(self.engine, "sched", None)
         if sched is None:
             return len(self.engine._requests)

@@ -90,6 +90,7 @@ class RequestMetrics:
     arrival: float
     prompt_len: int = 0
     first_token_at: Optional[float] = None
+    last_token_at: Optional[float] = None   # inter-token gap frontier
     finished_at: Optional[float] = None
     n_generated: int = 0
     preemptions: int = 0
@@ -196,6 +197,19 @@ class MetricsCollector:
                                   "arrival to finish")
         self._h_tpot = r.histogram("request_tpot_seconds",
                                    "decode cadence after first token")
+        # --- prefill-interference split (ROADMAP disagg target): every
+        # inter-token gap is classified by whether a prefill chunk ran
+        # concurrently (same tick batch, or — under disagg — on the
+        # paired prefill engine). Raw gap samples back the exact
+        # percentiles in summary(); the histograms feed Prometheus.
+        self._h_tpot_ov = r.histogram(
+            "request_tpot_prefill_overlap_seconds",
+            "inter-token gaps with a concurrent prefill in flight")
+        self._h_tpot_st = r.histogram(
+            "request_tpot_steady_seconds",
+            "inter-token gaps with no prefill in flight")
+        self._tpot_overlap: List[float] = []
+        self._tpot_steady: List[float] = []
         # --- prefix cache (serve.prefix_cache) ---
         self._c_plook = r.counter("prefix_lookups_total",
                                   "admissions that consulted the index")
@@ -338,13 +352,33 @@ class MetricsCollector:
 
     def on_first_token(self, rid: int):
         r = self.requests[rid]
+        now = self.clock()
         if r.first_token_at is None:
-            r.first_token_at = self.clock()
+            r.first_token_at = now
+        r.last_token_at = now
         r.n_generated += 1
         self._c_tokens.inc()
 
-    def on_token(self, rid: int):
-        self.requests[rid].n_generated += 1
+    def on_token(self, rid: int, prefill_overlap: bool = False):
+        """One committed decode token. ``prefill_overlap`` classifies the
+        inter-token gap it closes: True when a prefill was in flight
+        while this token was produced (shared-tick prefill rows, or the
+        paired prefill engine under disagg) — the interference split the
+        ROADMAP disagg item names as its target metric."""
+        r = self.requests[rid]
+        now = self.clock()
+        prev = r.last_token_at if r.last_token_at is not None \
+            else r.first_token_at
+        if prev is not None:
+            gap = now - prev
+            if prefill_overlap:
+                self._tpot_overlap.append(gap)
+                self._h_tpot_ov.observe(gap)
+            else:
+                self._tpot_steady.append(gap)
+                self._h_tpot_st.observe(gap)
+        r.last_token_at = now
+        r.n_generated += 1
         self._c_tokens.inc()
 
     def on_finish(self, rid: int):
@@ -460,6 +494,18 @@ class MetricsCollector:
             "latency_p50_ms": _ms(percentile(lats, 50)),
             "latency_p99_ms": _ms(percentile(lats, 99)),
             "tpot_p50_ms": _ms(percentile(tpots, 50)),
+            "tpot_p99_ms": _ms(percentile(tpots, 99)),
+            # prefill-interference split over raw inter-token gaps
+            # (disagg's headline: overlap ≈ steady when prefill runs on
+            # its own engine; monolithic mixed ticks pull overlap up)
+            "tpot_p50_prefill_overlap_ms":
+                _ms(percentile(self._tpot_overlap, 50)),
+            "tpot_p99_prefill_overlap_ms":
+                _ms(percentile(self._tpot_overlap, 99)),
+            "tpot_p50_steady_ms": _ms(percentile(self._tpot_steady, 50)),
+            "tpot_p99_steady_ms": _ms(percentile(self._tpot_steady, 99)),
+            "tpot_overlap_samples": len(self._tpot_overlap),
+            "tpot_steady_samples": len(self._tpot_steady),
             "decode_steps": self.decode_steps,
             "prefill_chunks": self.prefill_chunks,
             "evictions": self.evictions,

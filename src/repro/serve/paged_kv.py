@@ -257,6 +257,28 @@ class PagedKVCache:
                 pairs.append(pair)
         return pairs
 
+    # --- handoff (disaggregated prefill/decode: serve.disagg) -------------
+    def export_blocks(self, slot: int) -> List[int]:
+        """Snapshot ``slot``'s physical block ids for a cross-pool handoff
+        (serve.disagg). Pure read — refcounts, tables, and the free list
+        are untouched; pair with ``pin(slot)`` so defrag can't move the
+        blocks while the importer copies them."""
+        return list(self.owned.get(slot, ()))
+
+    def import_blocks(self, slot: int, n_tokens: int) -> Optional[List[int]]:
+        """Receive a handoff: allocate fresh private (ref=1) blocks in
+        THIS pool covering [0, n_tokens) for ``slot`` and return their
+        physical ids in logical order, for the engine to fill via
+        ``ModelRunner.import_blocks_from``. All-or-nothing: returns None
+        (state unchanged) when the pool can't cover it. The source pool's
+        blocks are never referenced across pools — sharing (COW, prefix
+        index) stays a single-pool concept."""
+        if not self.allocate(slot, n_tokens):
+            if not self.owned.get(slot):       # drop allocate's empty
+                self.owned.pop(slot, None)     # setdefault residue
+            return None
+        return list(self.owned[slot])
+
     # --- pinning (spec decode: slot is mid-verify) ------------------------
     def pin(self, slot: int) -> None:
         """Freeze ``slot``'s physical block ids: a verify step in flight

@@ -471,10 +471,21 @@ class Router:
 
 
 def build_fleet(cfg, params, scfg, n_replicas: int = 2,
-                policy: str = "affinity", **router_kw) -> Router:
+                policy: str = "affinity", disagg=None,
+                **router_kw) -> Router:
     """Convenience constructor: Fleet + Router in one call (what
-    ``launch.serve --replicas N`` and the benchmarks use)."""
-    return Router(Fleet(cfg, params, scfg, n_replicas=n_replicas),
+    ``launch.serve --replicas N`` and the benchmarks use). ``disagg``
+    (a configs.base.DisaggConfig) makes every replica a disaggregated
+    prefill/decode pool (serve.disagg.DisaggCoordinator) instead of a
+    single Engine — the coordinator duck-types the Engine surface the
+    Replica wraps, so routing, stickiness, and drain work unchanged."""
+    factory = None
+    if disagg is not None:
+        from repro.serve.disagg import DisaggCoordinator
+        factory = lambda: DisaggCoordinator(cfg, params, scfg,  # noqa: E731
+                                            dcfg=disagg)
+    return Router(Fleet(cfg, params, scfg, n_replicas=n_replicas,
+                        engine_factory=factory),
                   policy=policy, **router_kw)
 
 

@@ -276,6 +276,24 @@ class ModelRunner:
             lambda a: a.at[:, dst].set(a[:, src]), self.cache["units"])
         self._pin_cache_sharding()
 
+    def import_blocks_from(self, src: "ModelRunner", src_ids,
+                           dst_ids) -> None:
+        """Disagg KV handoff (serve.disagg): copy block storage rows
+        ``src_ids`` of ``src``'s pool into rows ``dst_ids`` of THIS
+        runner's pool, across every layer's pools (all leaves — int8
+        scales included, so quantized KV survives bit-identical). Same
+        block-axis primitive family as copy_blocks; under a shared mesh
+        the per-leaf device_put reshards src bytes into this pool's
+        layout before the scatter."""
+        if not len(src_ids):
+            return
+        s = jnp.asarray(np.asarray(src_ids, np.int32))
+        d = jnp.asarray(np.asarray(dst_ids, np.int32))
+        self.cache["units"] = jax.tree.map(
+            lambda a, b: a.at[:, d].set(b[:, s].astype(a.dtype)),
+            self.cache["units"], src.cache["units"])
+        self._pin_cache_sharding()
+
     def _pin_cache_sharding(self) -> None:
         """Re-commit the pool leaves to their mesh shardings after an
         eager block-maintenance op (a no-op when GSPMD already kept the

@@ -67,6 +67,7 @@ class State(enum.Enum):
     WAITING = "waiting"
     PREFILL = "prefill"
     RUNNING = "running"
+    HANDOFF = "handoff"         # prefill done, parked for disagg export
     DONE = "done"
 
 

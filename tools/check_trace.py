@@ -14,6 +14,10 @@ Checks, for the Perfetto/Chrome-trace JSON:
     track must be present (the CI perf-gate passes the three roofline
     counters so a silent profiler regression can't ship an empty
     trace);
+  * with ``--expect-spans NAME[,NAME...]``, every named span lane must
+    hold at least one complete event (the disagg smoke passes
+    ``kv_handoff`` so a handoff path that silently stops tracing
+    can't ship);
   * non-metadata events are sorted by ``ts`` (monotonic timeline — the
     Perfetto UI tolerates disorder, this repo's exporter must not).
 
@@ -23,6 +27,9 @@ And for the JSONL event log:
     (meta/span/event/tick);
   * per request id, lifecycle ordering holds:
     arrival <= admitted <= first_token <= finish (when present);
+  * per request id, disagg handoff ordering holds:
+    handoff_ready <= handoff_adopt <= handoff_release (when present),
+    and an adopted request must have parked first;
   * a ``meta`` header exists and its ``dropped`` count is reported
     (a truncated trace is a warning, not a failure).
 
@@ -42,10 +49,17 @@ KNOWN_PH = {"X", "i", "M", "B", "E", "C"}
 # (prefill_chunk, preempted, spec_*, cow, replay_done) may repeat and
 # interleave freely
 ORDERED = ("arrival", "admitted", "first_token", "finish")
+# disagg KV-handoff milestones (serve.disagg): park on the prefill
+# engine, adopt on the decode engine, release back on the prefill
+# engine — one shared tracer orders all three on one timeline. A
+# preempted park may repeat (ready ... ready adopt release); the check
+# uses first-occurrence timestamps, which the re-park only moves later.
+HANDOFF = ("handoff_ready", "handoff_adopt", "handoff_release")
 KNOWN_KINDS = {"meta", "span", "event", "tick"}
 
 
-def check_perfetto(path: str, expect_counters=()) -> List[str]:
+def check_perfetto(path: str, expect_counters=(),
+                   expect_spans=()) -> List[str]:
     errs: List[str] = []
     try:
         with open(path) as f:
@@ -58,6 +72,7 @@ def check_perfetto(path: str, expect_counters=()) -> List[str]:
     last_ts = None
     n_spans = 0
     counters: dict = {}            # counter name -> sample count
+    span_names: dict = {}          # span name -> complete-event count
     for i, ev in enumerate(events):
         ph = ev.get("ph")
         if ph not in KNOWN_PH:
@@ -71,6 +86,9 @@ def check_perfetto(path: str, expect_counters=()) -> List[str]:
             continue
         if ph == "X":
             n_spans += 1
+            name = ev.get("name")
+            if name:
+                span_names[name] = span_names.get(name, 0) + 1
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 errs.append(f"{path}: event {i}: bad dur {dur!r}")
@@ -96,6 +114,10 @@ def check_perfetto(path: str, expect_counters=()) -> List[str]:
         if not counters.get(name):
             errs.append(f"{path}: expected counter track {name!r} "
                         f"absent (have: {sorted(counters) or 'none'})")
+    for name in expect_spans:
+        if not span_names.get(name):
+            errs.append(f"{path}: expected span lane {name!r} absent "
+                        f"(have: {sorted(span_names) or 'none'})")
     meta = trace.get("metadata", {})
     if meta.get("dropped"):
         print(f"[check_trace] warning: {path}: {meta['dropped']} "
@@ -132,33 +154,40 @@ def check_jsonl(path: str) -> List[str]:
                           f"{rec['dropped']} records dropped")
             elif kind == "event":
                 name = rec.get("name")
-                if name in ORDERED:
+                if name in ORDERED or name in HANDOFF:
                     ms = milestones.setdefault(rec.get("rid"), {})
                     ms.setdefault(name, rec.get("ts_us", 0.0))
     if not saw_meta:
         errs.append(f"{path}: no meta header line")
     for rid, ms in sorted(milestones.items()):
-        chain = [(n, ms[n]) for n in ORDERED if n in ms]
-        for (n0, t0), (n1, t1) in zip(chain, chain[1:]):
-            if t1 < t0:
-                errs.append(f"{path}: rid {rid}: {n1} at {t1}us "
-                            f"precedes {n0} at {t0}us")
+        for names in (ORDERED, HANDOFF):
+            chain = [(n, ms[n]) for n in names if n in ms]
+            for (n0, t0), (n1, t1) in zip(chain, chain[1:]):
+                if t1 < t0:
+                    errs.append(f"{path}: rid {rid}: {n1} at {t1}us "
+                                f"precedes {n0} at {t0}us")
         if "finish" in ms and "arrival" not in ms:
             errs.append(f"{path}: rid {rid}: finish without arrival")
+        if "handoff_adopt" in ms and "handoff_ready" not in ms:
+            errs.append(f"{path}: rid {rid}: handoff_adopt without "
+                        f"handoff_ready (adopted a never-parked request)")
     return errs
 
 
 def main(argv: List[str]) -> int:
     expect_counters: List[str] = []
+    expect_spans: List[str] = []
     paths: List[str] = []
     it = iter(argv)
     for a in it:
-        if a == "--expect-counters":
+        if a in ("--expect-counters", "--expect-spans"):
             nxt = next(it, None)
             if nxt is None:
-                print("[check_trace] --expect-counters needs an argument")
+                print(f"[check_trace] {a} needs an argument")
                 return 2
-            expect_counters += [n for n in nxt.split(",") if n]
+            dst = expect_counters if a == "--expect-counters" \
+                else expect_spans
+            dst += [n for n in nxt.split(",") if n]
         else:
             paths.append(a)
     if not paths:
@@ -169,7 +198,8 @@ def main(argv: List[str]) -> int:
         if path.endswith(".jsonl"):
             errs += check_jsonl(path)
         else:
-            errs += check_perfetto(path, expect_counters=expect_counters)
+            errs += check_perfetto(path, expect_counters=expect_counters,
+                                   expect_spans=expect_spans)
     for e in errs:
         print(f"[check_trace] FAIL: {e}")
     if not errs:
