@@ -16,9 +16,16 @@ paged engine's throughput knee instead of guessing the defaults).
 ``--mesh N`` compares the paged engine sharded over a model=N device
 mesh vs single-device on the same trace (token-identity asserted) and
 writes BENCH_mesh.json — see docs/sharding.md.
+``--async`` compares the paged engine with the asynchronous tick
+pipeline (ServeConfig.async_cfg, docs/async.md) against the synchronous
+paged engine on the same trace: greedy token identity is asserted, the
+per-DEVICE-tick host/device attribution and overlap fraction are
+reported, and the JSONL trace rides along so CI can replay the
+reconcile-after-dispatch ordering invariant with
+``tools/check_trace.py --expect-ordering``. Writes BENCH_async.json.
 
 Run: PYTHONPATH=src python -m benchmarks.bench_serving \
-         [--sweep | --mesh N] [--quick]
+         [--sweep | --mesh N | --async] [--quick]
 """
 
 from __future__ import annotations
@@ -32,9 +39,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import ObsConfig, ServeConfig
+from repro.configs.base import AsyncConfig, ObsConfig, ServeConfig
 from repro.models import Model
-from repro.obs import write_perfetto
+from repro.obs import write_jsonl, write_perfetto
 from repro.serve.engine import Engine
 from repro.serve.scheduler import Request
 
@@ -47,6 +54,11 @@ ART_SWEEP = os.path.join(_DIR, "BENCH_sweep.json")
 ART_SWEEP_QUICK = os.path.join(_DIR, "BENCH_sweep_quick.json")
 ART_MESH = os.path.join(_DIR, "BENCH_mesh.json")
 ART_MESH_QUICK = os.path.join(_DIR, "BENCH_mesh_quick.json")
+ART_ASYNC = os.path.join(_DIR, "BENCH_async.json")
+ART_ASYNC_QUICK = os.path.join(_DIR, "BENCH_async_quick.json")
+ART_ASYNC_EVENTS = os.path.join(_DIR, "TRACE_async.events.jsonl")
+ART_ASYNC_EVENTS_QUICK = os.path.join(_DIR,
+                                      "TRACE_async_quick.events.jsonl")
 
 N_REQUESTS = 16
 MAX_NEW = 16
@@ -112,24 +124,38 @@ def run_trace(eng: Engine, trace):
 
 
 def bench_engine(cfg, params, paged: bool, seed=0, n_requests=N_REQUESTS,
-                 max_new=MAX_NEW, shared_prefix_frac=0.0, obs=False):
+                 max_new=MAX_NEW, shared_prefix_frac=0.0, obs=False,
+                 async_cfg=None):
     # shared-prefix traffic lengthens prompts (sys prompt + tail) and, on
     # the paged engine, turns the radix prefix cache on — the system
     # prompt should cost its prefill once, not per request. ``obs``
     # enables repro.obs tracing: the summary then carries per-tick
     # host/device attribution and pad-waste (the reset_metrics() below
     # restarts the trace window with the measurement window).
+    # ``async_cfg`` turns on the asynchronous tick pipeline (paged only).
     scfg = ServeConfig(max_batch=4,
                        max_seq=128 if shared_prefix_frac > 0 else 96,
                        paged=paged, block_size=8, prefill_chunk=16,
                        prefix_cache=paged and shared_prefix_frac > 0,
-                       obs=ObsConfig(enabled=True) if obs else ObsConfig())
+                       obs=ObsConfig(enabled=True) if obs else ObsConfig(),
+                       async_cfg=async_cfg)
     eng = Engine(cfg, params, scfg)
     # warm the decode jit (both modes) so compile time isn't billed to the
     # trace; per-prompt-length prefill re-jits stay billed to the seed
-    # engine because they are its steady-state behavior, not warmup.
-    warm = Request(rid=-1, prompt=np.arange(4, dtype=np.int32), max_new=2)
-    eng.run([warm], max_steps=50)
+    # engine because they are its steady-state behavior, not warmup. The
+    # async engine additionally compiles a decode-burst program per batch
+    # width bucket — warm with staggered-length requests so every bucket
+    # (and the burst's tail widths as rows finish) compiles up front.
+    if async_cfg is not None:
+        warms = [Request(rid=-(i + 1),
+                         prompt=np.arange(4, dtype=np.int32),
+                         max_new=2 + i)
+                 for i in range(scfg.max_batch)]
+        eng.run(warms, max_steps=200)
+    else:
+        warm = Request(rid=-1, prompt=np.arange(4, dtype=np.int32),
+                       max_new=2)
+        eng.run([warm], max_steps=50)
     eng.reset_metrics()
     s = run_trace(eng, make_trace(cfg, seed, n_requests=n_requests,
                                   max_new=max_new,
@@ -256,6 +282,90 @@ def run_mesh(model_shards: int, quick: bool = False):
     ]
 
 
+def run_async(quick: bool = False, max_device_ticks: int = 8):
+    """Async-vs-sync paged engine on the same Poisson trace
+    (ServeConfig.async_cfg, docs/async.md). Greedy token identity is the
+    correctness contract — the async pipeline defers reconciliation and
+    runs device-resident decode bursts, but must emit byte-identical
+    token streams. Reports per-DEVICE-tick host/device attribution both
+    ways (the async win is host_ms_per_tick: one sync + one dispatch
+    amortized over up to ``max_device_ticks`` device steps), the overlap
+    fraction from Engine.async_stats(), and writes
+    BENCH_async[_quick].json plus the async run's JSONL event log so
+    ``tools/check_trace.py --expect-ordering`` can replay the
+    reconcile-after-dispatch invariant in CI."""
+    n_requests = 6 if quick else N_REQUESTS
+    max_new = 8 if quick else MAX_NEW
+    cfg = get_config("nectar-relu-llama-1.7m")
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+
+    def bench(async_cfg):
+        scfg = ServeConfig(max_batch=4, max_seq=96, paged=True,
+                           block_size=8, prefill_chunk=16,
+                           obs=ObsConfig(enabled=True),
+                           async_cfg=async_cfg)
+        eng = Engine(cfg, params, scfg)
+        # staggered warm lengths: compile the decode-burst program for
+        # every batch-width bucket before the measured window
+        warms = [Request(rid=-(i + 1),
+                         prompt=np.arange(4, dtype=np.int32),
+                         max_new=2 + i)
+                 for i in range(scfg.max_batch)]
+        eng.run(warms, max_steps=200)
+        eng.reset_metrics()
+        trace = make_trace(cfg, n_requests=n_requests, max_new=max_new)
+        s = run_trace(eng, trace)
+        toks = {req.rid: [int(t) for t in req.tokens_out]
+                for _, req in trace}
+        return s, toks, eng
+
+    sync_s, sync_toks, _ = bench(None)
+    acfg = AsyncConfig(enabled=True, max_device_ticks=max_device_ticks)
+    async_s, async_toks, async_eng = bench(acfg)
+    identical = sync_toks == async_toks
+    astats = async_eng.async_stats()
+    sync_t = sync_s.get("ticks") or {}
+    async_t = async_s.get("ticks") or {}
+
+    events_path = ART_ASYNC_EVENTS_QUICK if quick else ART_ASYNC_EVENTS
+    write_jsonl(async_eng.tracer, events_path)
+
+    host_red = (sync_t.get("host_ms_per_tick", 0.0)
+                / max(async_t.get("host_ms_per_tick", 0.0), 1e-9))
+    report = {
+        "trace": {"n_requests": n_requests, "max_new": max_new,
+                  "arrival_rate_per_s": ARRIVAL_RATE,
+                  "long_prompt_frac": LONG_FRAC, "quick": quick},
+        "async_cfg": {"max_device_ticks": max_device_ticks},
+        "sync_engine": sync_s,
+        "async_engine": async_s,
+        "async_stats": astats,
+        "token_identical": identical,
+        "host_ms_per_tick_reduction": host_red,
+        "events_jsonl": os.path.basename(events_path),
+    }
+    with open(ART_ASYNC_QUICK if quick else ART_ASYNC, "w") as f:
+        json.dump(report, f, indent=1)
+    if not identical:
+        raise SystemExit("async greedy output diverged from the "
+                         "synchronous paged engine — async pipeline bug "
+                         "(see tests/test_async_differential.py)")
+    return [
+        ("serving_async_off", 0.0,
+         f"tok_s={sync_s['tokens_per_s']:.1f};"
+         f"host_ms_per_tick={sync_t.get('host_ms_per_tick', 0.0):.2f};"
+         f"device_ms_per_tick={sync_t.get('device_ms_per_tick', 0.0):.2f}"),
+        ("serving_async_on", 0.0,
+         f"tok_s={async_s['tokens_per_s']:.1f};"
+         f"host_ms_per_tick={async_t.get('host_ms_per_tick', 0.0):.2f};"
+         f"device_ms_per_tick={async_t.get('device_ms_per_tick', 0.0):.2f};"
+         f"overlap_frac={astats['overlap_frac']:.3f}"),
+        ("serving_async_identity", 0.0,
+         f"token_identical={identical};"
+         f"host_reduction={host_red:.2f}x"),
+    ]
+
+
 def run(quick: bool = False, shared_prefix_frac: float = 0.0):
     n_requests = 6 if quick else N_REQUESTS
     max_new = 8 if quick else MAX_NEW
@@ -272,6 +382,16 @@ def run(quick: bool = False, shared_prefix_frac: float = 0.0):
     paged_s, paged_eng = bench_engine(
         cfg, params, paged=True, n_requests=n_requests, max_new=max_new,
         shared_prefix_frac=shared_prefix_frac, obs=True)
+    # async tick pipeline on the same trace shape (docs/async.md): the
+    # row this adds is the ROADMAP async-engine item's acceptance metric
+    # — host_ms_per_tick amortized over device-resident decode bursts,
+    # gated against the committed baseline by the CI perf-gate
+    async_s, async_eng = bench_engine(
+        cfg, params, paged=True, n_requests=n_requests, max_new=max_new,
+        shared_prefix_frac=shared_prefix_frac, obs=True,
+        async_cfg=AsyncConfig(enabled=True, max_device_ticks=8))
+    astats = async_eng.async_stats()
+    aticks = async_s.get("ticks") or {}
     speedup = paged_s["tokens_per_s"] / max(seed_s["tokens_per_s"], 1e-9)
     ticks = paged_s.get("ticks") or {}
 
@@ -287,6 +407,8 @@ def run(quick: bool = False, shared_prefix_frac: float = 0.0):
                   "quick": quick},
         "seed_engine": seed_s,
         "paged_engine": paged_s,
+        "async_engine": async_s,
+        "async_stats": astats,
         "tokens_per_s_speedup": speedup,
         "perfetto_trace": os.path.basename(trace_path),
     }
@@ -309,6 +431,13 @@ def run(quick: bool = False, shared_prefix_frac: float = 0.0):
             f"host_ms_per_tick={ticks['host_ms_per_tick']:.2f};"
             f"device_ms_per_tick={ticks['device_ms_per_tick']:.2f};"
             f"pad_waste_frac={ticks['pad_waste_frac']:.3f}"))
+    if aticks.get("n_ticks"):
+        rows.append((
+            "serving_async_tick", 0.0,
+            f"tok_s={async_s['tokens_per_s']:.1f};"
+            f"host_ms_per_tick={aticks['host_ms_per_tick']:.2f};"
+            f"device_ms_per_tick={aticks['device_ms_per_tick']:.2f};"
+            f"overlap_frac={astats['overlap_frac']:.3f}"))
     # the speedup stays the LAST row: benchmarks.run's quick index takes
     # the final row as the suite's acceptance headline
     rows.append(("serving_paged_speedup", 0.0,
@@ -327,19 +456,30 @@ def main():
                          "model=N mesh vs single-device on the same "
                          "trace -> BENCH_mesh.json (needs N visible "
                          "devices)")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="async tick pipeline vs synchronous paged "
+                         "engine on the same trace (token identity "
+                         "asserted) -> BENCH_async.json + the JSONL "
+                         "event log for --expect-ordering")
+    ap.add_argument("--async-k", type=int, default=8,
+                    help="max device-resident decode ticks per burst "
+                         "for --async (AsyncConfig.max_device_ticks)")
     ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
                     help="fraction of requests opening with one common "
                          "system prompt (synthesizes prefix-cache "
                          "traffic; enables prefix_cache on the paged "
                          "engine when > 0)")
     args = ap.parse_args()
-    if args.mesh and args.sweep:
-        ap.error("--mesh and --sweep are separate benchmarks; "
+    if sum(bool(x) for x in (args.mesh, args.sweep, args.async_)) > 1:
+        ap.error("--mesh, --sweep and --async are separate benchmarks; "
                  "run them one at a time")
     if args.mesh == 1:
         ap.error("--mesh needs >= 2 model shards (1 is the plain "
                  "single-device benchmark — just drop the flag)")
-    if args.mesh > 1:
+    if args.async_:
+        rows = run_async(quick=args.quick, max_device_ticks=args.async_k)
+        art = ART_ASYNC_QUICK if args.quick else ART_ASYNC
+    elif args.mesh > 1:
         rows = run_mesh(args.mesh, quick=args.quick)
         art = ART_MESH_QUICK if args.quick else ART_MESH
     elif args.sweep:

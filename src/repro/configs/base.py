@@ -276,6 +276,40 @@ class MeshConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Asynchronous engine tick pipeline (serve.engine async core).
+
+    The synchronous engine runs every tick host-blocking: schedule ->
+    dispatch -> wait -> sample -> postprocess. With ``enabled=True`` the
+    engine overlaps host work with device compute two ways (docs/async.md):
+
+      * DOUBLE-BUFFERED TICKS — tick t's device step is dispatched
+        without ``block_until_ready``; tick t+1's StepBatch assembly and
+        tick t-1's host bookkeeping (stop detection, streaming publish,
+        radix publish, metrics) run while the device computes. The host
+        reconciles tick t's sampled tokens one tick later.
+
+      * DEVICE-RESIDENT DECODE LOOP — in the decode-only steady state
+        (no waiting requests, no prefill, no spec, capacity for K more
+        tokens per row) up to ``max_device_ticks`` decode steps run
+        inside one ``lax.while_loop`` on device, early-exiting when every
+        row hits a stop condition; the host syncs once per burst.
+
+    Greedy output is token-identical to the synchronous engine — the
+    differential fuzz harness (tests/test_async_differential.py) and the
+    tier-1 identity tests assert it across plain/spec/prefix/int8/
+    preemption regimes. Ticks that cannot preserve identity cheaply
+    (prefill, spec, eviction pressure, penalized sampling) fall back to
+    the synchronous path per-tick."""
+
+    enabled: bool = False
+    max_device_ticks: int = 8       # K: decode ticks per device burst (>=1)
+    sync_every: int = 0             # force a host sync every N engine ticks
+    #                                 (0 = only when the engine needs one);
+    #                                 bounds streaming/metrics staleness
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_batch: int = 8
     max_seq: int = 2048
@@ -309,6 +343,10 @@ class ServeConfig:
     # default is a no-op tracer; greedy output is token-identical
     # tracing on or off (tracing only observes, never schedules)
     obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
+    # asynchronous tick pipeline (docs/async.md): double-buffered host
+    # loop + device-resident K-tick decode bursts. None = synchronous.
+    # Paged mode only; greedy output stays token-identical async on/off.
+    async_cfg: Optional[AsyncConfig] = None
 
     @property
     def blocks_per_seq(self) -> int:

@@ -115,6 +115,18 @@ def main():
                          "device time -> achieved GFLOP/s, GB/s, and %% "
                          "of the active hardware roofline, printed as a "
                          "table (docs/observability.md)")
+    # --- async tick pipeline (ServeConfig.async_cfg; docs/async.md) ---
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="asynchronous engine ticks (implies --paged): "
+                         "double-buffered dispatch + device-resident "
+                         "decode bursts; greedy output stays token-"
+                         "identical to the synchronous engine")
+    ap.add_argument("--async-k", type=int, default=8,
+                    help="max device ticks per decode burst (1 = "
+                         "double-buffered overlap only)")
+    ap.add_argument("--async-sync-every", type=int, default=0,
+                    help="force a synchronous tick every N ticks "
+                         "(bounds reconcile latency; 0 = off)")
     # --- per-request SamplingParams (applied to every demo request) ---
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples on-device")
@@ -150,12 +162,20 @@ def main():
     if args.obs or args.trace_out or args.profile:
         from repro.configs.base import ObsConfig
         obs = ObsConfig(enabled=True, profile=args.profile)
+    async_cfg = None
+    if args.async_:
+        from repro.configs.base import AsyncConfig
+        async_cfg = AsyncConfig(enabled=True,
+                                max_device_ticks=args.async_k,
+                                sync_every=args.async_sync_every)
     scfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
-                       sparse_decode=not args.dense, paged=args.paged,
+                       sparse_decode=not args.dense,
+                       paged=args.paged or args.async_,
                        block_size=args.block_size,
                        prefill_chunk=args.prefill_chunk,
                        policy=args.policy, spec=spec,
                        attn_backend=args.attn_backend, mesh=mesh,
+                       async_cfg=async_cfg,
                        **({"obs": obs} if obs is not None else {}))
     dcfg = None
     if args.disagg:
@@ -271,6 +291,8 @@ def main():
                 "spec_steps": s["spec_steps"],
                 "spec_acceptance_rate": s["spec_acceptance_rate"],
                 "spec_tokens_per_verify": s["spec_tokens_per_verify"]})
+    if args.async_ and dcfg is None:
+        out["async"] = eng.async_stats()
     if eng.tracer.enabled:
         out["ticks"] = eng.tracer.tick_summary()
     if args.profile:

@@ -70,3 +70,15 @@ class Model:
                                         n_valid, is_prefill, block_size,
                                         backend=backend,
                                         has_prefill=has_prefill)
+
+    def decode_burst(self, params, cache, tables, tok0, lens0, alive0,
+                     budget, stops, stop_len, hist0, sample_fn,
+                     block_size: int, backend: str, k_ticks, k_max: int):
+        """Device-resident K-tick decode loop for the async engine
+        (docs/async.md): forward_step + sampling chained on device under
+        one ``lax.while_loop`` with per-row early exit."""
+        return transformer.decode_burst(params, self.cfg, cache, tables,
+                                        tok0, lens0, alive0, budget,
+                                        stops, stop_len, hist0, sample_fn,
+                                        block_size, backend, k_ticks,
+                                        k_max)

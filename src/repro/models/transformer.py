@@ -508,6 +508,87 @@ def forward_step(params, cfg: ModelConfig, tokens, cache, n_valid,
                     "units": new_units}
 
 
+def decode_burst(params, cfg: ModelConfig, cache, tables, tok0, lens0,
+                 alive0, budget, stops, stop_len, hist0, sample_fn,
+                 block_size: int, backend: str, k_ticks, k_max: int):
+    """Device-resident decode loop: up to ``k_ticks`` single-token decode
+    steps inside one ``lax.while_loop``, feeding each sampled token back
+    as the next step's input without a host round-trip (docs/async.md).
+
+    Per-row early exit is carried on device: row b goes dead (``alive=0``,
+    masking its KV writes exactly like an IDLE runner row) once it has
+    emitted ``budget[b]`` tokens or its generated-stream suffix matches a
+    stop sequence. ``stops`` is i32[B, NS, L] right-aligned (-1 padded)
+    with per-stop lengths ``stop_len`` i32[B, NS] (0 = unused row);
+    ``hist0`` i32[B, L] seeds the suffix ring with the last L tokens
+    already generated, so stops spanning the burst boundary still match.
+    Stops longer than L are matched host-side after the burst — the
+    engine discards any overrun (identity is preserved either way, the
+    device match only buys the early exit).
+
+    ``sample_fn(last_logits, i) -> (tok i32[B], lp f32[B])`` is injected
+    by the runner (serve.sampling stays out of the model layer); ``i`` is
+    the traced burst index, used to select the per-draw PRNG key.
+    ``k_ticks`` is a traced bound (one compilation serves any burst
+    length up to the static ``k_max``, the emitted-buffer width).
+
+    Returns (emitted i32[B, k_max] — -1 past each row's last live step,
+    logprobs f32[B, k_max], new_cache, final lens, n_emitted i32[B]).
+    The loop never advances the engine's committed state: the host
+    replays ``emitted`` through the exact synchronous commit path, which
+    is what keeps greedy output token-identical to the per-tick engine.
+    """
+    B = tok0.shape[0]
+    L = hist0.shape[1]
+    zeros_b = jnp.zeros((B,), bool)
+    col_ids = jnp.arange(k_max)[None, :]
+    pos_mask = jnp.arange(L)[None, None, :] < (L - stop_len[:, :, None])
+
+    def cond(c):
+        return (c["i"] < k_ticks) & jnp.any(c["alive"] > 0)
+
+    def body(c):
+        cache = dict(c["cache"])
+        cache["lens"] = c["lens"]
+        cache["block_tables"] = tables
+        logits, cache = forward_step(
+            params, cfg, c["tok"][:, None], cache, c["alive"], zeros_b,
+            block_size, backend=backend, has_prefill=False)
+        last = logits[:, 0].astype(jnp.float32)
+        ntok, nlp = sample_fn(last, c["i"])
+        ntok = ntok.astype(jnp.int32)
+        live = c["alive"] > 0
+        col = (col_ids == c["i"]) & live[:, None]
+        emitted = jnp.where(col, ntok[:, None], c["emitted"])
+        lp = jnp.where(col, nlp[:, None], c["lp"])
+        hist = jnp.where(
+            live[:, None],
+            jnp.concatenate([c["hist"][:, 1:], ntok[:, None]], axis=1),
+            c["hist"])
+        n_emit = c["n_emit"] + live.astype(jnp.int32)
+        matched = jnp.any(
+            jnp.all(pos_mask | (hist[:, None, :] == stops), axis=-1)
+            & (stop_len > 0), axis=-1)
+        alive = jnp.where(live & ~matched & (n_emit < budget),
+                          1, 0).astype(jnp.int32)
+        return {"cache": cache,
+                "tok": jnp.where(live, ntok, c["tok"]),
+                "lens": c["lens"] + live.astype(c["lens"].dtype),
+                "hist": hist, "emitted": emitted, "lp": lp,
+                "alive": alive, "n_emit": n_emit, "i": c["i"] + 1}
+
+    init = {"cache": cache, "tok": tok0, "lens": lens0, "hist": hist0,
+            "emitted": jnp.full((B, k_max), -1, jnp.int32),
+            "lp": jnp.zeros((B, k_max), jnp.float32),
+            "alive": alive0, "n_emit": jnp.zeros((B,), jnp.int32),
+            "i": jnp.asarray(0, jnp.int32)}
+    fin = jax.lax.while_loop(cond, body, init)
+    new_cache = dict(fin["cache"])
+    new_cache["lens"] = fin["lens"]
+    return (fin["emitted"], fin["lp"], new_cache, fin["lens"],
+            fin["n_emit"])
+
+
 def project_logits(params, cfg: ModelConfig, x):
     """x: [B, S, d] -> logits (fp32 via accumulate-in-f32 dots; operands
     stay bf16 so XLA never materializes an f32 copy of the vocab matrix).

@@ -263,18 +263,27 @@ class Tracer:
     def tick_summary(self) -> dict:
         """Means over tick_stats — the benchmark columns. Ticks that ran
         no device step (empty scheduler polls) still count: their device
-        time is genuinely zero host-side overhead."""
+        time is genuinely zero host-side overhead.
+
+        Per-tick costs are normalized by DEVICE ticks, not engine ticks:
+        an async K-tick device burst (docs/async.md) records one
+        tick_stats entry with ``device_ticks=K`` (the engine set it via
+        tick_attrs), so host_ms_per_tick measures host overhead per
+        emitted decode step either way. Synchronous ticks default to
+        device_ticks=1, which reduces to the old per-entry mean."""
         ts = self.tick_stats
         if not ts:
             return {"n_ticks": 0, "host_ms_per_tick": None,
                     "device_ms_per_tick": None, "pad_waste_frac": None}
         n = len(ts)
+        ndev = sum(int(t.get("device_ticks", 1)) or 1 for t in ts)
         padded = [t["pad_waste_frac"] for t in ts
                   if t.get("pad_waste_frac") is not None]
         return {
             "n_ticks": n,
-            "host_ms_per_tick": sum(t["host_ms"] for t in ts) / n,
-            "device_ms_per_tick": sum(t["device_ms"] for t in ts) / n,
+            "n_device_ticks": ndev,
+            "host_ms_per_tick": sum(t["host_ms"] for t in ts) / ndev,
+            "device_ms_per_tick": sum(t["device_ms"] for t in ts) / ndev,
             "pad_waste_frac": (sum(padded) / len(padded)) if padded
             else None,
         }

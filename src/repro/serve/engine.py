@@ -36,7 +36,8 @@ from repro.models import Model
 from repro.obs import make_tracer
 from repro.serve import kv_cache, metrics as metrics_mod, paged_kv, sampling
 from repro.serve.metrics import StepStats  # noqa: F401  (compat re-export)
-from repro.serve.runner import DECODE, PREFILL, VERIFY, ModelRunner
+from repro.serve.runner import (DECODE, PREFILL, STOP_L, STOP_NS, VERIFY,
+                                ModelRunner)
 from repro.serve.scheduler import Request, SchedEntry, Scheduler, State
 
 
@@ -117,6 +118,26 @@ class Engine:
         self._handoff_rids: set = set()
         self.external_prefill_overlap = False
         self._tick_overlap = False
+        # async tick pipeline (docs/async.md): double-buffered overlap
+        # ticks + device-resident decode bursts. ``_pending`` holds the
+        # one in-flight overlap tick awaiting reconciliation.
+        acfg = scfg.async_cfg
+        self._async = acfg if (acfg is not None and acfg.enabled) else None
+        self._pending = None
+        self._flushed_finished: List[int] = []
+        self._async_tick_no = 0
+        self._loop_device_ticks = 0
+        self._async_stats = {"sync_ticks": 0, "overlap_ticks": 0,
+                             "loop_bursts": 0, "loop_device_ticks": 0}
+        if self._async is not None:
+            if not scfg.paged:
+                raise ValueError(
+                    "async serving (ServeConfig.async_cfg) requires the "
+                    "paged engine (paged=True) — the legacy slot path is "
+                    "the synchronous equivalence baseline")
+            if self._async.max_device_ticks < 1:
+                raise ValueError("AsyncConfig.max_device_ticks must be "
+                                 ">= 1")
         if self.spec is not None and not scfg.paged:
             raise ValueError("speculative decode (ServeConfig.spec) "
                              "requires the paged engine (paged=True)")
@@ -179,6 +200,9 @@ class Engine:
         the collector so every rate in one summary() covers the same
         measurement window — pool STATE (blocks, refcounts, the radix
         tree itself) is untouched."""
+        if self._async is not None:
+            # commit any deferred tokens into the OLD window first
+            self.flush_async()
         self.metrics = metrics_mod.MetricsCollector(self.cfg, self.scfg)
         self.metrics.tracer = self.tracer
         self.tracer.reset()            # same window as the collector
@@ -264,6 +288,8 @@ class Engine:
         ``tracer.tick_stats``."""
         with self.tracer.tick():
             if self.scfg.paged:
+                if self._async is not None:
+                    return self._tick_paged_async()
                 return self._tick_paged()
             return self._step_slots()
 
@@ -874,9 +900,382 @@ class Engine:
             self._accept_rngs.pop(e.req.rid, None)
         finished.append(e.req.rid)
 
+    # ------------------------------------------------------------------
+    # asynchronous tick pipeline (ServeConfig.async_cfg, docs/async.md)
+    #
+    # Three tick flavors, chosen per tick:
+    #   * loop   — pure-decode steady state, single device: up to
+    #              max_device_ticks forward+sample steps run inside one
+    #              device lax.while_loop (runner.decode_burst); the host
+    #              then REPLAYS the emitted tokens through the exact
+    #              synchronous commit path (token identity by
+    #              construction).
+    #   * overlap — double-buffered: dispatch tick t's step + device-side
+    #              sample WITHOUT blocking, reconcile tick t-1's pending
+    #              tokens while t runs; tick t+1 chains on t's
+    #              still-in-flight sampled tokens via a device where().
+    #   * sync   — the plain _tick_paged, used whenever anything beyond
+    #              pure decode is in play (prefill, spec, admissions,
+    #              eviction pressure, rep-penalty rows, handoff, forced
+    #              cadence). Sync ticks always flush the pending overlap
+    #              tick first, so admissions/preemptions never race an
+    #              in-flight reconcile.
+    #
+    # Overrun is harmless by design: a row that finished at reconcile may
+    # have one extra step in flight — its results are discarded by the
+    # entry-identity check, and its stale KV writes are never read (the
+    # sync path republishes host-truth lens/tables; freed-block reuse is
+    # ordered behind the in-flight step on the device stream).
+
+    def flush_async(self) -> None:
+        """Reconcile any in-flight overlap tick NOW. Engines expose this
+        so out-of-band mutators (defrag, disagg adoption, metric-window
+        resets) see fully-committed host state; rids finished during a
+        flush are surfaced by the next step() call."""
+        if getattr(self, "_pending", None) is not None:
+            self._flushed_finished.extend(self._reconcile_pending())
+
+    def _tick_paged_async(self) -> List[int]:
+        acfg = self._async
+        self._async_tick_no += 1
+        pre = self._flushed_finished
+        self._flushed_finished = []
+        force = acfg.sync_every > 0 \
+            and self._async_tick_no % acfg.sync_every == 0
+        rows = None if force else self._async_decode_rows()
+        if rows is None:
+            fin = self._reconcile_pending()
+            self._async_stats["sync_ticks"] += 1
+            return pre + fin + self._tick_paged()
+        if acfg.max_device_ticks > 1 and self.mesh is None:
+            # loop mode wants committed state: flush the pending overlap
+            # tick, drop rows it finished, then burst on device
+            fin = self._reconcile_pending()
+            rows = [e for e in rows
+                    if self.sched.active.get(e.req.rid) is e]
+            out = self._tick_async_loop(rows) if rows else None
+            if out is not None:
+                return pre + fin + out
+            self._async_stats["sync_ticks"] += 1
+            return pre + fin + self._tick_paged()
+        out = self._tick_async_overlap(rows)
+        if out is None:
+            fin = self._reconcile_pending()
+            self._async_stats["sync_ticks"] += 1
+            return pre + fin + self._tick_paged()
+        return pre + out
+
+    def _async_decode_rows(self) -> Optional[List[SchedEntry]]:
+        """The decode rows an async tick may run, or None when this tick
+        needs the synchronous path. Conservative by design: anything that
+        samples from host state (rep penalty), mutates scheduling state
+        (admission, prefill, eviction), or exports state mid-stream
+        (handoff) falls back to sync — identity first, overlap second."""
+        if self.spec is not None or self.cfg.n_codebooks \
+                or self.profiler is not None:
+            return None
+        if not self.sched.decode_only():
+            return None
+        rows = list(self.sched.decode_entries())
+        if not rows:
+            return None
+        for e in rows:
+            sp = self._sp(e.req)
+            if sp.repetition_penalty != 1.0 or e.resync \
+                    or not e.req.tokens_out \
+                    or e.req.rid in self._handoff_rids:
+                return None
+        return rows
+
+    def _reconcile_pending(self) -> List[int]:
+        """Commit the deferred overlap tick: block on its device tokens
+        (the only host sync of the pair of ticks), then replay them
+        through the exact synchronous commit path. Rows whose entry is no
+        longer the active one for their rid (finished/evicted since
+        dispatch) are overrun — their tokens are discarded."""
+        pend = self._pending
+        if pend is None:
+            return []
+        self._pending = None
+        tr = self.tracer
+        finished: List[int] = []
+        with tr.span("sample_sync", rows=len(pend["entries"]),
+                     reconciles_tick=pend["tick"]):
+            with tr.span("device_wait"):
+                tok_np = np.asarray(pend["tok"])
+            lp_np = np.asarray(pend["lp"])
+        live = [e for e in pend["entries"]
+                if self.sched.active.get(e.req.rid) is e]
+        prev = self._tick_overlap
+        self._tick_overlap = pend["overlap"]
+        try:
+            with tr.span("postprocess"):
+                self._commit_decode(live, tok_np, lp_np, finished)
+        finally:
+            self._tick_overlap = prev
+        return finished
+
+    def _tick_async_overlap(self, rows: List[SchedEntry]
+                            ) -> Optional[List[int]]:
+        """Double-buffered decode tick: dispatch this tick's device step
+        and device-side sample, then reconcile LAST tick's pending tokens
+        while this one runs. Rows with a pending token chain on it via a
+        device where() — their input token never touches the host.
+        Returns None (state untouched, caller falls back to sync) when
+        capacity would need eviction or a row is at its context ceiling.
+        """
+        tr = self.tracer
+        scfg = self.scfg
+        pend = self._pending
+        prids = pend["rids"] if pend is not None else frozenset()
+        B = scfg.max_batch
+        with tr.span("schedule"):
+            need_blocks = 0
+            needs = []
+            for e in rows:
+                off = 1 if e.req.rid in prids else 0
+                need = e.ctx_len + off + 1
+                nb = self.pool.blocks_for(need)
+                if need > scfg.max_seq or nb > self.pool.max_blocks_per_seq:
+                    return None
+                have = len(self.pool.owned.get(e.slot, ()))
+                need_blocks += max(nb - have, 0)
+                needs.append((e, off, need))
+            if need_blocks > self.pool.n_free:
+                return None                    # eviction is sync work
+            for e, off, need in needs:
+                ok = self.pool.allocate(e.slot, need)
+                assert ok, "n_free precheck covered this allocation"
+            self._tick_overlap = self.external_prefill_overlap
+        with tr.span("batch_assemble"):
+            cow: List[Tuple[int, int]] = []
+            for e, off, _ in needs:
+                cow.extend(self.pool.cow_for_write(e.slot,
+                                                   e.ctx_len + off, 1))
+            if cow:
+                self.runner.copy_blocks(cow)
+            batch = self.runner.new_batch(1, self.pool.tables())
+            chain = np.zeros((B,), bool)
+            for e, off, _ in needs:
+                if off:
+                    # placeholder token: overridden on device below by
+                    # the still-in-flight pending sample for this row
+                    batch.add_row(e.slot, DECODE, [0], e.ctx_len + 1)
+                    chain[e.slot] = True
+                else:
+                    batch.add_row(e.slot, DECODE,
+                                  [int(e.req.tokens_out[-1])], e.ctx_len)
+            denom = B * batch.tokens.shape[1]
+            tr.tick_attrs(rows_decode=len(rows), width=1,
+                          valid_tokens=len(rows),
+                          pad_waste_frac=1.0 - len(rows) / denom,
+                          device_ticks=1, async_mode="overlap")
+        tokens = None
+        if pend is not None and chain.any():
+            tokens = jnp.where(jnp.asarray(chain)[:, None],
+                               pend["tok"][:, None].astype(jnp.int32),
+                               jnp.asarray(batch.tokens))
+        out = self.runner.step(batch, fence=False, tokens=tokens)
+        # sample THIS tick on device too; the host sync is deferred to
+        # next tick's reconcile
+        temp = np.zeros((B,), np.float32)
+        top_k = np.zeros((B,), np.int32)
+        top_p = np.ones((B,), np.float32)
+        rep = np.ones((B,), np.float32)
+        keys = np.zeros((B, 2), np.uint32)
+        sampled = False
+        for e in rows:
+            sp = self._sp(e.req)
+            s = e.slot
+            temp[s], top_k[s], top_p[s] = (sp.temperature, sp.top_k,
+                                           sp.top_p)
+            ctr = self._draw_ctr.get(e.req.rid, 0)
+            self._draw_ctr[e.req.rid] = ctr + 1
+            keys[s] = sampling.request_key(sp.seed, e.req.rid, ctr)
+            if sp.temperature > 0:
+                sampled = True
+        tok_dev, lp_dev = self.sampler.device_call(
+            out.last_logits, self._presence, temp, top_k, top_p, rep,
+            keys, greedy_only=not sampled)
+        new_pend = {"entries": list(rows),
+                    "rids": frozenset(e.req.rid for e in rows),
+                    "tok": tok_dev, "lp": lp_dev,
+                    "tick": getattr(tr, "n_ticks", 0),
+                    "overlap": self._tick_overlap}
+        finished = self._reconcile_pending()
+        self._pending = new_pend
+        self._async_stats["overlap_ticks"] += 1
+        return finished
+
+    def _tick_async_loop(self, rows: List[SchedEntry]
+                         ) -> Optional[List[int]]:
+        """Device-resident burst: chain up to max_device_ticks decode
+        steps in one lax.while_loop call, then replay the emitted tokens
+        through the synchronous commit path. Returns None (state
+        untouched except block over-allocation rolled back by truncate)
+        when the burst can't pre-allocate without eviction."""
+        tr = self.tracer
+        scfg = self.scfg
+        K = self._async.max_device_ticks
+        B = scfg.max_batch
+        with tr.span("schedule"):
+            budgets: Dict[int, int] = {}
+            need_blocks = 0
+            for e in rows:
+                b = min(K, e.req.max_new - len(e.req.tokens_out),
+                        scfg.max_seq - e.ctx_len)
+                if b < 1:
+                    return None        # at a ceiling: sync tick finishes
+                nb = self.pool.blocks_for(e.ctx_len + b)
+                if nb > self.pool.max_blocks_per_seq:
+                    return None
+                budgets[e.slot] = b
+                have = len(self.pool.owned.get(e.slot, ()))
+                need_blocks += max(nb - have, 0)
+            if need_blocks > self.pool.n_free:
+                return None                    # eviction is sync work
+            for e in rows:
+                ok = self.pool.allocate(e.slot, e.ctx_len + budgets[e.slot])
+                assert ok, "n_free precheck covered this allocation"
+            self._tick_overlap = self.external_prefill_overlap
+        sampled = any(self._sp(e.req).temperature > 0 for e in rows)
+        with tr.span("batch_assemble"):
+            cow: List[Tuple[int, int]] = []
+            for e in rows:
+                cow.extend(self.pool.cow_for_write(e.slot, e.ctx_len,
+                                                   budgets[e.slot]))
+            if cow:
+                self.runner.copy_blocks(cow)
+            tok0 = np.zeros((B,), np.int32)
+            lens0 = np.zeros((B,), np.int32)
+            alive0 = np.zeros((B,), np.int32)
+            budget = np.zeros((B,), np.int32)
+            hist0 = np.full((B, STOP_L), -1, np.int32)
+            stops = np.full((B, STOP_NS, STOP_L), -1, np.int32)
+            stop_len = np.zeros((B, STOP_NS), np.int32)
+            temp = np.zeros((B,), np.float32)
+            top_k = np.zeros((B,), np.int32)
+            top_p = np.ones((B,), np.float32)
+            keys = np.zeros((K, B, 2), np.uint32)
+            k_burst = max(budgets.values())
+            ctr0: Dict[int, int] = {}
+            for e in rows:
+                s, sp = e.slot, self._sp(e.req)
+                tok0[s] = int(e.req.tokens_out[-1])
+                lens0[s] = e.ctx_len
+                alive0[s] = 1
+                budget[s] = budgets[s]
+                temp[s], top_k[s], top_p[s] = (sp.temperature, sp.top_k,
+                                               sp.top_p)
+                tail = e.req.tokens_out[-STOP_L:]
+                if tail:
+                    hist0[s, STOP_L - len(tail):] = tail
+                ns = 0
+                for seq in sp.stop:
+                    # longer stops (or > STOP_NS of them) match host-side
+                    # at replay — the device match only buys early exit
+                    if 0 < len(seq) <= STOP_L and ns < STOP_NS:
+                        stops[s, ns, STOP_L - len(seq):] = seq
+                        stop_len[s, ns] = len(seq)
+                        ns += 1
+                ctr0[s] = self._draw_ctr.get(e.req.rid, 0)
+                if sampled:
+                    for k in range(budgets[s]):
+                        keys[k, s] = sampling.request_key(
+                            sp.seed, e.req.rid, ctr0[s] + k)
+            denom = B * 1
+            tr.tick_attrs(rows_decode=len(rows), width=1,
+                          valid_tokens=len(rows),
+                          pad_waste_frac=1.0 - len(rows) / denom,
+                          async_mode="loop")
+        fn = self.runner.decode_burst(sampled, K)
+        with tr.span("device_dispatch", width=1, has_prefill=False,
+                     loop_k=k_burst):
+            # keep the staged operands alive past the call: dropping the
+            # last python reference to an array a dispatched computation
+            # still consumes blocks deallocation until the computation
+            # finishes — inline temporaries (freed at call end) turned
+            # this into a synchronous dispatch that billed the whole
+            # burst's device time to this host span
+            args = (self.runner.params, self.runner.cache,
+                    jnp.asarray(self.pool.tables()), jnp.asarray(tok0),
+                    jnp.asarray(lens0), jnp.asarray(alive0),
+                    jnp.asarray(budget), jnp.asarray(stops),
+                    jnp.asarray(stop_len), jnp.asarray(hist0),
+                    jnp.asarray(keys), jnp.asarray(temp),
+                    jnp.asarray(top_k), jnp.asarray(top_p),
+                    jnp.asarray(k_burst, jnp.int32))
+            em, lp, cache, _, n_emit = fn(*args)
+            self.runner.cache = cache
+        finished: List[int] = []
+        with tr.span("sample_sync", rows=len(rows),
+                     reconciles_tick=getattr(tr, "n_ticks", 0)):
+            with tr.span("device_wait"):
+                em_np = np.asarray(em)
+            lp_np = np.asarray(lp)
+            n_dev = np.asarray(n_emit)
+        iters_dev = int(n_dev.max()) if rows else 0
+        self._loop_device_ticks += iters_dev
+        self._async_stats["loop_bursts"] += 1
+        self._async_stats["loop_device_ticks"] += iters_dev
+        tr.tick_attrs(device_ticks=max(iters_dev, 1))
+        with tr.span("postprocess"):
+            committed: Dict[int, int] = {}
+            for e in rows:
+                s = e.slot
+                n = 0
+                alive = True
+                for j in range(int(n_dev[s])):
+                    t = int(em_np[s, j])
+                    if t < 0:
+                        break
+                    alive = self._commit_emitted(e, t, float(lp_np[s, j]),
+                                                 finished)
+                    e.ctx_len += 1
+                    n += 1
+                    if alive and e.ctx_len + 1 > scfg.max_seq:
+                        self._finish(e, finished)
+                        alive = False
+                    if not alive:
+                        break                  # overrun tokens discarded
+                committed[s] = n
+                self._draw_ctr[e.req.rid] = ctr0[s] + n
+                if alive:
+                    # return unused burst blocks so pool pressure matches
+                    # the synchronous engine's one-token-at-a-time walk
+                    self.pool.truncate(e.slot, e.ctx_len)
+            # replay the synchronous engine's per-tick decode metrics:
+            # burst iteration j had exactly the rows with > j commits
+            # live, reading their (lens0+j)-token contexts
+            for j in range(max(committed.values(), default=0)):
+                live = [e for e in rows if committed[e.slot] > j]
+                kv = sum(int(lens0[e.slot]) + j for e in live) \
+                    * self._kv_per_tok
+                self.metrics.on_decode_step(len(live), kv_bytes=kv)
+        return finished
+
+    @property
+    def device_ticks(self) -> int:
+        """Total device decode/verify/prefill steps dispatched: per-tick
+        runner steps plus device-resident burst iterations."""
+        r = getattr(self, "runner", None)
+        return ((r.n_steps if r is not None else 0)
+                + self._loop_device_ticks)
+
+    def async_stats(self) -> dict:
+        """Tick-flavor counters plus ``overlap_frac`` — the fraction of
+        device steps whose host bookkeeping overlapped device execution
+        (overlap ticks and every loop-burst iteration)."""
+        total = self.device_ticks
+        overlapped = (self._async_stats["overlap_ticks"]
+                      + self._async_stats["loop_device_ticks"])
+        return dict(self._async_stats, device_ticks=total,
+                    overlap_frac=overlapped / total if total else 0.0)
+
     def defrag(self):
         """Compact the block pool (host bookkeeping + device gather; the
         runner republishes tables before its next step)."""
+        self.flush_async()   # in-flight tables must not capture a move
         perm = self.pool.defrag()
         if perm is not None:
             self.runner.apply_perm(perm)
@@ -927,6 +1326,7 @@ class Engine:
         """Snapshot a parked request for adoption. None when ``rid`` is
         not (or no longer — mid-handoff preemption) parked; the entry
         will re-park after its replay completes, retry then."""
+        self.flush_async()    # exported draw_ctr/ctx must be committed
         e = self.sched.active.get(rid)
         if e is None or e.state is not State.HANDOFF:
             return None
@@ -968,6 +1368,7 @@ class Engine:
         source stays parked, retry after decode capacity frees."""
         req = packet.req
         rid = req.rid
+        self.flush_async()    # adopter's pool state must be committed
         if rid in self.sched.active or not self.sched.slots.free:
             return False
         slot = self.sched.slots.alloc(rid)

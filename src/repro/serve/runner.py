@@ -56,6 +56,21 @@ IDLE, PREFILL, DECODE, VERIFY = 0, 1, 2, 3
 
 BACKENDS = ("naive", "flash")
 
+# Module-level jit cache for single-device runners, keyed by the facts
+# the trace depends on (ModelConfig is frozen/hashable). Every Engine
+# builds its own ModelRunner; without this, each instance would re-trace
+# identical steps — the async differential fuzz harness builds hundreds
+# of engine pairs per run, which must share compilations. Mesh runners
+# keep per-instance jits (out_shardings close over live mesh state).
+_JIT_CACHE: Dict[tuple, callable] = {}
+
+# device-side stop-sequence bounds for the async decode burst: stops up
+# to STOP_L tokens, STOP_NS per request, get on-device early exit;
+# longer/extra stops still match host-side at reconcile (identity is
+# unaffected — the device match only trims overrun compute)
+STOP_L = 4
+STOP_NS = 2
+
 
 @dataclasses.dataclass
 class StepBatch:
@@ -170,6 +185,8 @@ class ModelRunner:
                               | ({scfg.spec.k_max + 1}
                                  if scfg.spec is not None else set()))
         self._fns: Dict[tuple, callable] = {}
+        self.n_steps = 0            # device steps dispatched (async
+        #                             engines add burst iterations on top)
 
     # --- batch construction ------------------------------------------------
     def width_for(self, max_valid: int) -> int:
@@ -197,6 +214,14 @@ class ModelRunner:
             mdl, bs = self.model, self.scfg.block_size
             backend = self.scfg.attn_backend
             mesh, policy = self.mesh, self.policy
+            if mesh is None:
+                # shared across runner instances: jit re-specializes by
+                # shape, so one cached fn covers every width bucket
+                gkey = (mdl.cfg, bs, backend, has_prefill)
+                fn = _JIT_CACHE.get(gkey)
+                if fn is not None:
+                    self._fns[key] = fn
+                    return fn
 
             def run(params, tokens, cache, n_valid, is_prefill):
                 logits, cache = mdl.forward_step(
@@ -224,12 +249,23 @@ class ModelRunner:
                     self._repl, self._repl, self._cache_shardings))
             else:
                 fn = jax.jit(run)
+                _JIT_CACHE[(mdl.cfg, bs, backend, has_prefill)] = fn
             self._fns[key] = fn
         return fn
 
-    def step(self, batch: StepBatch) -> StepOutput:
+    def step(self, batch: StepBatch, fence: bool = True,
+             tokens=None) -> StepOutput:
         """Run one unified step: republish host-truth lens/tables, execute
-        the bucketed jit, return per-position and last-valid logits."""
+        the bucketed jit, return per-position and last-valid logits.
+
+        ``fence=False`` is the async engine's double-buffered dispatch
+        (docs/async.md): even under tracing with ``fence_device`` on, the
+        call returns as soon as the step is dispatched — the engine
+        reconciles the results one tick later, attributing the deferred
+        wait to its sample_sync span instead. ``tokens`` overrides
+        ``batch.tokens`` with a DEVICE array (same [B, S] shape), letting
+        tick t+1's input chain on tick t's still-in-flight sampled tokens
+        without a host round-trip."""
         width = batch.tokens.shape[1]
         has_prefill = bool(np.any(batch.phase == PREFILL))
         tr = self.tracer
@@ -237,17 +273,65 @@ class ModelRunner:
                      has_prefill=has_prefill):
             self.cache["lens"] = jnp.asarray(batch.row_start)
             self.cache["block_tables"] = jnp.asarray(batch.tables)
+            toks = jnp.asarray(batch.tokens) if tokens is None else tokens
             logits, last, self.cache = self._fn(width, has_prefill)(
-                self.params, jnp.asarray(batch.tokens), self.cache,
+                self.params, toks, self.cache,
                 jnp.asarray(batch.n_valid),
                 jnp.asarray(batch.phase == PREFILL))
-        if tr.enabled and tr.cfg.fence_device:
+        self.n_steps += 1
+        if fence and tr.enabled and tr.cfg.fence_device:
             # fence so device_wait covers actual execution, not just
             # dispatch — host/device attribution depends on this; the
             # untraced path never blocks (async dispatch preserved)
             with tr.span("device_wait"):
                 jax.block_until_ready((logits, last))
         return StepOutput(logits=logits, last_logits=last)
+
+    # --- device-resident decode burst (async engine, docs/async.md) ---
+    def decode_burst(self, sampled: bool, k_max: int):
+        """One jit per (sampled, k_max): up to k_max single-token decode
+        ticks chained inside a device ``lax.while_loop`` with per-row
+        early exit (budget / on-device stop match). The input cache is
+        DONATED — callers must rebind ``runner.cache`` to the returned
+        cache. Greedy bursts compile without the filter/categorical
+        machinery, mirroring the synchronous greedy fast path."""
+        assert self.mesh is None, \
+            "decode_burst is single-device (the async engine gates loop " \
+            "mode off under ServeConfig.mesh)"
+        mdl, bs = self.model, self.scfg.block_size
+        backend = self.scfg.attn_backend
+        key = (mdl.cfg, bs, backend, "burst", sampled, k_max)
+        fn = _JIT_CACHE.get(key)
+        if fn is None:
+            from repro.serve import sampling as smp
+
+            def run(params, cache, tables, tok0, lens0, alive0, budget,
+                    stops, stop_len, hist0, keys, temp, top_k, top_p,
+                    k_ticks):
+                B = tok0.shape[0]
+                if sampled:
+                    no_presence = jnp.zeros((B, 1), bool)
+                    no_rep = jnp.ones((B,), jnp.float32)
+
+                    def sample_fn(last, i):
+                        # rep penalty rows never reach the burst (they
+                        # need the host token stream), so presence is a
+                        # broadcastable dummy
+                        return smp._sample_batch(last, no_presence, temp,
+                                                 top_k, top_p, no_rep,
+                                                 keys[i])
+                else:
+                    def sample_fn(last, i):
+                        return smp._greedy_batch(last)
+
+                return mdl.decode_burst(params, cache, tables, tok0,
+                                        lens0, alive0, budget, stops,
+                                        stop_len, hist0, sample_fn, bs,
+                                        backend, k_ticks, k_max)
+
+            fn = jax.jit(run, donate_argnums=(1,))
+            _JIT_CACHE[key] = fn
+        return fn
 
     # --- block maintenance --------------------------------------------------
     def apply_perm(self, perm: np.ndarray) -> None:
@@ -305,4 +389,4 @@ class ModelRunner:
 
 
 __all__ = ["BACKENDS", "DECODE", "IDLE", "ModelRunner", "PREFILL",
-           "StepBatch", "StepOutput", "VERIFY"]
+           "STOP_L", "STOP_NS", "StepBatch", "StepOutput", "VERIFY"]

@@ -179,6 +179,14 @@ def _greedy_batch(logits):
     return tok, jnp.take_along_axis(lp, tok[:, None], axis=1)[:, 0]
 
 
+# Module-level jits: every Sampler instance (and the async engine's
+# device-resident decode loop) shares one compilation cache per shape,
+# so spinning up many engines (the differential fuzz harness builds two
+# per case) never recompiles the sampling kernels.
+_SAMPLE_JIT = jax.jit(_sample_batch)
+_GREEDY_JIT = jax.jit(_greedy_batch)
+
+
 class Sampler:
     """Batched on-device sampler: one jitted call per engine tick.
 
@@ -189,8 +197,24 @@ class Sampler:
     plain argmax, bit-identical to the pre-SamplingParams engines."""
 
     def __init__(self):
-        self._fn = jax.jit(_sample_batch)
-        self._greedy = jax.jit(_greedy_batch)
+        self._fn = _SAMPLE_JIT
+        self._greedy = _GREEDY_JIT
+
+    def device_call(self, logits, presence, temp, top_k, top_p, rep, keys,
+                    greedy_only: bool):
+        """Non-blocking sampler entry for the async engine: returns the
+        chosen (tokens, logprobs) as DEVICE arrays without forcing a
+        host sync, so the dispatch of the next tick can chain on the
+        result. ``greedy_only`` must be decided host-side from the
+        requests' SamplingParams (never from device values)."""
+        if greedy_only:
+            return self._greedy(logits)
+        return self._fn(logits, jnp.asarray(presence),
+                        jnp.asarray(temp, jnp.float32),
+                        jnp.asarray(top_k, jnp.int32),
+                        jnp.asarray(top_p, jnp.float32),
+                        jnp.asarray(rep, jnp.float32),
+                        jnp.asarray(keys, jnp.uint32))
 
     def __call__(self, logits, presence, temp, top_k, top_p, rep, keys
                  ) -> Tuple[np.ndarray, np.ndarray]:

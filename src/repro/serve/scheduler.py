@@ -222,6 +222,18 @@ class Scheduler:
         return sorted((e for e in self.active.values()
                        if e.state == State.RUNNING), key=lambda e: e.slot)
 
+    def decode_only(self) -> bool:
+        """True when this tick is pure decode steady state: no queued
+        admissions and no active entry still prefilling (or replaying a
+        prefill). The async engine (docs/async.md) only overlaps or
+        bursts such ticks — anything else falls back to the synchronous
+        path, which keeps admission/preemption ordering identical to the
+        async-off engine."""
+        if self.waiting:
+            return False
+        return not any(e.state == State.PREFILL
+                       for e in self.active.values())
+
     # --- preemption -------------------------------------------------------
     def pick_victim(self, e: SchedEntry) -> Optional[SchedEntry]:
         """Lowest-precedence active request ranking strictly BELOW the

@@ -500,6 +500,106 @@ def test_summary_unfinished_requests_are_null(nectar):
     assert col.registry.value("request_finished_total") == 0
 
 
+# ---------------------------------------------------------------------------
+# async engine attribution (docs/async.md): deferred reconciliation
+
+
+def _serve_async(cfg, params, prompts, max_device_ticks, max_new=10,
+                 sync_every=0):
+    from repro.configs.base import AsyncConfig
+    return _serve(cfg, params, prompts, max_new=max_new, obs=OBS,
+                  max_batch=2, max_seq=64, paged=True, block_size=8,
+                  prefill_chunk=16,
+                  async_cfg=AsyncConfig(enabled=True,
+                                        max_device_ticks=max_device_ticks,
+                                        sync_every=sync_every))
+
+
+def test_async_overlap_spans_attribute_deferred_reconcile(nectar, tmp_path):
+    """Overlap ticks (max_device_ticks=1) defer the host sync one tick:
+    the sample_sync span that blocks carries ``reconciles_tick`` naming
+    the DISPATCH tick, the per-tick host/device attribution identity
+    still holds, and the exported JSONL passes --expect-ordering."""
+    cfg, _, params = nectar
+    _, eng = _serve_async(cfg, params, _prompts(cfg, [5, 9]),
+                          max_device_ticks=1)
+    tr = eng.tracer
+    assert eng.async_stats()["overlap_ticks"] > 0
+    deferred = [s for s in tr.spans if s.name == "sample_sync"
+                and "reconciles_tick" in s.attrs
+                and s.attrs["reconciles_tick"] < s.tick]
+    assert deferred, "no overlap tick deferred its reconcile"
+    for s in deferred:
+        assert s.attrs["reconciles_tick"] == s.tick - 1
+    # attribution identity survives deferral: device_wait lands in
+    # device_ms, everything else in host_ms, per tick entry
+    for t in tr.tick_stats:
+        assert t["host_ms"] + t["device_ms"] \
+            == pytest.approx(t["dur_ms"])
+    overlap = [t for t in tr.tick_stats
+               if t.get("async_mode") == "overlap"]
+    assert overlap and all(t["device_ticks"] == 1 for t in overlap)
+    j = write_jsonl(tr, str(tmp_path / "a.events.jsonl"))
+    assert check_trace.check_jsonl(j, expect_ordering=True) == []
+
+
+def test_async_loop_burst_device_tick_normalization(nectar, tmp_path):
+    """A K-tick device burst records ONE tick_stats entry with
+    device_ticks=K; tick_summary normalizes per-device-tick so
+    host_ms_per_tick stays comparable to the synchronous engine, and
+    the engine's device_ticks property reconciles runner steps with
+    burst iterations."""
+    cfg, _, params = nectar
+    _, eng = _serve_async(cfg, params, _prompts(cfg, [5, 9]),
+                          max_device_ticks=6)
+    tr = eng.tracer
+    st = eng.async_stats()
+    assert st["loop_bursts"] > 0 and st["loop_device_ticks"] > 0
+    bursts = [t for t in tr.tick_stats if t.get("async_mode") == "loop"]
+    assert bursts and any(t["device_ticks"] > 1 for t in bursts)
+    assert sum(t["device_ticks"] for t in bursts) \
+        == st["loop_device_ticks"]
+    s = tr.tick_summary()
+    assert s["n_device_ticks"] == sum(
+        t.get("device_ticks", 1) for t in tr.tick_stats)
+    assert s["n_device_ticks"] > s["n_ticks"]
+    # normalization: summing host_ms over entries / device ticks
+    assert s["host_ms_per_tick"] == pytest.approx(
+        sum(t["host_ms"] for t in tr.tick_stats) / s["n_device_ticks"])
+    assert eng.device_ticks == eng.runner.n_steps \
+        + st["loop_device_ticks"]
+    assert 0.0 < st["overlap_frac"] <= 1.0
+    j = write_jsonl(tr, str(tmp_path / "l.events.jsonl"))
+    assert check_trace.check_jsonl(j, expect_ordering=True) == []
+    p = write_perfetto(tr, str(tmp_path / "l.trace.json"))
+    assert check_trace.check_perfetto(p) == []
+
+
+def test_expect_ordering_catches_early_reconcile(tmp_path):
+    """The --expect-ordering gate fails when a sample_sync span claims
+    to reconcile a tick whose dispatch had not closed yet, and when a
+    trace has no sample_sync spans at all."""
+    badl = tmp_path / "bad.events.jsonl"
+    badl.write_text(
+        json.dumps({"kind": "meta", "dropped": 0}) + "\n"
+        + json.dumps({"kind": "span", "name": "device_dispatch",
+                      "ts_us": 100.0, "dur_us": 50.0, "depth": 1,
+                      "tick": 3}) + "\n"
+        + json.dumps({"kind": "span", "name": "sample_sync",
+                      "ts_us": 120.0, "dur_us": 5.0, "depth": 1,
+                      "tick": 4,
+                      "attrs": {"reconciles_tick": 3}}) + "\n")
+    errs = check_trace.check_jsonl(str(badl), expect_ordering=True)
+    assert any("before that tick's device_dispatch closed" in e
+               for e in errs)
+    # ordering is opt-in: the same file passes without the flag
+    assert check_trace.check_jsonl(str(badl)) == []
+    empty = tmp_path / "empty.events.jsonl"
+    empty.write_text(json.dumps({"kind": "meta", "dropped": 0}) + "\n")
+    errs = check_trace.check_jsonl(str(empty), expect_ordering=True)
+    assert any("no sample_sync" in e for e in errs)
+
+
 def test_legacy_engine_timeline_and_summary(nectar):
     """The legacy slot path traces too (arrival/first_token/finish plus
     tick spans) — the obs subsystem is not paged-only."""

@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Tier-1 collection floor: fail CI when the suite silently shrinks.
+
+    PYTHONPATH=src python tools/check_test_health.py [--update] [--floor-file F]
+
+A refactor that breaks an import, a conftest stand-in that swallows a
+module, or an overzealous skip can drop whole test files from
+collection while the run stays green. This gate runs
+``pytest --collect-only`` and compares the collected-test count against
+the committed floor in ``tests/collection_floor.json``:
+
+  * count <  floor  -> FAIL (tests vanished; find them or justify a
+    smaller suite by committing a new floor with ``--update``);
+  * count >= floor  -> OK. Growth is reported; bump the floor with
+    ``--update`` when you ADD tests so the gate keeps teeth.
+
+The floor counts tests present at collection time, including ones that
+will SKIP at runtime (the hypothesis stand-ins still collect — see
+tests/conftest.py), so it is environment-stable for a given checkout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_FLOOR_FILE = os.path.join(REPO, "tests", "collection_floor.json")
+
+
+def collect_count() -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q",
+         os.path.join(REPO, "tests")],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    out = proc.stdout + proc.stderr
+    if proc.returncode not in (0, 5):   # 5 = no tests collected
+        print(out)
+        raise SystemExit(f"[check_test_health] pytest --collect-only "
+                         f"failed (exit {proc.returncode})")
+    m = re.search(r"(\d+) tests? collected", out)
+    if m is None:
+        m = re.search(r"(\d+)/\d+ tests collected", out)
+    if m is None:
+        print(out)
+        raise SystemExit("[check_test_health] could not parse the "
+                         "collected-test count from pytest output")
+    n = int(m.group(1))
+    errs = re.search(r"(\d+) errors?", out)
+    if errs:
+        print(out)
+        raise SystemExit(f"[check_test_health] collection reported "
+                         f"{errs.group(1)} error(s) — a test module "
+                         f"fails to import")
+    return n
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="write the current collected count as the "
+                         "new committed floor")
+    ap.add_argument("--floor-file", default=DEFAULT_FLOOR_FILE)
+    args = ap.parse_args(argv)
+
+    n = collect_count()
+    if args.update:
+        with open(args.floor_file, "w") as f:
+            json.dump({"collected_floor": n}, f, indent=1)
+            f.write("\n")
+        print(f"[check_test_health] floor updated: {n} tests "
+              f"({args.floor_file})")
+        return 0
+    try:
+        with open(args.floor_file) as f:
+            floor = int(json.load(f)["collected_floor"])
+    except (OSError, KeyError, ValueError) as e:
+        print(f"[check_test_health] FAIL: unreadable floor file "
+              f"{args.floor_file}: {e} (run with --update to create it)")
+        return 1
+    if n < floor:
+        print(f"[check_test_health] FAIL: {n} tests collected, floor "
+              f"is {floor} — {floor - n} test(s) vanished from "
+              f"collection")
+        return 1
+    extra = f" (+{n - floor} above the floor — consider --update)" \
+        if n > floor else ""
+    print(f"[check_test_health] OK: {n} tests collected, "
+          f"floor {floor}{extra}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,7 +31,14 @@ And for the JSONL event log:
     handoff_ready <= handoff_adopt <= handoff_release (when present),
     and an adopted request must have parked first;
   * a ``meta`` header exists and its ``dropped`` count is reported
-    (a truncated trace is a warning, not a failure).
+    (a truncated trace is a warning, not a failure);
+  * with ``--expect-ordering``, the async-pipeline invariant
+    (docs/async.md) holds: every ``sample_sync`` span starts AFTER the
+    ``device_dispatch`` span of the tick it reconciles closed (the
+    reconciled tick is the span's ``reconciles_tick`` attr — the
+    deferred case — or its own tick), and at least one ``sample_sync``
+    span exists. True for synchronous traces too, so the flag is safe
+    on any engine's JSONL.
 
 Importable: ``check_perfetto(path)`` / ``check_jsonl(path)`` return a
 list of error strings (empty = valid). The CLI exits 0 iff all files
@@ -125,10 +132,12 @@ def check_perfetto(path: str, expect_counters=(),
     return errs
 
 
-def check_jsonl(path: str) -> List[str]:
+def check_jsonl(path: str, expect_ordering: bool = False) -> List[str]:
     errs: List[str] = []
     milestones: dict = {}          # rid -> {name: first ts_us}
     saw_meta = False
+    dispatch_close: dict = {}      # tick -> latest device_dispatch end us
+    sync_spans: list = []          # (ts_us, reconciled tick, line no)
     try:
         f = open(path)
     except OSError as e:
@@ -157,8 +166,34 @@ def check_jsonl(path: str) -> List[str]:
                 if name in ORDERED or name in HANDOFF:
                     ms = milestones.setdefault(rec.get("rid"), {})
                     ms.setdefault(name, rec.get("ts_us", 0.0))
+            elif kind == "span" and expect_ordering:
+                name, tick = rec.get("name"), rec.get("tick")
+                ts = rec.get("ts_us", 0.0)
+                if name == "device_dispatch":
+                    end = ts + rec.get("dur_us", 0.0)
+                    dispatch_close[tick] = max(
+                        dispatch_close.get(tick, end), end)
+                elif name == "sample_sync":
+                    attrs = rec.get("attrs") or {}
+                    sync_spans.append(
+                        (ts, attrs.get("reconciles_tick", tick), ln))
     if not saw_meta:
         errs.append(f"{path}: no meta header line")
+    if expect_ordering:
+        # async pipeline invariant (docs/async.md): the device step a
+        # sample_sync span reconciles was DISPATCHED (its span closed on
+        # the host) before the reconcile began — deferred reconciliation
+        # may lag a tick, never lead one
+        if not sync_spans:
+            errs.append(f"{path}: --expect-ordering: no sample_sync "
+                        f"spans (nothing was reconciled)")
+        for ts, tick, ln in sync_spans:
+            end = dispatch_close.get(tick)
+            if end is not None and end > ts:
+                errs.append(
+                    f"{path}:{ln}: sample_sync reconciling tick {tick} "
+                    f"starts at {ts}us, before that tick's "
+                    f"device_dispatch closed at {end}us")
     for rid, ms in sorted(milestones.items()):
         for names in (ORDERED, HANDOFF):
             chain = [(n, ms[n]) for n in names if n in ms]
@@ -177,6 +212,7 @@ def check_jsonl(path: str) -> List[str]:
 def main(argv: List[str]) -> int:
     expect_counters: List[str] = []
     expect_spans: List[str] = []
+    expect_ordering = False
     paths: List[str] = []
     it = iter(argv)
     for a in it:
@@ -188,6 +224,8 @@ def main(argv: List[str]) -> int:
             dst = expect_counters if a == "--expect-counters" \
                 else expect_spans
             dst += [n for n in nxt.split(",") if n]
+        elif a == "--expect-ordering":
+            expect_ordering = True
         else:
             paths.append(a)
     if not paths:
@@ -196,7 +234,7 @@ def main(argv: List[str]) -> int:
     errs: List[str] = []
     for path in paths:
         if path.endswith(".jsonl"):
-            errs += check_jsonl(path)
+            errs += check_jsonl(path, expect_ordering=expect_ordering)
         else:
             errs += check_perfetto(path, expect_counters=expect_counters,
                                    expect_spans=expect_spans)
